@@ -1,0 +1,125 @@
+//! Ablation: how does the reservation threshold `z` (the aggressiveness
+//! knob of the `A_z` family, Sec. V-A) shape cost across user groups?
+//!
+//! This is the design-choice study behind the randomized algorithm: the
+//! density f(z) of Eq. (24) is a bet on the *shape* of cost(z). The sweep
+//! shows that shape per group on the synthetic population:
+//! * Group 1 (sporadic): cost rises steeply as z → 0 (fees on bursts) —
+//!   conservative wins; `A_β` ≈ All-on-demand.
+//! * Group 3 (stable): cost(z) is nearly flat with a mild minimum at
+//!   small z — aggressive wins slightly (this is where randomization
+//!   pays off).
+//! * Group 2: the interesting regime the paper targets.
+//!
+//! Also prints the mixture expectation under f(z) for comparison with the
+//! measured Randomized row of Table II.
+//!
+//! Run: `cargo run --release --example ablation_threshold_sweep -- --users 150`
+
+use cloudreserve::algos::density;
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::analysis::classify::{classify, Group};
+use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::sim::run_policy;
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = SynthConfig {
+        users: args.usize_or("users", 150),
+        slots: args.usize_or("slots", cloudreserve::trace::TRACE_SLOTS),
+        seed: args.u64_or("seed", 2013),
+        ..Default::default()
+    };
+    let pop = generate(&cfg);
+    let pricing = ec2_small_compressed();
+    let beta = pricing.beta();
+    let steps = args.usize_or("steps", 10);
+
+    // normalized cost per (group, z-step), averaged over users
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    println!(
+        "threshold sweep: {} users x {} slots, z in {{0, .., beta={beta:.3}}}",
+        cfg.users, cfg.slots
+    );
+    println!(
+        "{:>8} {:>9} {:>10} {:>10} {:>10} {:>10}",
+        "z", "z/beta", "all", "G1", "G2", "G3"
+    );
+    let mut curve: Vec<(f64, [f64; 4])> = Vec::new();
+    for i in 0..=steps {
+        let z = beta * i as f64 / steps as f64;
+        let mut sums = [0.0f64; 4];
+        let mut counts = [0usize; 4];
+        let results: Vec<(Group, f64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|shard| {
+                    let pop = &pop;
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut idx = shard;
+                        while idx < pop.users.len() {
+                            let u = &pop.users[idx];
+                            let mut a = Deterministic::with_threshold(pricing, z);
+                            let c = run_policy(&mut a, &u.demand, pricing).unwrap().total;
+                            let denom = pricing.p * u.total_demand() as f64;
+                            if denom > 0.0 {
+                                out.push((classify(&u.summary()), c / denom));
+                            }
+                            idx += threads;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        for (g, v) in results {
+            sums[0] += v;
+            counts[0] += 1;
+            let gi = match g {
+                Group::G1Sporadic => 1,
+                Group::G2Medium => 2,
+                Group::G3Stable => 3,
+            };
+            sums[gi] += v;
+            counts[gi] += 1;
+        }
+        let row: [f64; 4] =
+            std::array::from_fn(|j| if counts[j] > 0 { sums[j] / counts[j] as f64 } else { f64::NAN });
+        println!(
+            "{z:>8.3} {:>9.2} {:>10.4} {:>10.4} {:>10.4} {:>10.4}",
+            z / beta,
+            row[0],
+            row[1],
+            row[2],
+            row[3]
+        );
+        curve.push((z, row));
+    }
+
+    // expectation under the Eq. (24) density (trapezoid over the sweep +
+    // the atom at beta) — the Randomized row this ablation predicts.
+    let alpha = pricing.alpha;
+    let mut expect = [0.0f64; 4];
+    for w in curve.windows(2) {
+        let (z0, r0) = w[0];
+        let (z1, r1) = w[1];
+        let f0 = density::pdf_continuous(alpha, z0);
+        let f1 = density::pdf_continuous(alpha, z1.min(beta * 0.999_999));
+        for j in 0..4 {
+            expect[j] += 0.5 * (f0 * r0[j] + f1 * r1[j]) * (z1 - z0);
+        }
+    }
+    let atom = density::atom_mass(alpha);
+    let last = curve.last().unwrap().1;
+    for j in 0..4 {
+        expect[j] += atom * last[j];
+    }
+    println!(
+        "\nE_f(z)[cost] (predicted Randomized row): all={:.3} G1={:.3} G2={:.3} G3={:.3}",
+        expect[0], expect[1], expect[2], expect[3]
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! The L3 brokerage as a long-running service: stream a multi-tenant
+//! demand feed through the sharded broker, run the AR-forecast-driven
+//! prediction-window policy per user, and tick the PJRT analytics engine
+//! (L1 Pallas window scan through the AOT artifact) every N slots.
+//!
+//! This is the paper's system as a downstream user would deploy it:
+//! no oracle, no offline pass — pure online operation.
+//!
+//! Run: `cargo run --release --example broker_service -- --users 96 --slots 4000`
+
+use cloudreserve::coordinator::{AnalyticsEngine, Broker, BrokerConfig, DemandEvent, PolicyKind};
+use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let users = args.usize_or("users", 96);
+    let slots = args.usize_or("slots", 4000);
+    let tick_every = args.usize_or("tick", 1000);
+    let pricing = ec2_small_compressed();
+
+    let cfg = BrokerConfig {
+        pricing,
+        shards: args.usize_or("shards", 4),
+        queue_capacity: 8192,
+        window: 64,
+    };
+    // Real online operation: deterministic policy with a 2-hour prediction
+    // window fed by the per-user streaming AR(8) forecaster.
+    let broker = Broker::start(cfg, PolicyKind::DeterministicForecast { window: 120, ar_order: 8 });
+
+    let engine = {
+        let dir = args.str_or("artifacts", "artifacts");
+        if std::path::Path::new(&dir).join("manifest.json").exists() {
+            let rt = cloudreserve::runtime::Runtime::load_filtered(&dir, |n| n.starts_with("fleet_step"))?;
+            eprintln!("analytics on PJRT {} ({:?})", rt.platform(), rt.names());
+            Some(AnalyticsEngine::new(rt, pricing, 16, 128))
+        } else {
+            eprintln!("no artifacts: analytics disabled (run `make artifacts`)");
+            None
+        }
+    };
+
+    let pop = generate(&SynthConfig { users, slots, seed: args.u64_or("seed", 77), ..Default::default() });
+    let t0 = std::time::Instant::now();
+    for t in 0..slots {
+        for u in &pop.users {
+            broker.submit(DemandEvent { user_id: u.user_id, slot: t as u32, demand: u.demand[t] })?;
+        }
+        if let Some(engine) = &engine {
+            if t % tick_every == tick_every - 1 {
+                let posture = engine.tick(&broker)?;
+                println!(
+                    "[t={t:>6}] fleet posture: mean reserve-pressure {:.3}; over break-even: {:?}",
+                    posture.mean_pressure(),
+                    posture.over_breakeven()
+                );
+            }
+        }
+    }
+    let report = broker.finish()?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let all_od: f64 = pop
+        .users
+        .iter()
+        .map(|u| pricing.p * u.total_demand() as f64)
+        .sum();
+    println!(
+        "\nstreamed {} events in {dt:.2}s ({:.0}/s)",
+        users * slots,
+        (users * slots) as f64 / dt
+    );
+    println!(
+        "fleet bill: {:.2} vs all-on-demand {:.2} ({:.1}% saved), {} reservations",
+        report.total_cost(),
+        all_od,
+        100.0 * (1.0 - report.total_cost() / all_od),
+        report.total_reservations()
+    );
+    Ok(())
+}

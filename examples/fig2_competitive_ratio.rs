@@ -1,0 +1,85 @@
+//! Fig. 2 reproduction: competitive ratios of the deterministic and
+//! randomized algorithms vs the reservation discount α.
+//!
+//! Two series per algorithm:
+//! * the analytic curves `2−α` and `e/(e−1+α)` the paper plots, and
+//! * *measured* worst-case ratios on the break-even adversary family
+//!   (demand pulses stopping at / just past β), with exact single-instance
+//!   offline OPT as the denominator.
+//!
+//! The measured deterministic ratio matches `2−α`. The measured randomized
+//! ratio matches `e/(e−1+α)` at x = β and exceeds it by
+//! `α(1−α)/(e−1+α)` just past β — the documented deviation from Prop. 3
+//! (see EXPERIMENTS.md).
+//!
+//! Run: `cargo run --release --example fig2_competitive_ratio`
+
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::algos::offline;
+use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::run_policy;
+
+fn measured_det_ratio(alpha: f64, p: f64) -> f64 {
+    let pricing = Pricing::normalized(p, alpha, 10_000_000);
+    let pulses = (pricing.beta() / p).ceil() as usize + 1;
+    let mut demands = vec![1u32; pulses];
+    demands.extend(vec![0u32; 5]);
+    let mut a = Deterministic::online(pricing);
+    let cost = run_policy(&mut a, &demands, pricing).unwrap().total;
+    cost / offline::optimal_single(&demands, &pricing).cost
+}
+
+fn measured_rand_ratio(alpha: f64, p: f64, at_beta: bool, samples: u64) -> f64 {
+    let pricing = Pricing::normalized(p, alpha, 10_000_000);
+    let pulses = if at_beta {
+        (pricing.beta() / p).floor() as usize
+    } else {
+        (pricing.beta() / p).ceil() as usize + 1
+    };
+    let demands = vec![1u32; pulses];
+    let opt = offline::optimal_single(&demands, &pricing).cost;
+    let mean: f64 = (0..samples)
+        .map(|s| {
+            let mut a = Randomized::online(pricing, s * 31 + 7);
+            run_policy(&mut a, &demands, pricing).unwrap().total
+        })
+        .sum::<f64>()
+        / samples as f64;
+    mean / opt
+}
+
+fn main() {
+    let p = 0.004;
+    let samples = 1500;
+    println!("Fig. 2 — competitive ratio vs reservation discount alpha (p={p}, {samples} draws)");
+    println!(
+        "{:>6} {:>10} {:>12} {:>12} {:>14} {:>16}",
+        "alpha", "2-a", "det(meas)", "e/(e-1+a)", "rand@beta", "rand@beta+eps"
+    );
+    for i in 0..=10 {
+        let alpha = i as f64 / 10.0;
+        let pricing = Pricing::normalized(p, alpha.min(0.999), 1000);
+        let det_analytic = pricing.deterministic_ratio();
+        let rand_analytic = pricing.randomized_ratio();
+        if alpha >= 0.999 {
+            // alpha = 1: reserving never helps; every algorithm is optimal.
+            println!(
+                "{alpha:>6.2} {det_analytic:>10.4} {:>12.4} {rand_analytic:>12.4} {:>14.4} {:>16.4}",
+                1.0, 1.0, 1.0
+            );
+            continue;
+        }
+        let det_meas = measured_det_ratio(alpha, p);
+        let rand_at_beta = measured_rand_ratio(alpha, p, true, samples);
+        let rand_past_beta = measured_rand_ratio(alpha, p, false, samples);
+        println!(
+            "{alpha:>6.2} {det_analytic:>10.4} {det_meas:>12.4} {rand_analytic:>12.4} {rand_at_beta:>14.4} {rand_past_beta:>16.4}"
+        );
+    }
+    println!(
+        "\nEC2 light-utilization alpha=0.4875: deterministic {:.2}x, randomized {:.2}x (paper: 1.51 / 1.23)",
+        Pricing::normalized(p, 0.4875, 1000).deterministic_ratio(),
+        Pricing::normalized(p, 0.4875, 1000).randomized_ratio()
+    );
+}

@@ -1,0 +1,67 @@
+//! Fig. 3 + Fig. 4 reproduction: one user's month-long demand curve and
+//! the population's (mean, σ/μ) scatter with the three-group division.
+//!
+//! Run: `cargo run --release --example fig3_fig4_population`
+
+use cloudreserve::analysis::classify::{classify_population, group_counts, Group};
+use cloudreserve::analysis::report::render_fig4_scatter;
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::trace::SLOTS_PER_DAY;
+use cloudreserve::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = SynthConfig {
+        users: args.usize_or("users", cloudreserve::trace::NUM_USERS),
+        slots: args.usize_or("slots", cloudreserve::trace::TRACE_SLOTS),
+        seed: args.u64_or("seed", 2013),
+        ..Default::default()
+    };
+    let pop = generate(&cfg);
+
+    // ---- Fig. 3: pick the group-2 user whose demand is "bursty with
+    // structure", like Google user 552 in the paper.
+    let rows = classify_population(&pop);
+    let fig3_user = args
+        .get("user")
+        .and_then(|s| s.parse::<u32>().ok())
+        .or_else(|| {
+            rows.iter()
+                .filter(|(_, g, mean, _)| *g == Group::G2Medium && *mean > 5.0)
+                .map(|(uid, _, _, _)| *uid)
+                .next()
+        })
+        .unwrap_or(0);
+    let user = pop.users.iter().find(|u| u.user_id == fig3_user).expect("user exists");
+    println!("Fig. 3 — demand curve of user {fig3_user} over the month (hourly means, '#' = 1/8 of peak):");
+    let hourly: Vec<f64> = user
+        .demand
+        .chunks(60)
+        .map(|c| cloudreserve::util::stats::summarize_u32(c).mean)
+        .collect();
+    let peak = hourly.iter().cloned().fold(1e-9, f64::max);
+    // one line per day, 24 buckets
+    for (day, day_hours) in hourly.chunks(24).enumerate().take(cfg.slots / SLOTS_PER_DAY) {
+        let line: String = day_hours
+            .iter()
+            .map(|&h| {
+                let level = (8.0 * h / peak).round() as usize;
+                [' ', '.', ':', '-', '=', '+', '*', '#', '#'][level.min(8)]
+            })
+            .collect();
+        println!("  day {day:>2} |{line}|");
+    }
+    println!("  (peak hourly mean = {peak:.1} instances)");
+
+    // ---- Fig. 4: the scatter + group shares
+    let (g1, g2, g3) = group_counts(&pop);
+    println!(
+        "\nFig. 4 — {} users: Group1={g1} ({:.0}%)  Group2={g2} ({:.0}%)  Group3={g3} ({:.0}%)",
+        pop.len(),
+        100.0 * g1 as f64 / pop.len() as f64,
+        100.0 * g2 as f64 / pop.len() as f64,
+        100.0 * g3 as f64 / pop.len() as f64
+    );
+    let pts: Vec<(f64, f64)> = rows.iter().map(|(_, _, mean, cov)| (*mean, *cov)).collect();
+    print!("{}", render_fig4_scatter(&pts, 72, 22));
+}

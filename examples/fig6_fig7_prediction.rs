@@ -1,0 +1,150 @@
+//! Fig. 6 + Fig. 7 reproduction: the value of short-term predictions.
+//!
+//! The paper evaluates `A^w_β` (Fig. 6) and the randomized `A^w_z`
+//! (Fig. 7) with prediction windows of 1, 2 and 3 months *of original
+//! time*. Under the Sec. VII compression (1 year → 8760 minutes), one
+//! month is 8760/12 = 730 slots, so w ∈ {730, 1460, 2190} < τ = 8760.
+//! Costs are normalized to the corresponding *online* algorithm (w = 0),
+//! and reported as CDFs over users plus per-group means.
+//!
+//! Predictions use the paper's reliability assumption: the future window
+//! is read from the actual trace (an oracle). `--forecast` switches to the
+//! streaming AR(8) forecaster to measure how much of the gain survives
+//! real predictions (an extension beyond the paper).
+//!
+//! Run: `cargo run --release --example fig6_fig7_prediction -- --users 300 --slots 20000`
+
+use cloudreserve::analysis::classify::{classify, Group};
+use cloudreserve::analysis::report::{render_cdf_table, CostSeries};
+use cloudreserve::forecast::{ArForecaster, Forecaster};
+use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::sim::{run_policy, run_policy_with};
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::util::cli::Args;
+use cloudreserve::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = SynthConfig {
+        users: args.usize_or("users", cloudreserve::trace::NUM_USERS),
+        slots: args.usize_or("slots", cloudreserve::trace::TRACE_SLOTS),
+        seed: args.u64_or("seed", 2013),
+        ..Default::default()
+    };
+    let use_forecaster = args.has("forecast");
+    let pop = generate(&cfg);
+    let pricing = ec2_small_compressed();
+    // windows: 1, 2, 3 months of original time, compressed; clamp for
+    // short --slots runs so w < tau and w << T stay meaningful.
+    let month = 8760 / 12;
+    let windows: Vec<usize> = [month, 2 * month, 3 * month]
+        .iter()
+        .map(|&w| w.min(pricing.tau - 1).min(cfg.slots / 4))
+        .collect();
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for (fig, randomized) in [("Fig. 6 (deterministic A^w_beta)", false), ("Fig. 7 (randomized A^w_z)", true)] {
+        eprintln!("computing {fig}...");
+        // per window: per-user cost normalized to the online counterpart
+        let mut series: Vec<CostSeries> = Vec::new();
+        let mut group_means: Vec<(String, [f64; 4])> = Vec::new();
+        for &w in &windows {
+            let t0 = std::time::Instant::now();
+            let normalized = run_window(&pop, pricing, w, randomized, use_forecaster, threads);
+            eprintln!("  w={w} done in {:.1}s", t0.elapsed().as_secs_f64());
+            // group means
+            let mut sums = [0.0f64; 4];
+            let mut counts = [0usize; 4];
+            for (g, v) in &normalized {
+                sums[0] += v;
+                counts[0] += 1;
+                let gi = match g {
+                    Group::G1Sporadic => 1,
+                    Group::G2Medium => 2,
+                    Group::G3Stable => 3,
+                };
+                sums[gi] += v;
+                counts[gi] += 1;
+            }
+            let means = std::array::from_fn(|i| if counts[i] > 0 { sums[i] / counts[i] as f64 } else { f64::NAN });
+            group_means.push((format!("w={w} slots (~{} months)", w / month.max(1)), means));
+            series.push(CostSeries {
+                name: format!("w={w}"),
+                values: normalized.iter().map(|(_, v)| *v).collect(),
+            });
+        }
+        println!("\n{fig} — cost normalized to the online algorithm (w=0)");
+        println!(
+            "{:<28} {:>10} {:>10} {:>10} {:>10}",
+            "window", "All users", "Group 1", "Group 2", "Group 3"
+        );
+        for (name, m) in &group_means {
+            println!("{:<28} {:>10.3} {:>10.3} {:>10.3} {:>10.3}", name, m[0], m[1], m[2], m[3]);
+        }
+        println!();
+        print!("{}", render_cdf_table(&format!("{fig} — CDF"), &series, 0.5, 1.1, 13));
+    }
+    if use_forecaster {
+        println!("\n(predictions from streaming AR(8) forecaster, not the oracle)");
+    }
+    Ok(())
+}
+
+/// Returns per-user (group, cost_w / cost_online).
+fn run_window(
+    pop: &cloudreserve::trace::Population,
+    pricing: cloudreserve::Pricing,
+    w: usize,
+    randomized: bool,
+    use_forecaster: bool,
+    threads: usize,
+) -> Vec<(Group, f64)> {
+    use std::sync::mpsc;
+    let (tx, rx) = mpsc::channel();
+    std::thread::scope(|scope| {
+        for shard in 0..threads {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let mut out = Vec::new();
+                let mut idx = shard;
+                while idx < pop.users.len() {
+                    let u = &pop.users[idx];
+                    let group = classify(&u.summary());
+                    let mk = |win: usize| -> Box<dyn Policy> {
+                        if randomized {
+                            Box::new(cloudreserve::algos::randomized::Randomized::with_window(
+                                pricing,
+                                win,
+                                0xF1675 ^ ((u.user_id as u64) << 13),
+                            ))
+                        } else {
+                            Box::new(cloudreserve::algos::deterministic::Deterministic::with_window(
+                                pricing, win,
+                            ))
+                        }
+                    };
+                    let mut online = mk(0);
+                    let base = run_policy(online.as_mut(), &u.demand, pricing).unwrap().total;
+                    let mut pred = mk(w);
+                    let cost = if use_forecaster {
+                        let mut f = ArForecaster::new(8, 128, 1024);
+                        run_policy_with(pred.as_mut(), &u.demand, pricing, |t| {
+                            // observe up to t, predict the next w
+                            f.observe(u.demand[t]);
+                            f.predict(w)
+                        })
+                        .unwrap()
+                        .total
+                    } else {
+                        run_policy(pred.as_mut(), &u.demand, pricing).unwrap().total
+                    };
+                    out.push((group, if base > 0.0 { cost / base } else { 1.0 }));
+                    idx += threads;
+                }
+                tx.send(out).unwrap();
+            });
+        }
+        drop(tx);
+        rx.iter().flatten().collect()
+    })
+}

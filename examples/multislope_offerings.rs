@@ -1,0 +1,80 @@
+//! Extension experiment (paper Sec. IX): combining multiple reserved
+//! offerings. Runs the generalized deterministic policy over a two-tier
+//! EC2-style menu (1-year light + 3-year heavy utilization, compressed)
+//! across the synthetic population, against the best *single*-offering
+//! alternatives — the question the paper leaves open.
+//!
+//! Run: `cargo run --release --example multislope_offerings -- --users 150`
+
+use cloudreserve::algos::multislope::{Menu, MultiDeterministic};
+use cloudreserve::analysis::classify::{classify, Group};
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = SynthConfig {
+        users: args.usize_or("users", 150),
+        slots: args.usize_or("slots", cloudreserve::trace::TRACE_SLOTS),
+        seed: args.u64_or("seed", 2013),
+        ..Default::default()
+    };
+    let pop = generate(&cfg);
+    let menu = Menu::ec2_two_tier_compressed();
+    let shallow_only = Menu::new(menu.p, vec![menu.offerings[0]]);
+    let deep_only = Menu::new(menu.p, vec![menu.offerings[1]]);
+
+    println!(
+        "two-tier menu: 1y-light (fee 1.00, a={:.3}, tau={}) + 3y-heavy (fee {:.2}, a={:.3}, tau={})",
+        menu.offerings[0].alpha,
+        menu.offerings[0].tau,
+        menu.offerings[1].fee,
+        menu.offerings[1].alpha,
+        menu.offerings[1].tau
+    );
+    println!(
+        "\n{:<10} {:>12} {:>12} {:>12} {:>14} {:>10}",
+        "group", "menu", "1y-only", "3y-only", "menu vs best", "users"
+    );
+
+    let mut acc: Vec<(Group, f64, f64, f64)> = Vec::new();
+    for u in &pop.users {
+        let denom = menu.p * u.total_demand() as f64;
+        if denom <= 0.0 {
+            continue;
+        }
+        let m = MultiDeterministic::run(menu.clone(), &u.demand).total / denom;
+        let s = MultiDeterministic::run(shallow_only.clone(), &u.demand).total / denom;
+        let d = MultiDeterministic::run(deep_only.clone(), &u.demand).total / denom;
+        acc.push((classify(&u.summary()), m, s, d));
+    }
+
+    for (label, group) in [
+        ("All", None),
+        ("G1", Some(Group::G1Sporadic)),
+        ("G2", Some(Group::G2Medium)),
+        ("G3", Some(Group::G3Stable)),
+    ] {
+        let rows: Vec<&(Group, f64, f64, f64)> = acc
+            .iter()
+            .filter(|(g, ..)| group.map(|gg| *g == gg).unwrap_or(true))
+            .collect();
+        if rows.is_empty() {
+            continue;
+        }
+        let n = rows.len() as f64;
+        let menu_m = rows.iter().map(|r| r.1).sum::<f64>() / n;
+        let sh_m = rows.iter().map(|r| r.2).sum::<f64>() / n;
+        let dp_m = rows.iter().map(|r| r.3).sum::<f64>() / n;
+        println!(
+            "{:<10} {:>12.4} {:>12.4} {:>12.4} {:>13.1}% {:>10}",
+            label,
+            menu_m,
+            sh_m,
+            dp_m,
+            100.0 * (menu_m / sh_m.min(dp_m) - 1.0),
+            rows.len()
+        );
+    }
+    println!("\n(menu vs best = mean menu cost relative to the ex-post better single offering)");
+}

@@ -1,0 +1,99 @@
+//! Quickstart: the paper's problem in 80 lines.
+//!
+//! A user faces time-varying instance demand and must decide online when
+//! to reserve. We price with EC2 Standard Small (Table I), run the two
+//! online algorithms against the baselines, compare with the exact offline
+//! optimum, and (if `make artifacts` has run) push one analytics batch
+//! through the AOT-compiled Pallas window-scan on the PJRT runtime.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cloudreserve::algos::baselines::{AllOnDemand, AllReserved, Separate};
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::algos::offline;
+use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::run_policy;
+use cloudreserve::Policy;
+
+fn main() -> anyhow::Result<()> {
+    // Toy pricing with the EC2 normalized shape but a short reservation
+    // period so the whole story fits a few hundred slots:
+    // p = on-demand rate (fee-normalized), alpha = reserved discount,
+    // tau = reservation period. Break-even beta = 1/(1-alpha) ~ 1.95.
+    let pricing = Pricing::normalized(0.02, 0.4875, 200);
+    println!(
+        "pricing: p={} alpha={} tau={} -> beta={:.3} ({:.0} busy slots per period to justify reserving)",
+        pricing.p,
+        pricing.alpha,
+        pricing.tau,
+        pricing.beta(),
+        pricing.break_even_hours()
+    );
+
+    // A workload with a stable phase (reserving pays off) and a sporadic
+    // tail (reserving would be wasted).
+    let mut demand: Vec<u32> = Vec::new();
+    demand.extend(vec![2u32; 250]); // stable: 2 instances for 250 slots
+    demand.extend(vec![0u32; 80]);
+    demand.extend([1, 0, 0, 3, 0, 0, 0, 1, 0, 2]); // sporadic pulses
+    demand.extend(vec![0u32; 60]);
+
+    let mut policies: Vec<Box<dyn Policy>> = vec![
+        Box::new(AllOnDemand::new()),
+        Box::new(AllReserved::new(pricing)),
+        Box::new(Separate::new(pricing)),
+        Box::new(Deterministic::online(pricing)), // Algorithm 1
+        Box::new(Randomized::online(pricing, 42)), // Algorithm 2
+    ];
+
+    println!("\n{:<28} {:>10} {:>8} {:>10}", "policy", "cost", "#res", "vs on-dem");
+    let all_od = cloudreserve::sim::all_on_demand_cost(&demand, &pricing);
+    for policy in policies.iter_mut() {
+        let rep = run_policy(policy.as_mut(), &demand, pricing)?;
+        println!(
+            "{:<28} {:>10.3} {:>8} {:>9.0}%",
+            policy.name(),
+            rep.total,
+            rep.reservations,
+            100.0 * rep.total / all_od
+        );
+    }
+
+    // Exact offline optimum. The DP is exponential in tau (the paper's
+    // Sec. III intractability), so demonstrate Prop. 1 on a small instance.
+    let small = Pricing::normalized(0.3, 0.4875, 6);
+    let toy: Vec<u32> = (0..40).map(|t| [2, 2, 2, 1, 0, 0, 3, 2][(t / 5) % 8]).collect();
+    let opt = offline::optimal(&toy, &small);
+    let mut det = Deterministic::online(small);
+    let det_cost = run_policy(&mut det, &toy, small)?.total;
+    println!(
+        "\nsmall instance (tau=6): offline OPT = {:.3} ({} reservations); \
+         A_beta/OPT = {:.3} <= {:.3} = 2-alpha  (Prop. 1)",
+        opt.cost,
+        opt.reservations,
+        det_cost / opt.cost,
+        small.deterministic_ratio()
+    );
+
+    // The L1/L2 layers: one fleet-analytics batch through the AOT artifact.
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = cloudreserve::runtime::Runtime::load_filtered(dir, |n| n.starts_with("fleet_step_b8"))?;
+        // 1 user, last-64-slot window, never-covered demand
+        let window = 64;
+        let tail: Vec<f32> = demand[..window].iter().map(|&d| d as f32).collect();
+        let coverage = vec![0.0f32; window];
+        let out = rt.fleet_step(pricing.p, &tail, &coverage, 1, window, &[0.0, pricing.beta() as f32])?;
+        println!(
+            "\nPJRT analytics (platform {}): window violations = {}, A_0 would reserve: {}, A_beta would reserve: {}",
+            rt.platform(),
+            out.counts[0],
+            out.decided(0, 0),
+            out.decided(0, 1),
+        );
+    } else {
+        println!("\n(skip PJRT demo: run `make artifacts` first)");
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernels) -> HLO text.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+emitted ``artifacts/*.hlo.txt`` through the PJRT CPU client. Python is
+never on the request path.
+
+HLO **text** (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; the Rust side unwraps tuples.
+
+Each artifact is shape-specialized. ``manifest.json`` records the catalog
+(name, input shapes, outputs) so the Rust runtime can pick a variant and
+pad batches accordingly.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# Artifact catalog. Names encode the static shapes; the Rust runtime pads
+# batches up to the chosen variant. One "full-scale" variant per graph
+# (the coordinator's production tick), one mid variant, one small variant
+# used by integration tests and the quickstart example.
+# ----------------------------------------------------------------------
+
+def catalog():
+    entries = []
+
+    def fleet_step_entry(b, w, k, block_users=None):
+        name = f"fleet_step_b{b}_w{w}_k{k}"
+        args = (f32(1), f32(b, w), f32(b, w), f32(b, w), f32(k))
+        fn = functools.partial(model.fleet_step, block_users=block_users)
+        entries.append(
+            dict(
+                name=name,
+                kind="fleet_step",
+                lower=lambda: jax.jit(fn).lower(*args),
+                inputs=dict(p=[1], demand=[b, w], reserved=[b, w], mask=[b, w], z_grid=[k]),
+                outputs=dict(counts=[b], decisions=[b, k]),
+                params=dict(B=b, W=w, K=k),
+            )
+        )
+
+    def ar_entry(b, l, k, h):
+        name = f"ar_forecast_b{b}_l{l}_k{k}_h{h}"
+        fn = functools.partial(model.ar_forecast, horizon=h)
+        args = (f32(b, l), f32(b, k + 1))
+        entries.append(
+            dict(
+                name=name,
+                kind="ar_forecast",
+                lower=lambda: jax.jit(fn).lower(*args),
+                inputs=dict(history=[b, l], coef=[b, k + 1]),
+                outputs=dict(forecast=[b, h]),
+                params=dict(B=b, L=l, k=k, H=h),
+            )
+        )
+
+    def cost_entry(b, w):
+        name = f"cost_summary_b{b}_w{w}"
+        args = (f32(1), f32(1), f32(b, w), f32(b, w), f32(b, w), f32(b, w))
+        entries.append(
+            dict(
+                name=name,
+                kind="cost_summary",
+                lower=lambda: jax.jit(model.fleet_cost_summary).lower(*args),
+                inputs=dict(
+                    p=[1], alpha=[1], demand=[b, w], on_demand=[b, w],
+                    reservations=[b, w], mask=[b, w],
+                ),
+                outputs=dict(summary=[b, 3]),
+                params=dict(B=b, W=w),
+            )
+        )
+
+    # production tick: 128 users x full compressed reservation period;
+    # 32-user VMEM tiles (Perf L1-1: 4 grid steps instead of 16)
+    fleet_step_entry(128, 8760, 64, block_users=32)
+    # mid-size tick for smaller deployments / benches
+    fleet_step_entry(32, 1024, 32)
+    # small variant for tests + quickstart
+    fleet_step_entry(8, 64, 8)
+
+    ar_entry(128, 128, 4, 60)
+    ar_entry(8, 32, 2, 8)
+
+    cost_entry(128, 1024)
+    cost_entry(8, 16)
+
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit a single artifact by name")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path_prev = os.path.join(args.out_dir, "manifest.json")
+    # --only regenerates one artifact but must keep the full catalog in the
+    # manifest; start from the previous manifest and replace entries.
+    previous = {}
+    if args.only and os.path.exists(manifest_path_prev):
+        with open(manifest_path_prev) as f:
+            previous = {e["name"]: e for e in json.load(f)}
+    manifest = []
+    for entry in catalog():
+        meta = dict(
+            name=entry["name"],
+            kind=entry["kind"],
+            file=entry["name"] + ".hlo.txt",
+            inputs=entry["inputs"],
+            outputs=entry["outputs"],
+            params=entry["params"],
+        )
+        if args.only and entry["name"] != args.only:
+            if entry["name"] in previous:
+                manifest.append(previous[entry["name"]])
+            continue
+        path = os.path.join(args.out_dir, meta["file"])
+        text = to_hlo_text(entry["lower"]())
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

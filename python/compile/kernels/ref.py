@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+These are the ground truth the kernels are validated against (pytest +
+hypothesis sweeps in ``python/tests/``). They implement the fleet-scale
+break-even window scan of Algorithm 1/3:
+
+* ``window_violation_counts`` -- for each user ``u``, the number of slots in
+  its recent reservation-period window where demand exceeded the bookkeeping
+  reservation curve: ``V_u = sum_i mask[u,i] * I(d[u,i] > x[u,i])``. The
+  while-condition of Algorithm 1 is then ``p * V_u > z_u``.
+* ``threshold_decisions`` -- the same counts compared against a *grid* of
+  thresholds (the family A_z of Sec. V-A): out[u, k] = I(p*V_u > z[k]).
+  The coordinator uses this to position every user against the whole
+  aggressiveness spectrum in one pass (randomized-policy analytics).
+* ``ar_forecast_ref`` -- iterated AR(k) multi-step forecast (Layer 2's
+  prediction-window feeder, Sec. VI).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def window_violation_counts(demand, reserved, mask):
+    """Count masked slots where demand exceeds the reservation curve.
+
+    Args:
+      demand:   f32[B, W] demand window per user.
+      reserved: f32[B, W] bookkeeping reservation curve (actual + phantom).
+      mask:     f32[B, W] 1.0 for valid slots, 0.0 for padding.
+
+    Returns:
+      f32[B] violation counts.
+    """
+    viol = (demand > reserved).astype(jnp.float32) * mask
+    return viol.sum(axis=-1)
+
+
+def threshold_decisions(demand, reserved, mask, z_grid, p):
+    """Compare the violation cost p*V_u against each threshold in a grid.
+
+    Args:
+      demand, reserved, mask: as in :func:`window_violation_counts`.
+      z_grid: f32[K] thresholds (0 <= z <= beta).
+      p: python float, normalized on-demand rate.
+
+    Returns:
+      (counts f32[B], decisions f32[B, K]) where
+      decisions[u, k] = 1.0 iff p * counts[u] > z_grid[k].
+    """
+    counts = window_violation_counts(demand, reserved, mask)
+    cost = p * counts[:, None]
+    return counts, (cost > z_grid[None, :]).astype(jnp.float32)
+
+
+def ar_forecast_ref(history, coef, horizon: int):
+    """Iterated AR(k) forecast.
+
+    Args:
+      history: f32[B, L] recent demand per user (oldest first).
+      coef:    f32[B, k+1] per-user AR coefficients [c, a_1, ..., a_k]
+               (a_j multiplies the value j steps back).
+      horizon: number of steps to forecast.
+
+    Returns:
+      f32[B, horizon] non-negative forecasts.
+    """
+    b, _ = history.shape
+    k = coef.shape[1] - 1
+    # maintain the last k values, newest last
+    state = history[:, -k:] if k > 0 else jnp.zeros((b, 0), history.dtype)
+    outs = []
+    for _ in range(horizon):
+        # y = c + sum_j a_j * state[:, -j]
+        y = coef[:, 0]
+        for j in range(1, k + 1):
+            y = y + coef[:, j] * state[:, -j]
+        y = jnp.maximum(y, 0.0)
+        outs.append(y)
+        if k > 0:
+            state = jnp.concatenate([state[:, 1:], y[:, None]], axis=1)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,121 @@
+"""Layer 1 -- Pallas kernels for the fleet-scale break-even window scan.
+
+The compute hot-spot of the coordinator's analytics tick: for B users at
+once, reduce the (demand > reservation-curve) indicator over a
+reservation-period window, then (optionally) compare the resulting
+violation cost against a grid of K thresholds (the A_z family).
+
+TPU mapping (DESIGN.md "Hardware-Adaptation"): the scan is memory-bound;
+we tile (BU, W) blocks of the demand and reservation matrices into VMEM
+via BlockSpec so each row is streamed through HBM exactly once. The
+indicator compare + masked reduction vectorizes on the VPU (8x128 lanes);
+no MXU is involved. The threshold-sweep kernel broadcasts each user tile
+against all K thresholds while it is VMEM-resident, turning K passes over
+HBM into one.
+
+The kernels MUST run ``interpret=True`` here: real-TPU lowering produces a
+Mosaic custom-call the CPU PJRT plugin cannot execute. ``interpret=True``
+lowers them to plain HLO, which compiles anywhere (and is what the AOT
+artifacts ship).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Users per grid step. 8 sublanes x f32 works well on TPU; on the CPU
+# interpret path it simply bounds working-set size.
+DEFAULT_BLOCK_USERS = 8
+
+
+def _count_kernel(d_ref, x_ref, m_ref, out_ref):
+    """One (BU, W) tile: masked violation-count reduction along W."""
+    d = d_ref[...]
+    x = x_ref[...]
+    m = m_ref[...]
+    viol = jnp.where(d > x, 1.0, 0.0) * m
+    out_ref[...] = viol.sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_users",))
+def window_violation_counts(demand, reserved, mask, *, block_users: int = DEFAULT_BLOCK_USERS):
+    """Pallas version of :func:`ref.window_violation_counts`.
+
+    Shapes: demand/reserved/mask f32[B, W] -> f32[B]. B must be a multiple
+    of ``block_users`` (the AOT wrapper pads).
+    """
+    b, w = demand.shape
+    assert b % block_users == 0, f"B={b} not a multiple of block_users={block_users}"
+    grid = (b // block_users,)
+    row_spec = pl.BlockSpec((block_users, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec],
+        out_specs=pl.BlockSpec((block_users,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(demand, reserved, mask)
+
+
+def _sweep_kernel(p_ref, d_ref, x_ref, m_ref, z_ref, cnt_ref, dec_ref):
+    """One (BU, W) tile against all K thresholds while VMEM-resident."""
+    d = d_ref[...]
+    x = x_ref[...]
+    m = m_ref[...]
+    z = z_ref[...]  # (K,)
+    p = p_ref[0]
+    viol = jnp.where(d > x, 1.0, 0.0) * m
+    counts = viol.sum(axis=-1)  # (BU,)
+    cnt_ref[...] = counts
+    cost = p * counts[:, None]  # (BU, 1)
+    dec_ref[...] = jnp.where(cost > z[None, :], 1.0, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_users",))
+def threshold_sweep(p, demand, reserved, mask, z_grid, *, block_users: int = DEFAULT_BLOCK_USERS):
+    """Pallas version of :func:`ref.threshold_decisions`.
+
+    Args:
+      p: f32[1] normalized on-demand rate (runtime input, not baked in).
+      demand/reserved/mask: f32[B, W].
+      z_grid: f32[K].
+
+    Returns: (counts f32[B], decisions f32[B, K]).
+    """
+    b, w = demand.shape
+    (k,) = z_grid.shape
+    assert b % block_users == 0
+    grid = (b // block_users,)
+    row_spec = pl.BlockSpec((block_users, w), lambda i: (i, 0))
+    full_z = pl.BlockSpec((k,), lambda i: (0,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _sweep_kernel,
+        grid=grid,
+        in_specs=[scalar, row_spec, row_spec, row_spec, full_z],
+        out_specs=[
+            pl.BlockSpec((block_users,), lambda i: (i,)),
+            pl.BlockSpec((block_users, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=True,
+    )(p, demand, reserved, mask, z_grid)
+
+
+def vmem_bytes(block_users: int, window: int, k: int) -> int:
+    """Estimated VMEM working set of one `_sweep_kernel` tile (f32).
+
+    3 input tiles (d, x, m) + the z row + count/decision outputs; used by
+    DESIGN.md/EXPERIMENTS.md Perf to check the tile fits the ~16 MB VMEM of
+    a TPU core with double buffering.
+    """
+    tile = block_users * window * 4
+    return 3 * tile + k * 4 + block_users * 4 + block_users * k * 4

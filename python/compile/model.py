@@ -1,0 +1,73 @@
+"""Layer 2 -- the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Two graphs, both shipped as HLO text artifacts:
+
+* ``fleet_step`` -- the coordinator's analytics tick: for a batch of users,
+  run the L1 Pallas break-even window scan and position every user against
+  a grid of A_z thresholds. Rust feeds per-user (demand window, bookkeeping
+  reservation curve, mask) tensors and gets back violation counts and the
+  z-grid decision matrix.
+* ``ar_forecast`` -- batched iterated AR(k) demand forecast for the
+  prediction-window policies (Sec. VI). Coefficients are fit in Rust
+  (`forecast::fit_ar`) and applied here; the unrolled multiply-add chain
+  fuses into a handful of HLO ops.
+
+Shapes are static per artifact (PJRT executables are shape-specialized);
+`aot.py` emits a small catalog of variants and the Rust runtime pads
+batches to the nearest one.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import window_scan
+from .kernels.ref import ar_forecast_ref
+
+
+def fleet_step(p, demand, reserved, mask, z_grid, *, block_users=None):
+    """Fleet analytics tick.
+
+    Args:
+      p:        f32[1] normalized on-demand rate.
+      demand:   f32[B, W] per-user demand windows.
+      reserved: f32[B, W] per-user bookkeeping reservation curves.
+      mask:     f32[B, W] validity mask (ragged windows / padding).
+      z_grid:   f32[K] thresholds spanning [0, beta].
+
+    Returns:
+      counts:    f32[B]   violation counts V_u.
+      decisions: f32[B,K] I(p*V_u > z_k)  -- the A_z family's reserve
+                 signals for every user x aggressiveness level.
+    """
+    kw = {} if block_users is None else dict(block_users=block_users)
+    counts, decisions = window_scan.threshold_sweep(p, demand, reserved, mask, z_grid, **kw)
+    return counts, decisions
+
+
+def ar_forecast(history, coef, horizon: int):
+    """Batched iterated AR(k) forecast (see ref.ar_forecast_ref).
+
+    The reference implementation *is* the model here -- a short unrolled
+    scan of fused multiply-adds; XLA folds it into a single fusion. Kept as
+    a separate symbol so the artifact and tests pin its semantics.
+    """
+    return ar_forecast_ref(history, coef, horizon)
+
+
+def fleet_cost_summary(p, alpha, demand, on_demand, reservations, mask):
+    """Batched cost accounting (Eq. 1 summed over a horizon).
+
+    Used by the coordinator's billing cross-check path: given per-slot
+    demand, on-demand counts and new-reservation counts for B users over W
+    slots, produce each user's cost decomposition
+
+      total_u = sum_t r[u,t] + p*o[u,t] + alpha*p*(d[u,t]-o[u,t])
+
+    Returns f32[B, 3]: (total, on_demand_cost, reservation_fees).
+    """
+    od_cost = (p * on_demand * mask).sum(axis=-1)
+    fees = (reservations * mask).sum(axis=-1)
+    reserved_use = ((demand - on_demand) * mask).sum(axis=-1)
+    total = fees + od_cost + alpha * p * reserved_use
+    return jnp.stack([total, od_cost, fees], axis=1)

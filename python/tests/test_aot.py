@@ -1,0 +1,78 @@
+"""AOT artifact checks: the emitted HLO text must exist, parse, and match
+the manifest's shape catalog. Guards the Python->Rust interchange contract.
+"""
+
+import json
+import os
+
+import pytest
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_expected_kinds():
+    manifest = _manifest()
+    kinds = {e["kind"] for e in manifest}
+    assert {"fleet_step", "ar_forecast", "cost_summary"} <= kinds
+
+
+def test_all_artifacts_exist_and_are_hlo_text():
+    manifest = _manifest()
+    assert len(manifest) >= 5
+    for e in manifest:
+        path = os.path.join(ART_DIR, e["file"])
+        assert os.path.exists(path), f"missing {path}"
+        with open(path) as f:
+            text = f.read()
+        assert "ENTRY" in text, f"{e['file']} does not look like HLO text"
+        assert "main" in text
+        # 64-bit-id proto issue does not apply to text, but sanity check the
+        # parameter count matches the manifest
+        n_params = text.count("parameter(")
+        assert n_params >= len(e["inputs"]), (
+            f"{e['file']}: {n_params} parameters < {len(e['inputs'])} manifest inputs"
+        )
+
+
+def test_manifest_shapes_in_hlo():
+    # every input shape in the manifest should appear in the HLO text as
+    # f32[dims] for some parameter
+    manifest = _manifest()
+    for e in manifest:
+        path = os.path.join(ART_DIR, e["file"])
+        with open(path) as f:
+            text = f.read()
+        for pname, shape in e["inputs"].items():
+            dims = ",".join(str(s) for s in shape)
+            assert f"f32[{dims}]" in text, (
+                f"{e['file']}: input {pname} f32[{dims}] not found in HLO"
+            )
+
+
+def test_production_fleet_step_variant_present():
+    manifest = _manifest()
+    names = {e["name"] for e in manifest}
+    assert "fleet_step_b128_w8760_k64" in names, (
+        "production variant (128 users x compressed reservation period) missing"
+    )
+
+
+def test_artifacts_regenerate_deterministically(tmp_path):
+    # re-lower one small artifact and compare against the shipped file
+    from compile import aot
+
+    entry = next(e for e in aot.catalog() if e["name"] == "fleet_step_b8_w64_k8")
+    text = aot.to_hlo_text(entry["lower"]())
+    shipped = os.path.join(ART_DIR, "fleet_step_b8_w64_k8.hlo.txt")
+    if not os.path.exists(shipped):
+        pytest.skip("artifacts not built")
+    with open(shipped) as f:
+        assert f.read() == text, "AOT lowering is not reproducible"

@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/values; explicit cases pin the edge semantics
+(strict inequality, mask handling, padding rows).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, window_scan
+
+
+def _case(rng, b, w, demand_hi=6, float_vals=False):
+    if float_vals:
+        d = (rng.random((b, w)) * demand_hi).astype(np.float32)
+        x = (rng.random((b, w)) * demand_hi).astype(np.float32)
+    else:
+        d = rng.integers(0, demand_hi, (b, w)).astype(np.float32)
+        x = rng.integers(0, demand_hi, (b, w)).astype(np.float32)
+    m = (rng.random((b, w)) < 0.85).astype(np.float32)
+    return d, x, m
+
+
+# ---------------------------------------------------------------- counts
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b_blocks=st.integers(1, 4),
+    w=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+    demand_hi=st.integers(1, 50),
+    float_vals=st.booleans(),
+)
+def test_counts_match_ref(b_blocks, w, seed, demand_hi, float_vals):
+    b = b_blocks * window_scan.DEFAULT_BLOCK_USERS
+    rng = np.random.default_rng(seed)
+    d, x, m = _case(rng, b, w, demand_hi, float_vals)
+    got = window_scan.window_violation_counts(jnp.array(d), jnp.array(x), jnp.array(m))
+    want = ref.window_violation_counts(jnp.array(d), jnp.array(x), jnp.array(m))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_counts_strict_inequality():
+    # d == x is NOT a violation (Algorithm 1 uses d_i > x_i)
+    d = jnp.full((8, 4), 3.0)
+    x = jnp.full((8, 4), 3.0)
+    m = jnp.ones((8, 4))
+    got = window_scan.window_violation_counts(d, x, m)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(8))
+
+
+def test_counts_mask_zero_rows():
+    d = jnp.full((8, 16), 9.0)
+    x = jnp.zeros((8, 16))
+    m = jnp.zeros((8, 16))  # fully padded
+    got = window_scan.window_violation_counts(d, x, m)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(8))
+
+
+def test_counts_full_violation():
+    d = jnp.ones((8, 32))
+    x = jnp.zeros((8, 32))
+    m = jnp.ones((8, 32))
+    got = window_scan.window_violation_counts(d, x, m)
+    np.testing.assert_array_equal(np.asarray(got), np.full(8, 32.0))
+
+
+def test_counts_custom_block_size():
+    rng = np.random.default_rng(7)
+    d, x, m = _case(rng, 16, 24)
+    a = window_scan.window_violation_counts(
+        jnp.array(d), jnp.array(x), jnp.array(m), block_users=4
+    )
+    b = ref.window_violation_counts(jnp.array(d), jnp.array(x), jnp.array(m))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_counts_rejects_misaligned_batch():
+    d = jnp.zeros((5, 8))
+    with pytest.raises(AssertionError):
+        window_scan.window_violation_counts(d, d, d)
+
+
+# ----------------------------------------------------------------- sweep
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b_blocks=st.integers(1, 3),
+    w=st.integers(1, 64),
+    k=st.integers(1, 33),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sweep_matches_ref(b_blocks, w, k, seed):
+    b = b_blocks * window_scan.DEFAULT_BLOCK_USERS
+    rng = np.random.default_rng(seed)
+    d, x, m = _case(rng, b, w)
+    p = float(rng.random() * 0.3 + 1e-3)
+    z = np.sort(rng.random(k) * 3).astype(np.float32)
+    counts, dec = window_scan.threshold_sweep(
+        jnp.array([p], jnp.float32), jnp.array(d), jnp.array(x), jnp.array(m), jnp.array(z)
+    )
+    counts_ref, dec_ref = ref.threshold_decisions(
+        jnp.array(d), jnp.array(x), jnp.array(m), jnp.array(z), p
+    )
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_ref))
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(dec_ref))
+
+
+def test_sweep_threshold_boundary():
+    # cost exactly equal to z must NOT trigger (strict >)
+    d = jnp.ones((8, 10))
+    x = jnp.zeros((8, 10))
+    m = jnp.ones((8, 10))
+    p = jnp.array([0.1], jnp.float32)
+    z = jnp.array([1.0, 0.999999, 1.000001], jnp.float32)  # cost = 1.0
+    _, dec = window_scan.threshold_sweep(p, d, x, m, z)
+    dec = np.asarray(dec)
+    np.testing.assert_array_equal(dec[:, 0], np.zeros(8))  # == -> no
+    np.testing.assert_array_equal(dec[:, 1], np.ones(8))  # just below -> yes
+    np.testing.assert_array_equal(dec[:, 2], np.zeros(8))  # above -> no
+
+
+def test_sweep_decision_monotone_in_z():
+    rng = np.random.default_rng(3)
+    d, x, m = _case(rng, 8, 40)
+    z = np.linspace(0, 4, 16).astype(np.float32)
+    _, dec = window_scan.threshold_sweep(
+        jnp.array([0.2], jnp.float32), jnp.array(d), jnp.array(x), jnp.array(m), jnp.array(z)
+    )
+    dec = np.asarray(dec)
+    # rows must be non-increasing along the sorted z axis
+    assert (np.diff(dec, axis=1) <= 0).all()
+
+
+# ------------------------------------------------------------ vmem model
+
+def test_vmem_estimate_production_tile_fits():
+    # production artifact: BU=8 x W=8760 x K=64 tile must fit VMEM with
+    # double buffering (2x inputs) under the ~16 MiB budget.
+    est = window_scan.vmem_bytes(window_scan.DEFAULT_BLOCK_USERS, 8760, 64)
+    assert 2 * est < 16 * 2**20, f"tile working set {est} bytes too large"

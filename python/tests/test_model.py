@@ -1,0 +1,150 @@
+"""L2 correctness: the AOT-compiled graphs against independent references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+# ------------------------------------------------------------ fleet_step
+
+def test_fleet_step_equals_ref():
+    rng = np.random.default_rng(0)
+    b, w, k = 16, 48, 12
+    d = rng.integers(0, 6, (b, w)).astype(np.float32)
+    x = rng.integers(0, 6, (b, w)).astype(np.float32)
+    m = np.ones((b, w), np.float32)
+    z = np.linspace(0, 2, k).astype(np.float32)
+    p = 0.08 / 69.0
+    counts, dec = model.fleet_step(
+        jnp.array([p], jnp.float32), jnp.array(d), jnp.array(x), jnp.array(m), jnp.array(z)
+    )
+    counts_ref, dec_ref = ref.threshold_decisions(
+        jnp.array(d), jnp.array(x), jnp.array(m), jnp.array(z), p
+    )
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_ref))
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(dec_ref))
+
+
+# ------------------------------------------------------------ ar_forecast
+
+def _numpy_ar(history, coef, horizon):
+    b, _ = history.shape
+    k = coef.shape[1] - 1
+    out = np.zeros((b, horizon), np.float32)
+    ext = [history[:, i].astype(np.float64) for i in range(history.shape[1])]
+    for h in range(horizon):
+        y = coef[:, 0].astype(np.float64).copy()
+        for j in range(1, k + 1):
+            y += coef[:, j].astype(np.float64) * ext[len(ext) - j]
+        y = np.maximum(y, 0.0)
+        out[:, h] = y.astype(np.float32)
+        ext.append(y)
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    l=st.integers(2, 24),
+    k=st.integers(1, 4),
+    h=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ar_forecast_matches_numpy(b, l, k, h, seed):
+    if l < k:
+        l = k
+    rng = np.random.default_rng(seed)
+    history = rng.integers(0, 20, (b, l)).astype(np.float32)
+    # stable-ish coefficients so iteration doesn't blow up numerically
+    coef = np.concatenate(
+        [rng.random((b, 1)).astype(np.float32) * 5,
+         (rng.random((b, k)).astype(np.float32) - 0.2) * 0.5],
+        axis=1,
+    )
+    got = model.ar_forecast(jnp.array(history), jnp.array(coef), horizon=h)
+    want = _numpy_ar(history, coef, h)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-3)
+
+
+def test_ar_forecast_constant_series():
+    # AR fixed point: c + a*v = v with c = v(1-a)
+    b, l, k, h = 4, 10, 2, 6
+    v = 7.0
+    history = np.full((b, l), v, np.float32)
+    coef = np.zeros((b, k + 1), np.float32)
+    coef[:, 0] = v * 0.5
+    coef[:, 1] = 0.5
+    got = np.asarray(model.ar_forecast(jnp.array(history), jnp.array(coef), horizon=h))
+    np.testing.assert_allclose(got, np.full((b, h), v), rtol=1e-5)
+
+
+def test_ar_forecast_nonnegative():
+    history = np.zeros((3, 8), np.float32)
+    coef = np.full((3, 3), -5.0, np.float32)  # wants to go negative
+    got = np.asarray(model.ar_forecast(jnp.array(history), jnp.array(coef), horizon=5))
+    assert (got >= 0).all()
+
+
+# --------------------------------------------------------- cost summary
+
+def test_cost_summary_identity():
+    # total = fees + od + alpha*p*reserved_use, matching the Rust ledger
+    rng = np.random.default_rng(5)
+    b, w = 6, 32
+    p, alpha = 0.08 / 69.0, 0.4875
+    d = rng.integers(0, 5, (b, w)).astype(np.float32)
+    o = np.minimum(d, rng.integers(0, 5, (b, w)).astype(np.float32))
+    r = rng.integers(0, 2, (b, w)).astype(np.float32)
+    m = np.ones((b, w), np.float32)
+    out = np.asarray(
+        model.fleet_cost_summary(
+            jnp.array([p], jnp.float32), jnp.array([alpha], jnp.float32),
+            jnp.array(d), jnp.array(o), jnp.array(r), jnp.array(m)
+        )
+    )
+    total, od_cost, fees = out[:, 0], out[:, 1], out[:, 2]
+    want_od = (p * o).sum(axis=1)
+    want_fees = r.sum(axis=1)
+    want_total = want_fees + want_od + alpha * p * (d - o).sum(axis=1)
+    np.testing.assert_allclose(od_cost, want_od, rtol=1e-5)
+    np.testing.assert_allclose(fees, want_fees, rtol=1e-5)
+    np.testing.assert_allclose(total, want_total, rtol=1e-5)
+
+
+def test_cost_summary_mask_excludes_slots():
+    b, w = 2, 4
+    d = np.ones((b, w), np.float32)
+    o = np.ones((b, w), np.float32)
+    r = np.ones((b, w), np.float32)
+    m = np.zeros((b, w), np.float32)
+    m[:, 0] = 1.0  # only first slot counts
+    out = np.asarray(
+        model.fleet_cost_summary(
+            jnp.array([0.5], jnp.float32), jnp.array([0.0], jnp.float32),
+            jnp.array(d), jnp.array(o), jnp.array(r), jnp.array(m)
+        )
+    )
+    np.testing.assert_allclose(out[:, 2], np.ones(b))  # one fee
+    np.testing.assert_allclose(out[:, 1], np.full(b, 0.5))  # one od slot
+
+
+# ------------------------------------------------------------- lowering
+
+def test_fleet_step_lowers_without_python_callbacks():
+    # The lowered module must be pure HLO (no host callbacks): the Rust
+    # runtime cannot service them.
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.fleet_step).lower(
+        spec((1,), jnp.float32),
+        spec((8, 16), jnp.float32),
+        spec((8, 16), jnp.float32),
+        spec((8, 16), jnp.float32),
+        spec((4,), jnp.float32),
+    )
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert "stablehlo.custom_call" not in text, "custom call would break PJRT CPU execution"
+    assert "callback" not in text

@@ -1,0 +1,90 @@
+//! Policy hot-path micro-benchmarks: per-slot decision latency and
+//! throughput for every policy, plus the WindowScan primitive.
+//!
+//! The deterministic policy's O(1)-amortized window bookkeeping is the
+//! §Perf L3 target: ≥10 M policy-steps/s (vs the naive O(τ) rescan).
+
+use cloudreserve::algos::baselines::{AllOnDemand, AllReserved, Separate};
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::algos::window::{NaiveScan, WindowScan};
+use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::util::bench::{sink, Bencher};
+use cloudreserve::util::rng::Rng;
+use cloudreserve::Policy;
+
+fn main() {
+    let pricing = ec2_small_compressed(); // tau = 8760 — the real window
+    let slots = 50_000usize;
+    let mut rng = Rng::new(42);
+    // a group-2-like demand curve
+    let demand: Vec<u32> = (0..slots)
+        .map(|t| {
+            let base = 4.0 + 3.0 * ((t as f64) / 720.0).sin();
+            (base * (1.0 + 0.3 * rng.normal()).max(0.0)).round() as u32
+        })
+        .collect();
+
+    let b = Bencher::default();
+
+    // Full-trace runs (policy-steps/s is the headline number).
+    let policies: Vec<(&str, Box<dyn Fn() -> Box<dyn Policy>>)> = vec![
+        ("all_on_demand", Box::new(move || Box::new(AllOnDemand::new()))),
+        ("all_reserved", Box::new(move || Box::new(AllReserved::new(pricing)))),
+        ("separate", Box::new(move || Box::new(Separate::new(pricing)))),
+        ("deterministic_beta", Box::new(move || Box::new(Deterministic::online(pricing)))),
+        ("deterministic_w720", Box::new(move || Box::new(Deterministic::with_window(pricing, 720)))),
+        ("randomized", Box::new(move || Box::new(Randomized::online(pricing, 7)))),
+    ];
+    println!("== policy step throughput (tau=8760, {slots} slots, group-2 demand) ==");
+    for (name, factory) in &policies {
+        let r = b.run(&format!("policy/{name}/full_trace"), || {
+            let mut p = factory();
+            let mut acc = 0u32;
+            for &d in &demand {
+                let dec = p.decide(d, &[]);
+                acc = acc.wrapping_add(dec.reserve + dec.on_demand);
+            }
+            acc
+        });
+        r.report();
+        println!(
+            "  -> {:.2} M policy-steps/s",
+            r.throughput(slots as f64) / 1e6
+        );
+    }
+
+    // WindowScan primitive vs the literal O(tau) rescan.
+    println!("\n== window-scan primitive (the Algorithm-1 inner loop) ==");
+    let r_fast = b.run("window_scan/incremental/50k_slots", || {
+        let mut scan = WindowScan::new();
+        let tau = 8760usize;
+        let mut acc = 0u32;
+        for (t, &d) in demand.iter().enumerate() {
+            scan.expire_before((t + 1).saturating_sub(tau));
+            scan.insert(t, d, 0);
+            acc = acc.wrapping_add(scan.violations());
+        }
+        acc
+    });
+    r_fast.report();
+    println!("  -> {:.2} M slots/s", r_fast.throughput(slots as f64) / 1e6);
+
+    let naive_slots = 2_000usize; // the naive scan is ~tau x slower
+    let quick = Bencher::quick();
+    let r_naive = quick.run("window_scan/naive_rescan/2k_slots", || {
+        let tau = 8760usize;
+        let mut scan = NaiveScan::new(tau);
+        let mut acc = 0u32;
+        for (t, &d) in demand[..naive_slots].iter().enumerate() {
+            scan.insert(d);
+            acc = acc.wrapping_add(scan.violations(t));
+        }
+        acc
+    });
+    r_naive.report();
+    let speedup = (r_naive.median_ns() / naive_slots as f64) / (r_fast.median_ns() / slots as f64);
+    println!("  -> incremental scan speedup over naive O(tau) rescan: {speedup:.0}x");
+
+    sink(());
+}

@@ -1,0 +1,70 @@
+//! Coordinator throughput bench: demand events/s through the sharded
+//! broker (the L3 service hot path), swept over shard counts, plus the
+//! snapshot (analytics cut) latency.
+
+use cloudreserve::coordinator::{Broker, BrokerConfig, DemandEvent, PolicyKind};
+use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::util::bench::fmt_ns;
+
+fn main() {
+    let users = 256usize;
+    let slots = 3000usize;
+    let pop = generate(&SynthConfig { users, slots, seed: 9, ..Default::default() });
+    let pricing = ec2_small_compressed();
+    let events = (users * slots) as f64;
+
+    println!("== broker throughput: {users} users x {slots} slots ==");
+    println!(
+        "{:<12} {:>14} {:>16} {:>16}",
+        "shards", "wall", "events/s", "snapshot lat."
+    );
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = BrokerConfig { pricing, shards, queue_capacity: 16384, window: 64 };
+        let broker = Broker::start(cfg, PolicyKind::Deterministic { z: None });
+        let t0 = std::time::Instant::now();
+        for t in 0..slots {
+            for u in &pop.users {
+                broker
+                    .submit(DemandEvent { user_id: u.user_id, slot: t as u32, demand: u.demand[t] })
+                    .unwrap();
+            }
+        }
+        // measure a snapshot after the stream (queues drained by the marker)
+        let s0 = std::time::Instant::now();
+        let rows = broker.snapshot().unwrap();
+        let snap = s0.elapsed();
+        assert_eq!(rows.len(), users);
+        let dt = t0.elapsed();
+        broker.finish().unwrap();
+        println!(
+            "{:<12} {:>14} {:>13.2} M/s {:>16}",
+            shards,
+            fmt_ns(dt.as_nanos() as f64),
+            events / dt.as_secs_f64() / 1e6,
+            fmt_ns(snap.as_nanos() as f64)
+        );
+    }
+
+    // forecaster-backed prediction policy (heavier per-event work)
+    println!("\n== broker with AR(8)-forecast prediction policy (w=120) ==");
+    let cfg = BrokerConfig { pricing, shards: 8, queue_capacity: 16384, window: 64 };
+    let broker = Broker::start(cfg, PolicyKind::DeterministicForecast { window: 120, ar_order: 8 });
+    let t0 = std::time::Instant::now();
+    let fslots = 600usize;
+    for t in 0..fslots {
+        for u in &pop.users {
+            broker
+                .submit(DemandEvent { user_id: u.user_id, slot: t as u32, demand: u.demand[t] })
+                .unwrap();
+        }
+    }
+    broker.finish().unwrap();
+    let dt = t0.elapsed();
+    println!(
+        "8 shards: {} for {} events -> {:.2} M events/s",
+        fmt_ns(dt.as_nanos() as f64),
+        users * fslots,
+        (users * fslots) as f64 / dt.as_secs_f64() / 1e6
+    );
+}

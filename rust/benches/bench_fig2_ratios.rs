@@ -1,0 +1,53 @@
+//! Fig. 2 regeneration bench: measured worst-case competitive ratios over
+//! the α grid (deterministic adversary exact; randomized Monte-Carlo),
+//! with wall-time accounting. `cargo bench` prints the same series the
+//! figure plots.
+
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::algos::offline;
+use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::run_policy;
+use cloudreserve::util::bench::fmt_ns;
+
+fn main() {
+    let p = 0.004;
+    let samples = 800u64;
+    println!("== Fig. 2 series: competitive ratio vs alpha ==");
+    println!("{:>6} {:>10} {:>12} {:>12} {:>12}", "alpha", "2-a", "det(meas)", "e/(e-1+a)", "rand(meas@beta)");
+    let t0 = std::time::Instant::now();
+    for i in 0..10 {
+        let alpha = i as f64 / 10.0;
+        let pricing = Pricing::normalized(p, alpha, 10_000_000);
+        let beta = pricing.beta();
+
+        // deterministic adversary: demand just past break-even
+        let pulses = (beta / p).ceil() as usize + 1;
+        let mut demands = vec![1u32; pulses];
+        demands.extend(vec![0u32; 5]);
+        let mut det = Deterministic::online(pricing);
+        let det_cost = run_policy(&mut det, &demands, pricing).unwrap().total;
+        let det_ratio = det_cost / offline::optimal_single(&demands, &pricing).cost;
+
+        // randomized at x = beta (the tight point of Prop. 3)
+        let at_beta = vec![1u32; (beta / p).floor() as usize];
+        let opt = offline::optimal_single(&at_beta, &pricing).cost;
+        let mean: f64 = (0..samples)
+            .map(|s| {
+                let mut a = Randomized::online(pricing, s * 31 + 7);
+                run_policy(&mut a, &at_beta, pricing).unwrap().total
+            })
+            .sum::<f64>()
+            / samples as f64;
+        println!(
+            "{alpha:>6.2} {:>10.4} {det_ratio:>12.4} {:>12.4} {:>12.4}",
+            pricing.deterministic_ratio(),
+            pricing.randomized_ratio(),
+            mean / opt
+        );
+    }
+    println!(
+        "bench fig2/ratio_sweep total {}",
+        fmt_ns(t0.elapsed().as_nanos() as f64)
+    );
+}

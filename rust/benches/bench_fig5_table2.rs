@@ -1,0 +1,48 @@
+//! Fig. 5 / Table II regeneration bench: the Sec. VII suite over a
+//! scaled-down population (full scale lives in `examples/fig5_cost_cdf`),
+//! reporting both the Table II rows and the wall-time per policy.
+
+use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::sim::fleet::{run_fleet, PolicySpec};
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::util::bench::fmt_ns;
+
+fn main() {
+    let cfg = SynthConfig { users: 300, slots: 20_000, seed: 2013, ..Default::default() };
+    let pop = generate(&cfg);
+    let pricing = ec2_small_compressed();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    println!(
+        "== Table II / Fig. 5 bench: {} users x {} slots, {threads} threads ==",
+        cfg.users, cfg.slots
+    );
+    println!(
+        "{:<28} {:>10} {:>8} {:>8} {:>8} {:>12} {:>14}",
+        "Algorithm", "All", "G1", "G2", "G3", "wall", "user-slots/s"
+    );
+    let specs = [
+        PolicySpec::AllOnDemand,
+        PolicySpec::AllReserved,
+        PolicySpec::Separate,
+        PolicySpec::Deterministic { z: None, window: 0 },
+        PolicySpec::Randomized { window: 0, seed: 1 },
+    ];
+    for spec in &specs {
+        let t0 = std::time::Instant::now();
+        let result = run_fleet(&pop, pricing, spec, threads);
+        let dt = t0.elapsed();
+        let row = result.table2_row();
+        let slots_total = (cfg.users * cfg.slots) as f64;
+        println!(
+            "{:<28} {:>10.2} {:>8.2} {:>8.2} {:>8.2} {:>12} {:>11.1} M/s",
+            result.policy,
+            row[0],
+            row[1],
+            row[2],
+            row[3],
+            fmt_ns(dt.as_nanos() as f64),
+            slots_total / dt.as_secs_f64() / 1e6
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 6 / Fig. 7 regeneration bench: prediction-window sweep (1/2/3
+//! compressed months) for the deterministic and randomized policies,
+//! normalized to their online (w = 0) counterparts, on a scaled-down
+//! population. Also times the oracle-window runs (the prediction window
+//! adds scan-bookkeeping work — this bench quantifies the overhead).
+
+use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::sim::fleet::{run_fleet, PolicySpec};
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::util::bench::fmt_ns;
+
+fn main() {
+    let cfg = SynthConfig { users: 200, slots: 20_000, seed: 2013, ..Default::default() };
+    let pop = generate(&cfg);
+    let pricing = ec2_small_compressed();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let month = 8760 / 12;
+
+    for (fig, randomized) in [("Fig. 6 deterministic", false), ("Fig. 7 randomized", true)] {
+        println!("== {fig}: mean cost normalized to the online (w=0) algorithm ==");
+        let base_spec = if randomized {
+            PolicySpec::Randomized { window: 0, seed: 1 }
+        } else {
+            PolicySpec::Deterministic { z: None, window: 0 }
+        };
+        let t0 = std::time::Instant::now();
+        let base = run_fleet(&pop, pricing, &base_spec, threads);
+        let base_dt = t0.elapsed();
+        println!(
+            "{:<16} {:>12} {:>12} {:>12}",
+            "window", "mean(norm)", "wall", "vs w=0 wall"
+        );
+        println!("{:<16} {:>12.4} {:>12} {:>12}", "w=0", 1.0, fmt_ns(base_dt.as_nanos() as f64), "1.00x");
+        for m in 1..=3usize {
+            let w = m * month;
+            let spec = if randomized {
+                PolicySpec::Randomized { window: w, seed: 1 }
+            } else {
+                PolicySpec::Deterministic { z: None, window: w }
+            };
+            let t0 = std::time::Instant::now();
+            let res = run_fleet(&pop, pricing, &spec, threads);
+            let dt = t0.elapsed();
+            // normalize per user against the online run
+            let mut sum = 0.0;
+            let mut n = 0usize;
+            for (a, b) in res.per_user.iter().zip(&base.per_user) {
+                if b.absolute_cost > 0.0 {
+                    sum += a.absolute_cost / b.absolute_cost;
+                    n += 1;
+                }
+            }
+            println!(
+                "{:<16} {:>12.4} {:>12} {:>11.2}x",
+                format!("w={w} ({m}mo)"),
+                sum / n.max(1) as f64,
+                fmt_ns(dt.as_nanos() as f64),
+                dt.as_secs_f64() / base_dt.as_secs_f64()
+            );
+        }
+        println!();
+    }
+}

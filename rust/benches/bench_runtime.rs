@@ -1,0 +1,48 @@
+//! PJRT runtime bench: latency of the AOT artifacts from the Rust side —
+//! the fleet_step analytics tick at each catalog variant and the AR
+//! forecaster, plus per-user amortized cost. Skips (exit 0) when
+//! artifacts are absent.
+
+use cloudreserve::runtime::Runtime;
+use cloudreserve::util::bench::Bencher;
+use cloudreserve::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(dir).expect("load artifacts");
+    println!("platform: {}; artifacts: {:?}", rt.platform(), rt.names());
+    let b = Bencher::default();
+    let mut rng = Rng::new(3);
+
+    for (users, window, k) in [(8usize, 64usize, 8usize), (32, 1024, 32), (128, 8760, 64)] {
+        let demand: Vec<f32> = (0..users * window).map(|_| rng.below(6) as f32).collect();
+        let reserved: Vec<f32> = (0..users * window).map(|_| rng.below(6) as f32).collect();
+        let z_grid: Vec<f32> = (0..k).map(|i| i as f32 * 0.03).collect();
+        let r = b.run(&format!("runtime/fleet_step/b{users}_w{window}_k{k}"), || {
+            rt.fleet_step(0.00116, &demand, &reserved, users, window, &z_grid).unwrap()
+        });
+        r.report();
+        println!(
+            "  -> {:.1} us/user/tick, {:.2} M window-slots/s",
+            r.median_ns() / 1e3 / users as f64,
+            r.throughput((users * window) as f64) / 1e6
+        );
+    }
+
+    // AR forecast artifact
+    let (users, len, k) = (128usize, 128usize, 4usize);
+    let history: Vec<f32> = (0..users * len).map(|_| rng.below(20) as f32).collect();
+    let coef: Vec<f32> = (0..users * (k + 1)).map(|_| rng.f64() as f32 * 0.3).collect();
+    let r = b.run("runtime/ar_forecast/b128_l128_k4_h60", || {
+        rt.ar_forecast(&history, &coef, users, len).unwrap()
+    });
+    r.report();
+    println!(
+        "  -> {:.1} us/user for a 60-step forecast",
+        r.median_ns() / 1e3 / users as f64
+    );
+}

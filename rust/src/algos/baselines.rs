@@ -1,0 +1,243 @@
+//! Benchmark strategies from Sec. VII-B:
+//!
+//! * **All-on-demand** — never reserve (the prevalent practice),
+//! * **All-reserved** — keep enough active reservations to cover demand,
+//! * **Separate** — the Bahncard extension of Sec. II-D: split demand into
+//!   per-level *virtual users*, each running its own single-instance
+//!   Algorithm-1 (`A_β`) without sharing reservations. Its inefficiency —
+//!   no time-multiplexing across levels — is exactly what motivates the
+//!   paper's joint algorithm.
+
+use super::window::WindowScan;
+use super::{Decision, Policy, ResQueue};
+use crate::pricing::Pricing;
+
+/// Never reserve; serve everything on demand.
+#[derive(Debug, Clone, Default)]
+pub struct AllOnDemand;
+
+impl AllOnDemand {
+    pub fn new() -> AllOnDemand {
+        AllOnDemand
+    }
+}
+
+impl Policy for AllOnDemand {
+    fn name(&self) -> String {
+        "All-on-demand".to_string()
+    }
+
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision {
+        Decision { reserve: 0, on_demand: demand }
+    }
+}
+
+/// Reserve whatever active coverage is missing; never use on-demand.
+#[derive(Debug, Clone)]
+pub struct AllReserved {
+    pricing: Pricing,
+    cover: ResQueue,
+    t: usize,
+}
+
+impl AllReserved {
+    pub fn new(pricing: Pricing) -> AllReserved {
+        AllReserved { pricing, cover: ResQueue::default(), t: 0 }
+    }
+}
+
+impl Policy for AllReserved {
+    fn name(&self) -> String {
+        "All-reserved".to_string()
+    }
+
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision {
+        let t = self.t;
+        self.t += 1;
+        let active = self.cover.active_at(t, self.pricing.tau);
+        let reserve = demand.saturating_sub(active);
+        for _ in 0..reserve {
+            self.cover.push(t);
+        }
+        Decision { reserve, on_demand: 0 }
+    }
+}
+
+/// Per-level state of one virtual user running single-instance `A_β`.
+#[derive(Debug, Clone)]
+struct Level {
+    scan: WindowScan,
+    cover: ResQueue,
+    scan_res: std::collections::VecDeque<usize>,
+}
+
+impl Level {
+    fn new() -> Level {
+        Level { scan: WindowScan::new(), cover: ResQueue::default(), scan_res: std::collections::VecDeque::new() }
+    }
+}
+
+/// The Sec. II-D Bahncard extension: virtual user `k` sees demand
+/// `I(d_t ≥ k)` and reserves independently; reservations are never shared
+/// across levels.
+pub struct Separate {
+    pricing: Pricing,
+    levels: Vec<Level>,
+    t: usize,
+}
+
+impl Separate {
+    pub fn new(pricing: Pricing) -> Separate {
+        Separate { pricing, levels: Vec::new(), t: 0 }
+    }
+
+    fn step_level(level: &mut Level, t: usize, demand01: u32, pricing: &Pricing) -> Decision {
+        let tau = pricing.tau;
+        let beta = pricing.beta();
+        level.scan.expire_before((t + 1).saturating_sub(tau));
+        // x at insertion = reservations of THIS virtual user within range
+        while matches!(level.scan_res.front(), Some(&rt) if rt + tau <= t) {
+            level.scan_res.pop_front();
+        }
+        let x_ins = level.scan_res.len() as u32;
+        level.scan.insert(t, demand01, x_ins);
+        let mut reserve = 0u32;
+        while pricing.p * level.scan.violations() as f64 > beta + 1e-12 {
+            level.scan.reserve();
+            level.cover.push(t);
+            level.scan_res.push_back(t);
+            reserve += 1;
+        }
+        let covered = level.cover.active_at(t, tau);
+        Decision { reserve, on_demand: demand01.saturating_sub(covered.min(demand01)) }
+    }
+}
+
+impl Policy for Separate {
+    fn name(&self) -> String {
+        "Separate (Bahncard ext.)".to_string()
+    }
+
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision {
+        let t = self.t;
+        self.t += 1;
+        // Lazily create levels up to the highest demand seen.
+        while self.levels.len() < demand as usize {
+            self.levels.push(Level::new());
+        }
+        let mut total = Decision::default();
+        for (k, level) in self.levels.iter_mut().enumerate() {
+            let d_k = u32::from((k as u32) < demand); // level k+1 active iff d_t >= k+1
+            // Perf (EXPERIMENTS.md §Perf L3-2): idle levels — no demand now
+            // and no pending violations — cannot change any output this
+            // slot, and their lazy expiry is safe to defer: violations only
+            // *leave* the window with time, so a skipped level's V can
+            // only be an over-estimate the next time it is touched, which
+            // we fix by expiring before reading. Skipping turns the per-
+            // slot cost from O(peak demand) to O(d_t + hot levels).
+            if d_k == 0 && level.scan.violations() == 0 {
+                continue;
+            }
+            let dec = Self::step_level(level, t, d_k, &self.pricing);
+            total.reserve += dec.reserve;
+            total.on_demand += dec.on_demand;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::Ledger;
+
+    fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> crate::ledger::CostReport {
+        let mut ledger = Ledger::new(pricing);
+        for &d in demands {
+            let dec = policy.decide(d, &[]);
+            ledger.bill_slot(d, dec.reserve, dec.on_demand).unwrap();
+        }
+        ledger.report()
+    }
+
+    #[test]
+    fn all_on_demand_cost_is_ps() {
+        let pricing = Pricing::normalized(0.1, 0.5, 5);
+        let demands = [2u32, 0, 3, 1];
+        let r = run(&mut AllOnDemand::new(), &demands, pricing);
+        assert!((r.total - 0.1 * 6.0).abs() < 1e-12);
+        assert_eq!(r.reservations, 0);
+    }
+
+    #[test]
+    fn all_reserved_never_on_demand() {
+        let pricing = Pricing::normalized(0.1, 0.5, 3);
+        let demands = [1u32, 2, 1, 3, 0, 2];
+        let r = run(&mut AllReserved::new(pricing), &demands, pricing);
+        assert_eq!(r.on_demand_slots, 0);
+        assert!(r.reservations >= 3);
+        assert!(r.identity_holds(&pricing, 1e-9));
+    }
+
+    #[test]
+    fn all_reserved_renews_after_expiry() {
+        let pricing = Pricing::normalized(0.1, 0.5, 2);
+        let demands = [1u32, 0, 0, 1];
+        let r = run(&mut AllReserved::new(pricing), &demands, pricing);
+        // reservation at t=0 expires before t=3 -> must reserve again
+        assert_eq!(r.reservations, 2);
+    }
+
+    #[test]
+    fn separate_reserves_per_level_without_multiplexing() {
+        // Demand alternates between levels: a joint strategy could serve
+        // both phases with the reservations of the first, Separate cannot.
+        // Phase 1: d=1 long enough to trigger level-1 reservation.
+        // Phase 2: d=1 continues — but now served by level-1's reservation.
+        // Compare against a pattern where the *level* shifts: d=2 bursts
+        // force level-2 to pay separately even though level-1's reserved
+        // instance sits idle half the time.
+        let pricing = Pricing::normalized(0.1, 0.0, 60); // beta=1: 11 violations to reserve
+        let mut demands = Vec::new();
+        // 15 slots at d=1 -> level 1 reserves
+        demands.extend(vec![1u32; 15]);
+        // 15 slots at d=0 (level-1 instance idle)
+        demands.extend(vec![0u32; 15]);
+        // 15 slots at d=1 again — joint would reuse, and so does Separate's
+        // level 1 (same level). Now push demand to level 2:
+        demands.extend(vec![2u32; 15]);
+        let rsep = run(&mut Separate::new(pricing), &demands, pricing);
+        let mut joint = super::super::deterministic::Deterministic::online(pricing);
+        let rjoint = run(&mut joint, &demands, pricing);
+        assert!(rsep.total >= rjoint.total,
+            "separate {} should cost at least joint {}", rsep.total, rjoint.total);
+    }
+
+    #[test]
+    fn separate_on_single_instance_demand_matches_deterministic() {
+        // For d_t <= 1 the problem reduces to the Bahncard problem and
+        // Separate == Algorithm 1 exactly.
+        use crate::util::rng::Rng;
+        let pricing = Pricing::normalized(0.15, 0.3, 8);
+        let mut rng = Rng::new(21);
+        for _ in 0..10 {
+            let demands: Vec<u32> = (0..120).map(|_| u32::from(rng.chance(0.4))).collect();
+            let rsep = run(&mut Separate::new(pricing), &demands, pricing);
+            let mut det = super::super::deterministic::Deterministic::online(pricing);
+            let rdet = run(&mut det, &demands, pricing);
+            assert!((rsep.total - rdet.total).abs() < 1e-9,
+                "sep={} det={} demands={demands:?}", rsep.total, rdet.total);
+        }
+    }
+
+    #[test]
+    fn separate_coverage_feasible_on_random_demand() {
+        use crate::util::rng::Rng;
+        let pricing = Pricing::normalized(0.2, 0.2, 6);
+        let mut rng = Rng::new(33);
+        let demands: Vec<u32> = (0..300).map(|_| rng.below(5) as u32).collect();
+        // bill_slot panics on infeasible decisions
+        let r = run(&mut Separate::new(pricing), &demands, pricing);
+        assert!(r.identity_holds(&pricing, 1e-9));
+    }
+}

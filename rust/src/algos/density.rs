@@ -1,0 +1,156 @@
+//! The randomized algorithm's threshold distribution — Eq. (24):
+//!
+//! ```text
+//! f(z) = (1−α)·e^{(1−α)z} / (e−1+α)          for z ∈ [0, β)
+//!        + Dirac(z−β) · α/(e−1+α)            (an atom at z = β)
+//! ```
+//!
+//! The continuous part integrates to `(e−1)/(e−1+α)` and the atom carries
+//! the remaining `α/(e−1+α)` — a *discontinuous* density, which the paper
+//! notes is essential: the usual continuous `e^z/(e−1)` choice from
+//! ski-rental/TCP-ack (its `α = 0` special case) is not optimal here.
+
+use crate::pricing::Pricing;
+use crate::util::rng::Rng;
+
+/// Probability that the draw lands exactly on the atom `z = β`.
+pub fn atom_mass(alpha: f64) -> f64 {
+    alpha / (std::f64::consts::E - 1.0 + alpha)
+}
+
+/// Continuous part of the density on `[0, β)`.
+pub fn pdf_continuous(alpha: f64, z: f64) -> f64 {
+    let beta = 1.0 / (1.0 - alpha);
+    if !(0.0..beta).contains(&z) {
+        return 0.0;
+    }
+    (1.0 - alpha) * ((1.0 - alpha) * z).exp() / (std::f64::consts::E - 1.0 + alpha)
+}
+
+/// CDF `F(z) = P[Z ≤ z]` including the atom at `β`.
+pub fn cdf(alpha: f64, z: f64) -> f64 {
+    let beta = 1.0 / (1.0 - alpha);
+    if z < 0.0 {
+        0.0
+    } else if z < beta {
+        (((1.0 - alpha) * z).exp() - 1.0) / (std::f64::consts::E - 1.0 + alpha)
+    } else {
+        1.0
+    }
+}
+
+/// Draw a threshold `z ∈ [0, β]` according to Eq. (24) by inverse CDF:
+/// `u < (e−1)/(e−1+α)` maps through `z = ln(1 + u(e−1+α))/(1−α)`;
+/// larger `u` hits the atom at `β`.
+///
+/// `alpha = 1` degenerates (β = ∞, reserving never helps); we return
+/// `+inf`, which makes `A_z` never reserve — the optimal behaviour there.
+pub fn sample_z(pricing: &Pricing, rng: &mut Rng) -> f64 {
+    let alpha = pricing.alpha;
+    if alpha >= 1.0 {
+        return f64::INFINITY;
+    }
+    let e = std::f64::consts::E;
+    let u = rng.f64();
+    if u >= (e - 1.0) / (e - 1.0 + alpha) {
+        pricing.beta()
+    } else {
+        (1.0 + u * (e - 1.0 + alpha)).ln() / (1.0 - alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn continuous_mass_plus_atom_is_one() {
+        for &alpha in &[0.0, 0.2, 0.4875, 0.8, 0.99] {
+            let beta = 1.0 / (1.0 - alpha);
+            // numeric integral of the continuous part
+            let n = 20_000;
+            let h = beta / n as f64;
+            let integral: f64 = (0..n)
+                .map(|i| pdf_continuous(alpha, (i as f64 + 0.5) * h) * h)
+                .sum();
+            let total = integral + atom_mass(alpha);
+            assert!((total - 1.0).abs() < 1e-4, "alpha={alpha} total={total}");
+        }
+    }
+
+    #[test]
+    fn alpha_zero_matches_classic_ski_rental_density() {
+        // f(z) = e^z/(e-1) on [0,1), no atom.
+        assert!(atom_mass(0.0) < 1e-12);
+        let e = std::f64::consts::E;
+        for &z in &[0.0f64, 0.3, 0.7, 0.99] {
+            let expect = z.exp() / (e - 1.0);
+            assert!((pdf_continuous(0.0, z) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_reaches_one() {
+        let alpha = 0.4875;
+        let beta = 1.0 / (1.0 - alpha);
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let z = beta * i as f64 / 100.0;
+            let c = cdf(alpha, z);
+            assert!(c >= prev);
+            prev = c;
+        }
+        assert!((cdf(alpha, beta) - 1.0).abs() < 1e-12);
+        // just below beta, the atom is missing:
+        let just_below = cdf(alpha, beta * (1.0 - 1e-9));
+        assert!((just_below - (1.0 - atom_mass(alpha))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampler_matches_cdf() {
+        use crate::util::rng::Rng;
+        let pricing = Pricing::normalized(0.01, 0.4875, 100);
+        let mut rng = Rng::new(123);
+        let n = 200_000;
+        let beta = pricing.beta();
+        let mut at_beta = 0usize;
+        let mut below_half_beta = 0usize;
+        for _ in 0..n {
+            let z = sample_z(&pricing, &mut rng);
+            assert!((0.0..=beta + 1e-12).contains(&z));
+            if (z - beta).abs() < 1e-12 {
+                at_beta += 1;
+            }
+            if z < beta / 2.0 {
+                below_half_beta += 1;
+            }
+        }
+        let atom_emp = at_beta as f64 / n as f64;
+        assert!((atom_emp - atom_mass(0.4875)).abs() < 0.01, "atom {atom_emp}");
+        let cdf_half = cdf(0.4875, beta / 2.0);
+        let emp_half = below_half_beta as f64 / n as f64;
+        assert!((emp_half - cdf_half).abs() < 0.01, "half {emp_half} vs {cdf_half}");
+    }
+
+    #[test]
+    fn alpha_one_samples_infinity() {
+        let pricing = Pricing::normalized(0.01, 1.0, 100);
+        let mut rng = Rng::new(5);
+        assert!(sample_z(&pricing, &mut rng).is_infinite());
+    }
+
+    #[test]
+    fn expected_z_increases_with_alpha() {
+        // Larger discount -> more conservative thresholds on average.
+        use crate::util::rng::Rng;
+        let mut means = Vec::new();
+        for &alpha in &[0.1, 0.5, 0.9] {
+            let pricing = Pricing::normalized(0.01, alpha, 100);
+            let mut rng = Rng::new(9);
+            let n = 50_000;
+            let m: f64 = (0..n).map(|_| sample_z(&pricing, &mut rng)).sum::<f64>() / n as f64;
+            means.push(m);
+        }
+        assert!(means[0] < means[1] && means[1] < means[2], "{means:?}");
+    }
+}

@@ -1,0 +1,340 @@
+//! The deterministic online algorithm — Algorithm 1 (`A_β`), its threshold
+//! family `A_z` (Sec. V-A), and the prediction-window variant `A^w_z`
+//! (Algorithm 3). One implementation covers all of them:
+//!
+//! * `z = β`, `w = 0`  → Algorithm 1, `(2−α)`-competitive (Prop. 1),
+//! * `z ∈ [0, β]`, `w = 0` → the family the randomized algorithm draws from,
+//! * `w > 0` → Algorithm 3 (`A^w_z`), checking the window
+//!   `[t+w−τ+1, t+w]` and additionally requiring `x_t < d_t` before each
+//!   reservation.
+//!
+//! The break-even scan is O(1) amortized per slot via [`WindowScan`]
+//! (see that module for the uniform-increment argument).
+
+use super::window::WindowScan;
+use super::{Decision, Policy, ResQueue};
+use crate::pricing::Pricing;
+
+/// Deterministic online reservation policy.
+#[derive(Debug, Clone)]
+pub struct Deterministic {
+    pricing: Pricing,
+    /// Reservation threshold `z ∈ [0, β]`; `z = β` is Algorithm 1.
+    z: f64,
+    /// Prediction window `w < τ`; 0 = purely online.
+    w: usize,
+    scan: WindowScan,
+    /// Actual reservations for coverage accounting (`x_t` in line 9).
+    cover: ResQueue,
+    /// Reservations counted for the scan-window left edge `t+w−τ+1`
+    /// (a reservation influences slot `i` iff `|t'−i| ≤ τ−1`).
+    scan_res: std::collections::VecDeque<usize>,
+    /// Next slot index to be fed (slots are implicit and consecutive).
+    t: usize,
+    /// Next window slot index to insert into the scan (`t + w` ahead).
+    next_scan_slot: usize,
+}
+
+impl Deterministic {
+    /// Algorithm 1: `z = β`, no prediction window.
+    pub fn online(pricing: Pricing) -> Deterministic {
+        Deterministic::with_threshold(pricing, pricing.beta())
+    }
+
+    /// Family member `A_z` (Sec. V-A).
+    pub fn with_threshold(pricing: Pricing, z: f64) -> Deterministic {
+        Deterministic::new(pricing, z, 0)
+    }
+
+    /// Algorithm 3: `A^w_β` with prediction window `w` (must satisfy w < τ).
+    pub fn with_window(pricing: Pricing, w: usize) -> Deterministic {
+        Deterministic::new(pricing, pricing.beta(), w)
+    }
+
+    /// Fully general `A^w_z`.
+    pub fn new(pricing: Pricing, z: f64, w: usize) -> Deterministic {
+        assert!(z >= 0.0, "threshold must be non-negative");
+        assert!(w < pricing.tau, "prediction window must be shorter than the reservation period");
+        Deterministic {
+            pricing,
+            z,
+            w,
+            scan: WindowScan::new(),
+            cover: ResQueue::default(),
+            scan_res: std::collections::VecDeque::new(),
+            t: 0,
+            next_scan_slot: 0,
+        }
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.z
+    }
+
+    /// Bookkeeping count `x_i` at insertion of window slot `i`: reservations
+    /// whose influence range `[t'−τ+1, t'+τ−1]` covers `i`, i.e. those made
+    /// at `t' ≥ i−τ+1` (reservation times never exceed the current `t ≤ i`).
+    fn x_at_insert(&mut self, slot: usize) -> u32 {
+        let tau = self.pricing.tau;
+        while matches!(self.scan_res.front(), Some(&rt) if rt + tau <= slot) {
+            self.scan_res.pop_front();
+        }
+        self.scan_res.len() as u32
+    }
+
+    fn record_reservation(&mut self, t: usize) {
+        self.scan.reserve();
+        self.cover.push(t);
+        self.scan_res.push_back(t);
+    }
+}
+
+impl Policy for Deterministic {
+    fn name(&self) -> String {
+        let beta = self.pricing.beta();
+        let kind = if (self.z - beta).abs() < 1e-12 { "beta".to_string() } else { format!("z={:.3}", self.z) };
+        if self.w == 0 {
+            format!("Deterministic({kind})")
+        } else {
+            format!("Deterministic({kind},w={})", self.w)
+        }
+    }
+
+    fn window(&self) -> usize {
+        self.w
+    }
+
+    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision {
+        let t = self.t;
+        self.t += 1;
+        let tau = self.pricing.tau;
+        let p = self.pricing.p;
+
+        // Slide the check window to [t+w−τ+1, t+w].
+        let right = t + self.w;
+        self.scan.expire_before((right + 1).saturating_sub(tau));
+
+        // Insert newly visible slots up to t+w. At t=0 this inserts slots
+        // 0..=w in one go; afterwards exactly one slot per step (unless the
+        // provided horizon is shorter near the trace tail).
+        let visible_end = t + self.w.min(future.len());
+        while self.next_scan_slot <= visible_end {
+            let s = self.next_scan_slot;
+            let d_s = if s == t { demand } else { future[s - t - 1] };
+            let x_ins = self.x_at_insert(s);
+            self.scan.insert(s, d_s, x_ins);
+            self.next_scan_slot += 1;
+        }
+
+        // Reserve while the window shows unjustified on-demand use.
+        // Strict inequality `p·V > z` as in line 4 / line 3 of the paper;
+        // the epsilon guards float dust when z is an exact multiple of p.
+        let mut reserve = 0u32;
+        loop {
+            let violation_cost = p * self.scan.violations() as f64;
+            if violation_cost <= self.z + 1e-12 {
+                break;
+            }
+            // Algorithm 3's extra guard: with a prediction window, only
+            // reserve while current demand exceeds current coverage.
+            if self.w > 0 && self.cover.active_at(t, tau) >= demand {
+                break;
+            }
+            self.record_reservation(t);
+            reserve += 1;
+        }
+
+        // Launch on-demand instances for the uncovered remainder (line 9).
+        let covered = self.cover.active_at(t, tau);
+        let on_demand = demand.saturating_sub(covered);
+        Decision { reserve, on_demand }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::Ledger;
+
+    fn pr(p: f64, alpha: f64, tau: usize) -> Pricing {
+        Pricing::normalized(p, alpha, tau)
+    }
+
+    /// Run a policy over demands, bill through the ledger, return report.
+    fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> crate::ledger::CostReport {
+        let w = policy.window();
+        let mut ledger = Ledger::new(pricing);
+        for t in 0..demands.len() {
+            let hi = (t + 1 + w).min(demands.len());
+            let dec = policy.decide(demands[t], &demands[t + 1..hi]);
+            ledger.bill_slot(demands[t], dec.reserve, dec.on_demand).unwrap();
+        }
+        ledger.report()
+    }
+
+    #[test]
+    fn never_reserves_for_sporadic_cheap_demand() {
+        // One demand pulse: on-demand cost p << beta, so A_beta never reserves.
+        let pricing = pr(0.01, 0.5, 10);
+        let mut a = Deterministic::online(pricing);
+        let mut demands = vec![0u32; 30];
+        demands[5] = 1;
+        let r = run(&mut a, &demands, pricing);
+        assert_eq!(r.reservations, 0);
+        assert!((r.total - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reserves_once_breakeven_exceeded() {
+        // Constant demand 1: window on-demand cost grows to > beta = 2 after
+        // ceil(beta/p)+1 = 201 slots; tau large enough to hold the window.
+        let pricing = pr(0.01, 0.5, 1000);
+        let mut a = Deterministic::online(pricing);
+        let demands = vec![1u32; 400];
+        let r = run(&mut a, &demands, pricing);
+        assert_eq!(r.reservations, 1);
+        // reservation happens at the first slot where 201 violations seen:
+        // slots 0..=200 -> reserve at t=200, on-demand for 0..200
+        assert_eq!(r.on_demand_slots, 200);
+        assert_eq!(r.reserved_slots, 200);
+    }
+
+    #[test]
+    fn multi_instance_demand_reserves_multiple() {
+        let pricing = pr(0.01, 0.5, 1000);
+        let mut a = Deterministic::online(pricing);
+        let demands = vec![3u32; 500];
+        let r = run(&mut a, &demands, pricing);
+        // each demand level accumulates violations; all three eventually reserved
+        assert_eq!(r.reservations, 3);
+    }
+
+    #[test]
+    fn phantom_prevents_double_counting() {
+        // After a reservation compensates a window, the same history must not
+        // trigger another reservation. Pulse demand that stops right after
+        // the break-even point: exactly one reservation.
+        let pricing = pr(0.1, 0.0, 100); // beta = 1 -> 11 violations needed
+        let mut demands = vec![1u32; 11];
+        demands.extend(std::iter::repeat(0).take(50));
+        let mut a = Deterministic::online(pricing);
+        let r = run(&mut a, &demands, pricing);
+        assert_eq!(r.reservations, 1);
+    }
+
+    #[test]
+    fn z_zero_reserves_immediately() {
+        let pricing = pr(0.01, 0.5, 10);
+        let mut a = Deterministic::with_threshold(pricing, 0.0);
+        let demands = vec![1u32; 5];
+        let r = run(&mut a, &demands, pricing);
+        assert_eq!(r.reservations, 1);
+        assert_eq!(r.on_demand_slots, 0);
+    }
+
+    #[test]
+    fn matches_literal_algorithm1() {
+        // Cross-check the optimized implementation against a literal
+        // transcription of Algorithm 1 with explicit x arrays.
+        use crate::algos::window::NaiveScan;
+        use crate::util::rng::Rng;
+
+        fn literal_a_z(demands: &[u32], pricing: &Pricing, z: f64) -> Vec<Decision> {
+            let tau = pricing.tau;
+            let p = pricing.p;
+            let mut naive = NaiveScan::new(tau);
+            let mut res_times: Vec<usize> = Vec::new();
+            let mut out = Vec::new();
+            for (t, &d) in demands.iter().enumerate() {
+                naive.insert(d);
+                let mut reserve = 0u32;
+                while p * naive.violations(t) as f64 > z + 1e-12 {
+                    naive.reserve(t);
+                    res_times.push(t);
+                    reserve += 1;
+                }
+                let active = res_times.iter().filter(|&&rt| rt + tau > t).count() as u32;
+                out.push(Decision { reserve, on_demand: d.saturating_sub(active) });
+            }
+            out
+        }
+
+        let mut rng = Rng::new(77);
+        for case in 0..40 {
+            let tau = 2 + case % 6;
+            let pricing = pr(0.05 + 0.1 * rng.f64(), rng.f64() * 0.9, tau);
+            let z = rng.f64() * pricing.beta();
+            let demands: Vec<u32> = (0..60).map(|_| rng.below(4) as u32).collect();
+            let expected = literal_a_z(&demands, &pricing, z);
+            let mut a = Deterministic::with_threshold(pricing, z);
+            for (t, &d) in demands.iter().enumerate() {
+                let got = a.decide(d, &[]);
+                assert_eq!(got, expected[t], "case={case} t={t} tau={tau} z={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn prediction_window_reserves_earlier() {
+        // With w: the scan sees future demand and reserves as soon as the
+        // (history+future) window crosses beta AND current demand is uncovered.
+        let pricing = pr(0.1, 0.0, 100); // beta = 1 -> >10 violations
+        let demands = vec![1u32; 60];
+        let mut online = Deterministic::online(pricing);
+        let mut pred = Deterministic::with_window(pricing, 20);
+        let ron = run(&mut online, &demands, pricing);
+        let rpred = run(&mut pred, &demands, pricing);
+        assert_eq!(ron.reservations, 1);
+        assert_eq!(rpred.reservations, 1);
+        // prediction-window variant stops paying on-demand sooner
+        assert!(rpred.on_demand_slots < ron.on_demand_slots,
+            "pred od={} online od={}", rpred.on_demand_slots, ron.on_demand_slots);
+        assert!(rpred.total <= ron.total);
+    }
+
+    #[test]
+    fn prediction_guard_avoids_idle_reservation() {
+        // Heavy future demand but zero current demand: A^w_z must NOT
+        // reserve until demand actually arrives (guard x_t < d_t).
+        let pricing = pr(0.1, 0.0, 100);
+        let mut demands = vec![0u32; 30];
+        demands.extend(vec![1u32; 30]);
+        let mut pred = Deterministic::with_window(pricing, 25);
+        let mut first_reserve_t = None;
+        for (t, &d) in demands.iter().enumerate() {
+            let hi = (t + 1 + 25).min(demands.len());
+            let dec = pred.decide(d, &demands[t + 1..hi]);
+            if dec.reserve > 0 && first_reserve_t.is_none() {
+                first_reserve_t = Some(t);
+            }
+        }
+        // must not reserve during the zero-demand prefix
+        assert!(first_reserve_t.unwrap() >= 30, "reserved at {:?}", first_reserve_t);
+    }
+
+    #[test]
+    fn coverage_invariant_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let tau = 3 + rng.below(8) as usize;
+            let pricing = pr(0.02 + rng.f64() * 0.2, rng.f64(), tau);
+            let demands: Vec<u32> = (0..200).map(|_| rng.below(6) as u32).collect();
+            let w = rng.below(tau as u64 - 1) as usize;
+            let mut a = Deterministic::new(pricing, rng.f64() * pricing.beta(), w);
+            // Ledger::bill_slot errors if coverage is violated.
+            let _ = run(&mut a, &demands, pricing);
+        }
+    }
+
+    #[test]
+    fn tau_one_degenerates_to_slotwise_choice() {
+        // tau=1: a reservation covers a single slot; break-even beta=2 with
+        // p=0.1 can never be exceeded by one slot (p < beta) -> never reserve.
+        let pricing = pr(0.1, 0.5, 1);
+        let mut a = Deterministic::online(pricing);
+        let demands = vec![5u32; 50];
+        let r = run(&mut a, &demands, pricing);
+        assert_eq!(r.reservations, 0);
+    }
+}

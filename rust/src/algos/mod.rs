@@ -1,0 +1,110 @@
+//! Instance-acquisition policies: the paper's online algorithms, the
+//! benchmark baselines, and the offline optimum.
+//!
+//! | paper | here |
+//! |---|---|
+//! | Algorithm 1 (`A_β`) | [`deterministic::Deterministic`] with `z = β` |
+//! | family `A_z` (Sec. V-A) | [`deterministic::Deterministic`] with custom `z` |
+//! | Algorithm 2 (randomized) | [`randomized::Randomized`] |
+//! | Algorithm 3 (`A^w_β`) | [`deterministic::Deterministic`] with window `w` |
+//! | Algorithm 4 (randomized + window) | [`randomized::Randomized`] with window `w` |
+//! | All-on-demand / All-reserved / Separate (Sec. VII-B) | [`baselines`] |
+//! | offline OPT (Sec. III) | [`offline`] |
+
+pub mod baselines;
+pub mod density;
+pub mod deterministic;
+pub mod offline;
+pub mod randomized;
+pub mod multislope;
+pub mod window;
+
+use crate::pricing::Pricing;
+
+/// One slot's purchase decision: reserve `reserve` new instances now and run
+/// `on_demand` instances on demand; the rest of the demand runs on active
+/// reservations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Decision {
+    pub reserve: u32,
+    pub on_demand: u32,
+}
+
+/// An online instance-acquisition policy. Drive it slot by slot; slots are
+/// implicit and must be fed consecutively from 0.
+///
+/// `future` carries the predicted demands `d̂_{t+1}, …, d̂_{t+w}` for
+/// prediction-window policies (Sec. VI); online policies ignore it. It is an
+/// error to shrink the prediction horizon mid-run except at the trace tail.
+pub trait Policy: Send {
+    /// Human-readable name used in reports.
+    fn name(&self) -> String;
+    /// Decide purchases for the next slot given its demand.
+    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision;
+    /// Prediction window length `w` this policy wants (0 for online).
+    fn window(&self) -> usize {
+        0
+    }
+}
+
+/// Helper shared by policies: active *actual* reservations bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct ResQueue {
+    times: std::collections::VecDeque<usize>,
+}
+
+impl ResQueue {
+    /// Count of reservations still active at slot `t` (made in `[t−τ+1, t]`),
+    /// dropping expired entries.
+    fn active_at(&mut self, t: usize, tau: usize) -> u32 {
+        while matches!(self.times.front(), Some(&rt) if rt + tau <= t) {
+            self.times.pop_front();
+        }
+        self.times.len() as u32
+    }
+
+    fn push(&mut self, t: usize) {
+        self.times.push_back(t);
+    }
+}
+
+/// Construct every policy evaluated in Sec. VII, in the paper's order.
+/// `seed` feeds the randomized policy's threshold draw.
+pub fn benchmark_suite(pricing: &Pricing, seed: u64) -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(baselines::AllOnDemand::new()),
+        Box::new(baselines::AllReserved::new(*pricing)),
+        Box::new(baselines::Separate::new(*pricing)),
+        Box::new(deterministic::Deterministic::online(*pricing)),
+        Box::new(randomized::Randomized::online(*pricing, seed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn res_queue_expiry() {
+        let mut q = ResQueue::default();
+        q.push(0);
+        q.push(2);
+        assert_eq!(q.active_at(2, 3), 2); // res@0 active t=0,1,2
+        assert_eq!(q.active_at(3, 3), 1); // res@0 expired
+        assert_eq!(q.active_at(4, 3), 1);
+        assert_eq!(q.active_at(5, 3), 0);
+    }
+
+    #[test]
+    fn suite_has_five_policies() {
+        let pr = Pricing::normalized(0.01, 0.5, 10);
+        let suite = benchmark_suite(&pr, 1);
+        assert_eq!(suite.len(), 5);
+        let names: Vec<String> = suite.iter().map(|p| p.name()).collect();
+        assert!(names.iter().any(|n| n.contains("on-demand")));
+        assert!(names.iter().any(|n| n.contains("reserved")));
+        assert!(names.iter().any(|n| n.contains("Separate")));
+        assert!(names.iter().any(|n| n.contains("Deterministic")));
+        assert!(names.iter().any(|n| n.contains("Randomized")));
+    }
+}

@@ -1,0 +1,140 @@
+//! The randomized online algorithm — Algorithm 2 (and Algorithm 4 with a
+//! prediction window): draw `z ∈ [0, β]` from the density of Eq. (24) and
+//! run `A_z` (resp. `A^w_z`). `e/(e−1+α)`-competitive in expectation
+//! (Proposition 3), the best possible for randomized algorithms (Prop. 4).
+
+use super::density::sample_z;
+use super::deterministic::Deterministic;
+use super::{Decision, Policy};
+use crate::pricing::Pricing;
+use crate::util::rng::Rng;
+
+/// Randomized reservation policy: a single draw of `z` at construction,
+/// then deterministic behaviour — the randomness is over algorithms, not
+/// over per-slot coin flips (Sec. V-A).
+pub struct Randomized {
+    inner: Deterministic,
+    z: f64,
+    seed: u64,
+}
+
+impl Randomized {
+    /// Algorithm 2.
+    pub fn online(pricing: Pricing, seed: u64) -> Randomized {
+        Randomized::with_window(pricing, 0, seed)
+    }
+
+    /// Algorithm 4: randomized with prediction window `w`.
+    pub fn with_window(pricing: Pricing, w: usize, seed: u64) -> Randomized {
+        let mut rng = Rng::new(seed);
+        let z = sample_z(&pricing, &mut rng);
+        // alpha = 1 draws z = +inf: A_z then never reserves, which is
+        // optimal (reservation carries no discount). Clamp the threshold fed
+        // to Deterministic to a finite sentinel larger than any violation
+        // cost can reach in practice while keeping the same behaviour.
+        let z_eff = if z.is_finite() { z } else { f64::MAX / 4.0 };
+        Randomized { inner: Deterministic::new(pricing, z_eff, w), z, seed }
+    }
+
+    /// The drawn threshold (for analysis / logging).
+    pub fn threshold(&self) -> f64 {
+        self.z
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl Policy for Randomized {
+    fn name(&self) -> String {
+        if self.inner.window() == 0 {
+            "Randomized".to_string()
+        } else {
+            format!("Randomized(w={})", self.inner.window())
+        }
+    }
+
+    fn window(&self) -> usize {
+        self.inner.window()
+    }
+
+    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision {
+        self.inner.decide(demand, future)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::Ledger;
+
+    fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> f64 {
+        let w = policy.window();
+        let mut ledger = Ledger::new(pricing);
+        for t in 0..demands.len() {
+            let hi = (t + 1 + w).min(demands.len());
+            let dec = policy.decide(demands[t], &demands[t + 1..hi]);
+            ledger.bill_slot(demands[t], dec.reserve, dec.on_demand).unwrap();
+        }
+        ledger.report().total
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pricing = Pricing::normalized(0.05, 0.4875, 20);
+        let demands: Vec<u32> = (0..100).map(|i| (i % 3) as u32).collect();
+        let c1 = run(&mut Randomized::online(pricing, 7), &demands, pricing);
+        let c2 = run(&mut Randomized::online(pricing, 7), &demands, pricing);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn different_seeds_give_different_thresholds() {
+        let pricing = Pricing::normalized(0.05, 0.4875, 20);
+        let zs: Vec<f64> = (0..10).map(|s| Randomized::online(pricing, s).threshold()).collect();
+        let distinct = zs.iter().filter(|a| zs.iter().filter(|b| (**a - **b).abs() < 1e-12).count() == 1).count();
+        assert!(distinct >= 5, "{zs:?}");
+    }
+
+    #[test]
+    fn threshold_always_in_range() {
+        let pricing = Pricing::normalized(0.05, 0.3, 20);
+        for s in 0..200 {
+            let z = Randomized::online(pricing, s).threshold();
+            assert!((0.0..=pricing.beta() + 1e-12).contains(&z));
+        }
+    }
+
+    #[test]
+    fn alpha_one_never_reserves() {
+        let pricing = Pricing::normalized(0.05, 1.0, 20);
+        let demands = vec![3u32; 200];
+        let mut policy = Randomized::online(pricing, 3);
+        let mut ledger = Ledger::new(pricing);
+        for &d in &demands {
+            let dec = policy.decide(d, &[]);
+            assert_eq!(dec.reserve, 0);
+            ledger.bill_slot(d, dec.reserve, dec.on_demand).unwrap();
+        }
+        assert_eq!(ledger.report().reservations, 0);
+    }
+
+    #[test]
+    fn expected_cost_between_extremes() {
+        // For long stable demand, E[C_rand] should be well below
+        // all-on-demand and not far above the reserve-immediately cost.
+        let pricing = Pricing::normalized(0.05, 0.4, 50);
+        let demands = vec![1u32; 300];
+        let n = 200;
+        let mean: f64 = (0..n)
+            .map(|s| run(&mut Randomized::online(pricing, s as u64), &demands, pricing))
+            .sum::<f64>()
+            / n as f64;
+        let all_od = 0.05 * 300.0;
+        // A_0 reserves at t=0 and re-reserves every tau
+        let aggressive = 6.0 + pricing.alpha * 0.05 * 300.0;
+        assert!(mean < all_od, "mean={mean} all_od={all_od}");
+        assert!(mean < 1.5 * aggressive, "mean={mean} aggressive={aggressive}");
+    }
+}

@@ -1,0 +1,255 @@
+//! Sliding-window break-even bookkeeping shared by Algorithms 1 and 3.
+//!
+//! Algorithm 1 checks, at every slot `t`, the on-demand cost
+//! `p · Σ_{i=t−τ+1..t} I(d_i > x_i)` where `x_i` counts actual **and
+//! phantom** reservations. A naive implementation rescans the `τ`-slot
+//! window per step (O(τ) per slot, O(T·τ) total — 365 M operations per user
+//! on the Sec. VII traces). This structure maintains the violation count
+//! incrementally in O(1) amortized per step.
+//!
+//! Key observation: a reservation made at time `t'` increments `x_i` for all
+//! `i ∈ [t'−τ+1, t'+τ−1]` (actual coverage forward, phantom backward —
+//! lines 6–7 of Algorithm 1). Every slot currently inside the check window
+//! is within `τ−1` of the current time, so **each reservation increments
+//! every in-window `x_i` uniformly**. Therefore, storing per slot the value
+//!
+//! ```text
+//! e_i = d_i − x_i(at insertion) + G(at insertion)
+//! ```
+//!
+//! where `G` is the total number of reservations made so far, the current
+//! violation condition `d_i > x_i` is simply `e_i > G`. Since `G` only
+//! grows, a slot that is not violating at insertion can never become
+//! violating — so only violating slots are stored at all.
+
+use std::collections::{HashMap, VecDeque};
+
+/// Incremental tracker of `V = #{i in window : d_i > x_i}`.
+#[derive(Debug, Clone, Default)]
+pub struct WindowScan {
+    /// Total reservations made so far (the uniform offset `G`).
+    g: i64,
+    /// Violating slots in insertion (= time) order: `(slot_index, e)`.
+    /// Entries whose `e <= g` have already been cleared from `v`/`hist`
+    /// and are removed lazily on expiry.
+    viol: VecDeque<(usize, i64)>,
+    /// Histogram of `e` values among *currently counted* violations.
+    hist: HashMap<i64, u32>,
+    /// Current violation count `V`.
+    v: u32,
+}
+
+impl WindowScan {
+    pub fn new() -> WindowScan {
+        WindowScan::default()
+    }
+
+    /// Current violation count `V(t) = Σ_window I(d_i > x_i)`.
+    #[inline]
+    pub fn violations(&self) -> u32 {
+        self.v
+    }
+
+    /// Total reservations recorded.
+    #[inline]
+    pub fn reservations(&self) -> i64 {
+        self.g
+    }
+
+    /// Insert the window's newest slot. `slot` is its time index, `demand`
+    /// its demand, and `x_at_insert` the bookkeeping reservation count
+    /// `x_slot` at insertion time (= number of reservations whose ±(τ−1)
+    /// influence range covers `slot`, i.e. those made at `t' ≥ slot−τ+1`).
+    pub fn insert(&mut self, slot: usize, demand: u32, x_at_insert: u32) {
+        let e = demand as i64 - x_at_insert as i64 + self.g;
+        if e > self.g {
+            self.viol.push_back((slot, e));
+            *self.hist.entry(e).or_insert(0) += 1;
+            self.v += 1;
+        }
+    }
+
+    /// Expire slots with index < `oldest_kept` (the window's left edge).
+    pub fn expire_before(&mut self, oldest_kept: usize) {
+        while matches!(self.viol.front(), Some(&(s, _)) if s < oldest_kept) {
+            let (_, e) = self.viol.pop_front().unwrap();
+            if e > self.g {
+                // still counted as a violation — remove from the count
+                let c = self.hist.get_mut(&e).expect("hist entry for active violation");
+                *c -= 1;
+                if *c == 0 {
+                    self.hist.remove(&e);
+                }
+                self.v -= 1;
+            }
+        }
+    }
+
+    /// Record one new reservation: `x_i += 1` uniformly over the window
+    /// (actual forward coverage + phantom history — Algorithm 1 lines 5–7).
+    pub fn reserve(&mut self) {
+        self.g += 1;
+        if let Some(c) = self.hist.remove(&self.g) {
+            // slots whose excess just reached zero stop violating
+            self.v -= c;
+        }
+    }
+
+    /// Number of slots currently buffered (diagnostics / memory tests).
+    pub fn buffered(&self) -> usize {
+        self.viol.len()
+    }
+}
+
+/// Reference implementation used by tests: the literal Algorithm-1
+/// bookkeeping with an explicit `x` array. O(T·τ) per run.
+#[derive(Debug, Clone)]
+pub struct NaiveScan {
+    /// demand per slot (grows as slots are inserted)
+    d: Vec<u32>,
+    /// bookkeeping reservation count per slot, sized `len + tau` ahead
+    x: Vec<u32>,
+    tau: usize,
+}
+
+impl NaiveScan {
+    pub fn new(tau: usize) -> NaiveScan {
+        NaiveScan { d: Vec::new(), x: Vec::new(), tau }
+    }
+
+    /// Insert next slot's demand (slot index == number of inserts - 1).
+    pub fn insert(&mut self, demand: u32) {
+        self.d.push(demand);
+        if self.x.len() < self.d.len() + self.tau {
+            self.x.resize(self.d.len() + self.tau, 0);
+        }
+    }
+
+    /// Violations over window ending at `end` (inclusive), width tau.
+    pub fn violations(&self, end: usize) -> u32 {
+        let lo = (end + 1).saturating_sub(self.tau);
+        (lo..=end)
+            .filter(|&i| i < self.d.len() && self.d[i] > self.x[i])
+            .count() as u32
+    }
+
+    /// Reserve at time `t`: x_i += 1 for i in [t-tau+1, t+tau-1].
+    pub fn reserve(&mut self, t: usize) {
+        let lo = (t + 1).saturating_sub(self.tau);
+        let hi = t + self.tau - 1;
+        if self.x.len() <= hi {
+            self.x.resize(hi + 1, 0);
+        }
+        for i in lo..=hi {
+            self.x[i] += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Drive WindowScan and NaiveScan side by side with random demands and
+    /// random interleaved reservations; counts must agree at every step.
+    #[test]
+    fn matches_naive_reference() {
+        let mut rng = Rng::new(0xA11CE);
+        for case in 0..50 {
+            let tau = 1 + (case % 7);
+            let t_len = 40;
+            let mut fast = WindowScan::new();
+            let mut naive = NaiveScan::new(tau);
+            let mut res_times: VecDeque<usize> = VecDeque::new();
+            let mut g_total = 0u32;
+            for t in 0..t_len {
+                let d = rng.below(5) as u32;
+                naive.insert(d);
+                // bookkeeping x at insertion = reservations made at
+                // t' >= t - tau + 1  (all are <= t)
+                while matches!(res_times.front(), Some(&rt) if rt + tau <= t) {
+                    res_times.pop_front();
+                }
+                let x_ins = res_times.len() as u32;
+                fast.expire_before((t + 1).saturating_sub(tau));
+                fast.insert(t, d, x_ins);
+                assert_eq!(
+                    fast.violations(),
+                    naive.violations(t),
+                    "insert mismatch case={case} t={t} tau={tau}"
+                );
+                // random reservations
+                let n_res = if rng.chance(0.3) { rng.below(3) as u32 } else { 0 };
+                for _ in 0..n_res {
+                    fast.reserve();
+                    naive.reserve(t);
+                    res_times.push_back(t);
+                    g_total += 1;
+                    assert_eq!(
+                        fast.violations(),
+                        naive.violations(t),
+                        "reserve mismatch case={case} t={t} tau={tau} g={g_total}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nonviolating_slots_are_not_buffered() {
+        let mut w = WindowScan::new();
+        w.insert(0, 3, 5); // covered: d=3 <= x=5
+        w.insert(1, 0, 0); // zero demand
+        assert_eq!(w.buffered(), 0);
+        assert_eq!(w.violations(), 0);
+    }
+
+    #[test]
+    fn reserve_clears_unit_violations() {
+        let mut w = WindowScan::new();
+        w.insert(0, 1, 0); // excess 1
+        w.insert(1, 1, 0); // excess 1
+        w.insert(2, 2, 0); // excess 2
+        assert_eq!(w.violations(), 3);
+        w.reserve(); // all x += 1: slots 0,1 clear, slot 2 still d>x
+        assert_eq!(w.violations(), 1);
+        w.reserve();
+        assert_eq!(w.violations(), 0);
+    }
+
+    #[test]
+    fn expiry_removes_violations() {
+        let mut w = WindowScan::new();
+        w.insert(0, 1, 0);
+        w.insert(1, 1, 0);
+        assert_eq!(w.violations(), 2);
+        w.expire_before(1);
+        assert_eq!(w.violations(), 1);
+        w.expire_before(2);
+        assert_eq!(w.violations(), 0);
+    }
+
+    #[test]
+    fn expiry_of_cleared_violation_is_noop() {
+        let mut w = WindowScan::new();
+        w.insert(0, 1, 0);
+        w.reserve(); // clears it from the count but not the deque
+        assert_eq!(w.violations(), 0);
+        w.expire_before(5); // lazy removal must not underflow
+        assert_eq!(w.violations(), 0);
+        assert_eq!(w.buffered(), 0);
+    }
+
+    #[test]
+    fn insertion_after_reservations_uses_offset() {
+        let mut w = WindowScan::new();
+        w.reserve();
+        w.reserve();
+        // new slot with x_at_insert already counting those 2 reservations
+        w.insert(5, 3, 2); // e = 3 - 2 + 2 = 3 > g=2 -> violation
+        assert_eq!(w.violations(), 1);
+        w.reserve(); // g=3, clears e=3
+        assert_eq!(w.violations(), 0);
+    }
+}

@@ -1,0 +1,132 @@
+//! User classification by demand-fluctuation level (Sec. VII-A, Fig. 4):
+//! the ratio σ/μ of the demand curve determines the group.
+
+use crate::trace::Population;
+use crate::util::stats::Summary;
+
+/// The paper's three user groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Group {
+    /// σ/μ ≥ 5 — highly sporadic, best served on demand.
+    G1Sporadic,
+    /// 1 ≤ σ/μ < 5 — needs an intelligent mixed strategy.
+    G2Medium,
+    /// σ/μ < 1 — stable, best served reserved.
+    G3Stable,
+}
+
+impl Group {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Group::G1Sporadic => "Group 1 (sigma/mu >= 5)",
+            Group::G2Medium => "Group 2 (1 <= sigma/mu < 5)",
+            Group::G3Stable => "Group 3 (sigma/mu < 1)",
+        }
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            Group::G1Sporadic => "G1",
+            Group::G2Medium => "G2",
+            Group::G3Stable => "G3",
+        }
+    }
+
+    pub fn all() -> [Group; 3] {
+        [Group::G1Sporadic, Group::G2Medium, Group::G3Stable]
+    }
+}
+
+/// Classify one user from its demand summary.
+pub fn classify(summary: &Summary) -> Group {
+    let cov = summary.cov();
+    if cov >= 5.0 {
+        Group::G1Sporadic
+    } else if cov >= 1.0 {
+        Group::G2Medium
+    } else {
+        Group::G3Stable
+    }
+}
+
+/// Classification of a whole population: `(group, mean, cov)` per user —
+/// the scatter behind Fig. 4.
+pub fn classify_population(pop: &Population) -> Vec<(u32, Group, f64, f64)> {
+    pop.users
+        .iter()
+        .map(|u| {
+            let s = u.summary();
+            (u.user_id, classify(&s), s.mean, s.cov())
+        })
+        .collect()
+}
+
+/// Group membership counts `(g1, g2, g3)`.
+pub fn group_counts(pop: &Population) -> (usize, usize, usize) {
+    let mut c = (0, 0, 0);
+    for u in &pop.users {
+        match classify(&u.summary()) {
+            Group::G1Sporadic => c.0 += 1,
+            Group::G2Medium => c.1 += 1,
+            Group::G3Stable => c.2 += 1,
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::UserTrace;
+
+    fn summary_of(d: &[u32]) -> Summary {
+        crate::util::stats::summarize_u32(d)
+    }
+
+    #[test]
+    fn boundary_values() {
+        // cov exactly 1 -> group 2; cov exactly 5 -> group 1
+        let s = Summary { n: 2, mean: 1.0, std: 1.0, min: 0.0, max: 2.0 };
+        assert_eq!(classify(&s), Group::G2Medium);
+        let s5 = Summary { n: 2, mean: 1.0, std: 5.0, min: 0.0, max: 6.0 };
+        assert_eq!(classify(&s5), Group::G1Sporadic);
+        let s09 = Summary { n: 2, mean: 1.0, std: 0.99, min: 0.0, max: 2.0 };
+        assert_eq!(classify(&s09), Group::G3Stable);
+    }
+
+    #[test]
+    fn constant_demand_is_stable() {
+        assert_eq!(classify(&summary_of(&[7, 7, 7, 7])), Group::G3Stable);
+    }
+
+    #[test]
+    fn single_spike_is_sporadic() {
+        let mut d = vec![0u32; 1000];
+        d[3] = 100;
+        assert_eq!(classify(&summary_of(&d)), Group::G1Sporadic);
+    }
+
+    #[test]
+    fn zero_demand_is_stable() {
+        // all-zero: cov defined as 0 -> group 3 (degenerate but harmless)
+        assert_eq!(classify(&summary_of(&[0, 0, 0])), Group::G3Stable);
+    }
+
+    #[test]
+    fn population_counts_sum() {
+        let pop = Population {
+            users: vec![
+                UserTrace::new(0, vec![7, 7, 7]),
+                UserTrace::new(1, {
+                    let mut d = vec![0u32; 500];
+                    d[0] = 100;
+                    d
+                }),
+            ],
+        };
+        let (g1, g2, g3) = group_counts(&pop);
+        assert_eq!(g1 + g2 + g3, 2);
+        assert_eq!(g1, 1);
+        assert_eq!(g3, 1);
+    }
+}

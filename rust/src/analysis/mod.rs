@@ -1,0 +1,5 @@
+//! Fleet analytics: user classification (Fig. 4), normalized-cost CDFs
+//! (Fig. 5-7), and plain-text table rendering for the report harnesses.
+
+pub mod classify;
+pub mod report;

@@ -1,0 +1,181 @@
+//! Plain-text rendering of the paper's figures and tables: CDF series
+//! (Fig. 5/6/7), the Fig. 4 scatter, and Table II. The harnesses under
+//! `examples/` and `rust/benches/` print these; CSV export lets external
+//! plotting reproduce the actual figures.
+
+use std::fmt::Write as _;
+
+use crate::util::stats::{ecdf, linspace};
+
+/// A named series of per-user normalized costs.
+#[derive(Debug, Clone)]
+pub struct CostSeries {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+impl CostSeries {
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+}
+
+/// Render a CDF table like Fig. 5: one row per grid point, one column per
+/// algorithm.
+pub fn render_cdf_table(title: &str, series: &[CostSeries], lo: f64, hi: f64, points: usize) -> String {
+    let grid = linspace(lo, hi, points);
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let mut header = format!("{:>10}", "cost");
+    for s in series {
+        header.push_str(&format!(" {:>24}", truncate(&s.name, 24)));
+    }
+    let _ = writeln!(out, "{header}");
+    let cdfs: Vec<Vec<(f64, f64)>> = series.iter().map(|s| ecdf(&s.values, &grid)).collect();
+    for (i, &x) in grid.iter().enumerate() {
+        let mut row = format!("{x:>10.3}");
+        for cdf in &cdfs {
+            row.push_str(&format!(" {:>24.4}", cdf[i].1));
+        }
+        let _ = writeln!(out, "{row}");
+    }
+    out
+}
+
+/// CSV form of the same table (for plotting).
+pub fn cdf_csv(series: &[CostSeries], lo: f64, hi: f64, points: usize) -> String {
+    let grid = linspace(lo, hi, points);
+    let mut out = String::from("cost");
+    for s in series {
+        out.push(',');
+        out.push_str(&s.name.replace(',', ";"));
+    }
+    out.push('\n');
+    let cdfs: Vec<Vec<(f64, f64)>> = series.iter().map(|s| ecdf(&s.values, &grid)).collect();
+    for (i, &x) in grid.iter().enumerate() {
+        let _ = write!(out, "{x}");
+        for cdf in &cdfs {
+            let _ = write!(out, ",{}", cdf[i].1);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render Table II: average normalized cost, rows = algorithms, columns =
+/// (All users, Group 1, Group 2, Group 3).
+pub fn render_table2(rows: &[(String, [f64; 4])]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "TABLE II  AVERAGE COST PERFORMANCE (NORMALIZED TO ALL-ON-DEMAND)");
+    let _ = writeln!(
+        out,
+        "{:<28} {:>10} {:>10} {:>10} {:>10}",
+        "Algorithm", "All users", "Group 1", "Group 2", "Group 3"
+    );
+    for (name, vals) in rows {
+        let _ = writeln!(
+            out,
+            "{:<28} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+            truncate(name, 28),
+            vals[0],
+            vals[1],
+            vals[2],
+            vals[3]
+        );
+    }
+    out
+}
+
+/// ASCII scatter of (mean, cov) pairs on log-x — the Fig. 4 reproduction.
+pub fn render_fig4_scatter(points: &[(f64, f64)], width: usize, height: usize) -> String {
+    let mut canvas = vec![vec![' '; width]; height];
+    // x: log10(mean) in [-2, 4]; y: cov in [0, 20] clamped
+    for &(mean, cov) in points {
+        let lx = mean.max(1e-2).log10();
+        let xi = (((lx + 2.0) / 6.0) * (width - 1) as f64).round() as usize;
+        let yi = ((cov.min(20.0) / 20.0) * (height - 1) as f64).round() as usize;
+        let (xi, yi) = (xi.min(width - 1), yi.min(height - 1));
+        let c = if cov >= 5.0 {
+            'o' // group 1, matching the paper's markers
+        } else if cov >= 1.0 {
+            'x'
+        } else {
+            '+'
+        };
+        canvas[height - 1 - yi][xi] = c;
+    }
+    let mut out = String::from(
+        "Fig. 4 — demand fluctuation (sigma/mu, y, clamped at 20) vs mean demand (log10, x in [-2,4])\n  markers: o = Group 1, x = Group 2, + = Group 3\n",
+    );
+    for row in canvas {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n.saturating_sub(1)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_table_contains_all_series() {
+        let series = vec![
+            CostSeries { name: "A".into(), values: vec![0.5, 0.9, 1.2] },
+            CostSeries { name: "B".into(), values: vec![1.0, 1.0, 1.0] },
+        ];
+        let t = render_cdf_table("Fig 5a", &series, 0.0, 2.0, 5);
+        assert!(t.contains("Fig 5a"));
+        assert!(t.lines().count() >= 7);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let series = vec![CostSeries { name: "A".into(), values: vec![0.5] }];
+        let csv = cdf_csv(&series, 0.0, 1.0, 3);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "cost,A");
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn table2_renders_rows() {
+        let rows = vec![
+            ("All-reserved".to_string(), [16.48, 48.99, 1.25, 0.61]),
+            ("Randomized".to_string(), [0.76, 1.02, 0.79, 0.63]),
+        ];
+        let t = render_table2(&rows);
+        assert!(t.contains("All-reserved"));
+        assert!(t.contains("48.99"));
+    }
+
+    #[test]
+    fn scatter_renders_markers() {
+        let pts = vec![(0.1, 10.0), (5.0, 2.0), (100.0, 0.3)];
+        let s = render_fig4_scatter(&pts, 40, 10);
+        assert!(s.contains('o'));
+        assert!(s.contains('x'));
+        assert!(s.contains('+'));
+    }
+
+    #[test]
+    fn series_mean() {
+        let s = CostSeries { name: "m".into(), values: vec![1.0, 3.0] };
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+}

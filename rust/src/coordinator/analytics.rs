@@ -1,0 +1,129 @@
+//! The analytics engine: periodically positions the whole fleet against
+//! the `A_z` threshold spectrum by running the AOT-compiled L1/L2 window
+//! scan (`fleet_step` artifact) over every user's recent window.
+//!
+//! This is the PJRT hot path: Rust gathers the snapshot, the artifact does
+//! the batched compute, Rust interprets the posture. Operators use it to
+//! see, per user, how close current on-demand spending is to the
+//! break-even point and which aggressiveness levels would reserve *now* —
+//! the fleet-wide "to reserve or not to reserve" dashboard.
+
+use anyhow::Result;
+
+use super::broker::{Broker, SnapshotRow};
+use crate::pricing::Pricing;
+use crate::runtime::Runtime;
+use crate::util::stats::linspace;
+
+/// Per-user posture from one analytics tick.
+#[derive(Debug, Clone)]
+pub struct UserPosture {
+    pub user_id: u32,
+    /// Violation count `V_u` over the analytics window.
+    pub violations: f32,
+    /// On-demand spend `p·V_u` as a fraction of the break-even point β.
+    pub breakeven_frac: f64,
+    /// Fraction of the z-grid that would reserve now (1.0 = even the most
+    /// conservative `A_β` reserves; 0.0 = not even `A_0`).
+    pub reserve_pressure: f64,
+}
+
+/// Fleet-wide posture.
+#[derive(Debug, Clone)]
+pub struct FleetPosture {
+    pub users: Vec<UserPosture>,
+    /// The threshold grid the posture was evaluated against.
+    pub z_grid: Vec<f32>,
+}
+
+impl FleetPosture {
+    /// Users whose spend already crossed break-even (A_β would reserve).
+    pub fn over_breakeven(&self) -> Vec<u32> {
+        self.users.iter().filter(|u| u.breakeven_frac > 1.0).map(|u| u.user_id).collect()
+    }
+
+    /// Mean reserve pressure across the fleet.
+    pub fn mean_pressure(&self) -> f64 {
+        if self.users.is_empty() {
+            return 0.0;
+        }
+        self.users.iter().map(|u| u.reserve_pressure).sum::<f64>() / self.users.len() as f64
+    }
+}
+
+/// Analytics engine configuration + artifact runtime.
+pub struct AnalyticsEngine {
+    runtime: Runtime,
+    pricing: Pricing,
+    z_grid: Vec<f32>,
+    /// Max users per artifact execution (the artifact's batch is padded to
+    /// this; larger fleets are chunked).
+    batch: usize,
+}
+
+impl AnalyticsEngine {
+    /// `grid_len` thresholds spanning `[0, β]`.
+    pub fn new(runtime: Runtime, pricing: Pricing, grid_len: usize, batch: usize) -> AnalyticsEngine {
+        let beta = pricing.beta().min(1e6);
+        let z_grid: Vec<f32> = linspace(0.0, beta, grid_len.max(2)).iter().map(|&z| z as f32).collect();
+        AnalyticsEngine { runtime, pricing, z_grid, batch }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn z_grid(&self) -> &[f32] {
+        &self.z_grid
+    }
+
+    /// Evaluate a snapshot (already gathered) through the artifact.
+    pub fn evaluate(&self, rows: &[SnapshotRow]) -> Result<FleetPosture> {
+        let mut users = Vec::with_capacity(rows.len());
+        let beta = self.pricing.beta();
+        for chunk in rows.chunks(self.batch.max(1)) {
+            let window = chunk.iter().map(|r| r.demand.len()).max().unwrap_or(0);
+            let mut demand = vec![0.0f32; chunk.len() * window];
+            let mut coverage = vec![0.0f32; chunk.len() * window];
+            for (i, row) in chunk.iter().enumerate() {
+                demand[i * window..i * window + row.demand.len()].copy_from_slice(&row.demand);
+                coverage[i * window..i * window + row.coverage.len()]
+                    .copy_from_slice(&row.coverage);
+            }
+            let out = self.runtime.fleet_step(
+                self.pricing.p,
+                &demand,
+                &coverage,
+                chunk.len(),
+                window,
+                &self.z_grid,
+            )?;
+            for (i, row) in chunk.iter().enumerate() {
+                let v = out.counts[i];
+                let spend = self.pricing.p * v as f64;
+                let fired = (0..self.z_grid.len()).filter(|&k| out.decided(i, k)).count();
+                users.push(UserPosture {
+                    user_id: row.user_id,
+                    violations: v,
+                    breakeven_frac: if beta.is_finite() { spend / beta } else { 0.0 },
+                    reserve_pressure: fired as f64 / self.z_grid.len() as f64,
+                });
+            }
+        }
+        Ok(FleetPosture { users, z_grid: self.z_grid.clone() })
+    }
+
+    /// Snapshot the broker and evaluate in one call (one "tick").
+    pub fn tick(&self, broker: &Broker) -> Result<FleetPosture> {
+        let rows = broker.snapshot()?;
+        let posture = self.evaluate(&rows);
+        broker
+            .metrics()
+            .analytics_ticks
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        posture
+    }
+}
+
+// PJRT-backed tests live in rust/tests/runtime_integration.rs; pure logic
+// (posture math) is tested there against the small artifact variant.

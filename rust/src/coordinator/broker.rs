@@ -1,0 +1,494 @@
+//! The brokerage service: sharded worker threads running per-user policy
+//! state machines with billing, fed by a streaming demand API.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::metrics::Metrics;
+use crate::algos::{baselines, deterministic::Deterministic, randomized::Randomized, Policy};
+use crate::forecast::{ArForecaster, Forecaster};
+use crate::ledger::{CostReport, Ledger};
+use crate::pricing::Pricing;
+
+/// One demand observation for one user at one slot. Slots per user must be
+/// non-decreasing; gaps are filled with zero demand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DemandEvent {
+    pub user_id: u32,
+    pub slot: u32,
+    pub demand: u32,
+}
+
+/// Which policy each user session runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    AllOnDemand,
+    AllReserved,
+    Separate,
+    /// `A_z`; `z = None` ⇒ `z = β` (Algorithm 1).
+    Deterministic { z: Option<f64> },
+    /// Algorithm 2; per-user threshold draw seeded from `seed ^ user_id`.
+    Randomized { seed: u64 },
+    /// Algorithm 3 driven by a streaming AR(k) forecaster (Sec. VI with
+    /// *real* predictions instead of an oracle).
+    DeterministicForecast { window: usize, ar_order: usize },
+}
+
+impl PolicyKind {
+    fn build(&self, pricing: Pricing, user_id: u32) -> UserSession {
+        let (policy, forecaster): (Box<dyn Policy>, Option<ArForecaster>) = match *self {
+            PolicyKind::AllOnDemand => (Box::new(baselines::AllOnDemand::new()), None),
+            PolicyKind::AllReserved => (Box::new(baselines::AllReserved::new(pricing)), None),
+            PolicyKind::Separate => (Box::new(baselines::Separate::new(pricing)), None),
+            PolicyKind::Deterministic { z } => {
+                let z = z.unwrap_or_else(|| pricing.beta());
+                (Box::new(Deterministic::with_threshold(pricing, z)), None)
+            }
+            PolicyKind::Randomized { seed } => (
+                Box::new(Randomized::online(pricing, seed ^ ((user_id as u64) << 17))),
+                None,
+            ),
+            PolicyKind::DeterministicForecast { window, ar_order } => (
+                Box::new(Deterministic::with_window(pricing, window)),
+                Some(ArForecaster::new(ar_order, 64, (ar_order + 2).max(256))),
+            ),
+        };
+        UserSession {
+            policy,
+            forecaster,
+            ledger: Ledger::new(pricing),
+            next_slot: 0,
+            window: WindowRing::new(64),
+            future_buf: Vec::new(),
+            f64_buf: Vec::new(),
+            scratch: Vec::new(),
+            forecast_at: None,
+        }
+    }
+}
+
+/// Rolling (demand, coverage) window per user for the analytics snapshot.
+#[derive(Debug, Clone)]
+pub(crate) struct WindowRing {
+    cap: usize,
+    demand: Vec<f32>,
+    coverage: Vec<f32>,
+    head: usize,
+    len: usize,
+}
+
+impl WindowRing {
+    pub(crate) fn new(cap: usize) -> WindowRing {
+        WindowRing { cap, demand: vec![0.0; cap], coverage: vec![0.0; cap], head: 0, len: 0 }
+    }
+
+    fn push(&mut self, demand: f32, coverage: f32) {
+        self.demand[self.head] = demand;
+        self.coverage[self.head] = coverage;
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    /// Copy the window (oldest→newest, zero-padded at the front) into
+    /// caller buffers of length `cap`.
+    fn snapshot_into(&self, demand: &mut [f32], coverage: &mut [f32]) {
+        debug_assert_eq!(demand.len(), self.cap);
+        let pad = self.cap - self.len;
+        demand[..pad].fill(0.0);
+        coverage[..pad].fill(0.0);
+        for i in 0..self.len {
+            let src = (self.head + self.cap - self.len + i) % self.cap;
+            demand[pad + i] = self.demand[src];
+            coverage[pad + i] = self.coverage[src];
+        }
+    }
+}
+
+/// Per-user state owned by a worker.
+struct UserSession {
+    policy: Box<dyn Policy>,
+    forecaster: Option<ArForecaster>,
+    ledger: Ledger,
+    next_slot: u32,
+    window: WindowRing,
+    // reusable forecast buffers (no allocation on the event hot path —
+    // EXPERIMENTS.md §Perf L3-3)
+    future_buf: Vec<u32>,
+    f64_buf: Vec<f64>,
+    scratch: Vec<f64>,
+    /// Slot at which `future_buf` was computed; the forecast is refreshed
+    /// every FORECAST_REFRESH slots and consumed as a shrinking suffix in
+    /// between (§Perf L3-4) — the window policy tolerates short horizons.
+    forecast_at: Option<u32>,
+}
+
+/// Slots between full AR forecast recomputations on the broker hot path.
+const FORECAST_REFRESH: u32 = 16;
+
+impl UserSession {
+    fn step(&mut self, slot: u32, demand: u32, metrics: &Metrics) -> Result<()> {
+        if slot < self.next_slot {
+            bail!("slot {slot} arrived out of order (expected >= {})", self.next_slot);
+        }
+        // gap fill: zero-demand slots keep policy clocks consecutive
+        while self.next_slot < slot {
+            self.apply(0)?;
+            metrics.gap_filled_slots.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.record_event(0, 0, 0);
+        }
+        let t0 = Instant::now();
+        let (reserve, on_demand) = self.apply(demand)?;
+        metrics
+            .decide_micros
+            .fetch_add(t0.elapsed().as_micros() as u64, std::sync::atomic::Ordering::Relaxed);
+        metrics.record_event(demand, reserve, on_demand);
+        Ok(())
+    }
+
+    fn apply(&mut self, demand: u32) -> Result<(u32, u32)> {
+        let t = self.next_slot;
+        let mut offset = 0usize;
+        match (&mut self.forecaster, self.policy.window()) {
+            (Some(f), w) if w > 0 => {
+                let stale = match self.forecast_at {
+                    None => true,
+                    Some(at) => t - at >= FORECAST_REFRESH.min(w as u32),
+                };
+                if stale {
+                    f.predict_f64_into(w, &mut self.f64_buf, &mut self.scratch);
+                    self.future_buf.clear();
+                    self.future_buf
+                        .extend(self.f64_buf.iter().map(|y| y.round().max(0.0) as u32));
+                    self.forecast_at = Some(t);
+                } else {
+                    // consume the cached forecast as a shrinking suffix
+                    offset = (t - self.forecast_at.unwrap()) as usize;
+                }
+                f.observe(demand);
+            }
+            (Some(f), _) => {
+                f.observe(demand);
+                self.future_buf.clear();
+            }
+            (None, _) => self.future_buf.clear(),
+        }
+        let dec = self.policy.decide(demand, &self.future_buf[offset.min(self.future_buf.len())..]);
+        self.ledger
+            .bill_slot(demand, dec.reserve, dec.on_demand)
+            .map_err(|e| anyhow!("billing: {e}"))?;
+        let covered = demand - dec.on_demand;
+        self.window.push(demand as f32, covered as f32);
+        self.next_slot += 1;
+        Ok((dec.reserve, dec.on_demand))
+    }
+}
+
+/// A per-user analytics snapshot row.
+#[derive(Debug, Clone)]
+pub struct SnapshotRow {
+    pub user_id: u32,
+    pub demand: Vec<f32>,
+    pub coverage: Vec<f32>,
+}
+
+enum Command {
+    Demand(DemandEvent),
+    /// Reply with every session's window snapshot.
+    Snapshot(SyncSender<Vec<SnapshotRow>>),
+    /// Reply with final per-user reports and stop.
+    Finish(SyncSender<Vec<(u32, CostReport)>>),
+}
+
+/// Broker configuration.
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    pub pricing: Pricing,
+    pub shards: usize,
+    /// Bounded per-shard queue (backpressure).
+    pub queue_capacity: usize,
+    /// Analytics window length (must not exceed the artifact's W).
+    pub window: usize,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            pricing: crate::pricing::catalog::ec2_small_compressed(),
+            shards: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            queue_capacity: 4096,
+            window: 64,
+        }
+    }
+}
+
+/// Final broker output.
+#[derive(Debug)]
+pub struct BrokerReport {
+    /// (user_id, billing report), sorted by user id.
+    pub per_user: Vec<(u32, CostReport)>,
+}
+
+impl BrokerReport {
+    pub fn total_cost(&self) -> f64 {
+        self.per_user.iter().map(|(_, r)| r.total).sum()
+    }
+
+    pub fn total_reservations(&self) -> u64 {
+        self.per_user.iter().map(|(_, r)| r.reservations).sum()
+    }
+}
+
+/// The running brokerage service.
+pub struct Broker {
+    txs: Vec<SyncSender<Command>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    shards: usize,
+}
+
+impl Broker {
+    /// Start the broker: `shards` worker threads, all users running
+    /// policies built from `kind`.
+    pub fn start(cfg: BrokerConfig, kind: PolicyKind) -> Broker {
+        let metrics = Arc::new(Metrics::new());
+        let mut txs = Vec::with_capacity(cfg.shards);
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = sync_channel::<Command>(cfg.queue_capacity);
+            let kind = kind.clone();
+            let cfg = cfg.clone();
+            let metrics = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("broker-shard-{shard}"))
+                .spawn(move || worker_loop(rx, cfg, kind, metrics))
+                .expect("spawn worker");
+            txs.push(tx);
+            workers.push(handle);
+        }
+        Broker { txs, workers, metrics, shards: cfg.shards }
+    }
+
+    #[inline]
+    fn shard_of(&self, user_id: u32) -> usize {
+        // splitmix-style hash so consecutive user ids spread across shards
+        let mut x = user_id as u64;
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        (x % self.shards as u64) as usize
+    }
+
+    /// Submit one demand event (blocks when the shard queue is full).
+    pub fn submit(&self, ev: DemandEvent) -> Result<()> {
+        self.txs[self.shard_of(ev.user_id)]
+            .send(Command::Demand(ev))
+            .map_err(|_| anyhow!("worker for user {} has shut down", ev.user_id))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Gather the analytics snapshot from every shard (blocks until all
+    /// queued demand ahead of the snapshot marker is processed — giving a
+    /// consistent-per-user cut).
+    pub fn snapshot(&self) -> Result<Vec<SnapshotRow>> {
+        let mut rows = Vec::new();
+        let mut pending = Vec::new();
+        for tx in &self.txs {
+            let (rtx, rrx) = sync_channel(1);
+            tx.send(Command::Snapshot(rtx)).map_err(|_| anyhow!("worker shut down"))?;
+            pending.push(rrx);
+        }
+        for rrx in pending {
+            rows.extend(rrx.recv().map_err(|_| anyhow!("worker dropped snapshot"))?);
+        }
+        rows.sort_by_key(|r| r.user_id);
+        Ok(rows)
+    }
+
+    /// Drain queues, stop workers, and return the billing reports.
+    pub fn finish(self) -> Result<BrokerReport> {
+        let mut pending = Vec::new();
+        for tx in &self.txs {
+            let (rtx, rrx) = sync_channel(1);
+            tx.send(Command::Finish(rtx)).map_err(|_| anyhow!("worker shut down"))?;
+            pending.push(rrx);
+        }
+        drop(self.txs);
+        let mut per_user = Vec::new();
+        for rrx in pending {
+            per_user.extend(rrx.recv().map_err(|_| anyhow!("worker dropped report"))?);
+        }
+        for w in self.workers {
+            w.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
+        per_user.sort_by_key(|(uid, _)| *uid);
+        Ok(BrokerReport { per_user })
+    }
+}
+
+fn worker_loop(rx: Receiver<Command>, cfg: BrokerConfig, kind: PolicyKind, metrics: Arc<Metrics>) {
+    let mut sessions: HashMap<u32, UserSession> = HashMap::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Demand(ev) => {
+                let session = sessions.entry(ev.user_id).or_insert_with(|| {
+                    let mut s = kind.build(cfg.pricing, ev.user_id);
+                    s.window = WindowRing::new(cfg.window);
+                    s
+                });
+                if let Err(e) = session.step(ev.slot, ev.demand, &metrics) {
+                    // A policy/billing invariant violation is a bug; crash
+                    // loudly rather than silently corrupting the ledger.
+                    panic!("user {}: {e}", ev.user_id);
+                }
+            }
+            Command::Snapshot(reply) => {
+                let mut rows = Vec::with_capacity(sessions.len());
+                for (&uid, s) in &sessions {
+                    let mut demand = vec![0.0f32; cfg.window];
+                    let mut coverage = vec![0.0f32; cfg.window];
+                    s.window.snapshot_into(&mut demand, &mut coverage);
+                    rows.push(SnapshotRow { user_id: uid, demand, coverage });
+                }
+                let _ = reply.send(rows);
+            }
+            Command::Finish(reply) => {
+                let reports =
+                    sessions.iter().map(|(&uid, s)| (uid, s.ledger.report())).collect();
+                let _ = reply.send(reports);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(shards: usize) -> BrokerConfig {
+        BrokerConfig {
+            pricing: Pricing::normalized(0.05, 0.4, 100),
+            shards,
+            queue_capacity: 64,
+            window: 16,
+        }
+    }
+
+    #[test]
+    fn broker_bills_like_direct_simulation() {
+        let pricing = Pricing::normalized(0.05, 0.4, 100);
+        let demands: Vec<Vec<u32>> = (0..6)
+            .map(|u| (0..200).map(|t| ((t + u) % 4) as u32).collect())
+            .collect();
+
+        let broker = Broker::start(cfg(3), PolicyKind::Deterministic { z: None });
+        for t in 0..200u32 {
+            for (u, d) in demands.iter().enumerate() {
+                broker
+                    .submit(DemandEvent { user_id: u as u32, slot: t, demand: d[t as usize] })
+                    .unwrap();
+            }
+        }
+        let report = broker.finish().unwrap();
+        assert_eq!(report.per_user.len(), 6);
+
+        // compare against the sequential simulator
+        for (uid, got) in &report.per_user {
+            let mut policy = Deterministic::online(pricing);
+            let want =
+                crate::sim::run_policy(&mut policy, &demands[*uid as usize], pricing).unwrap();
+            assert!(
+                (got.total - want.total).abs() < 1e-9,
+                "user {uid}: broker {} vs direct {}",
+                got.total,
+                want.total
+            );
+        }
+    }
+
+    #[test]
+    fn gap_filling_keeps_clocks_consistent() {
+        let broker = Broker::start(cfg(2), PolicyKind::AllOnDemand);
+        // user 0 only reports at slots 0 and 10
+        broker.submit(DemandEvent { user_id: 0, slot: 0, demand: 2 }).unwrap();
+        broker.submit(DemandEvent { user_id: 0, slot: 10, demand: 3 }).unwrap();
+        let report = broker.finish().unwrap();
+        let (_, r) = &report.per_user[0];
+        assert_eq!(r.slots, 11);
+        assert_eq!(r.demand_slots, 5);
+    }
+
+    #[test]
+    fn out_of_order_slot_panics_worker() {
+        let broker = Broker::start(cfg(1), PolicyKind::AllOnDemand);
+        broker.submit(DemandEvent { user_id: 0, slot: 5, demand: 1 }).unwrap();
+        broker.submit(DemandEvent { user_id: 0, slot: 3, demand: 1 }).unwrap();
+        // worker dies; finish must surface the failure
+        assert!(broker.finish().is_err());
+    }
+
+    #[test]
+    fn snapshot_returns_all_users() {
+        let broker = Broker::start(cfg(4), PolicyKind::AllOnDemand);
+        for t in 0..20u32 {
+            for u in 0..10u32 {
+                broker.submit(DemandEvent { user_id: u, slot: t, demand: u % 3 }).unwrap();
+            }
+        }
+        let rows = broker.snapshot().unwrap();
+        assert_eq!(rows.len(), 10);
+        assert!(rows.windows(2).all(|w| w[0].user_id < w[1].user_id));
+        // newest window entry reflects the last demand
+        for r in &rows {
+            assert_eq!(r.demand.len(), 16);
+            assert_eq!(*r.demand.last().unwrap(), (r.user_id % 3) as f32);
+        }
+        broker.finish().unwrap();
+    }
+
+    #[test]
+    fn window_ring_wraps_correctly() {
+        let mut w = WindowRing::new(4);
+        for i in 0..6 {
+            w.push(i as f32, (i * 10) as f32);
+        }
+        let mut d = vec![0.0; 4];
+        let mut c = vec![0.0; 4];
+        w.snapshot_into(&mut d, &mut c);
+        assert_eq!(d, vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(c, vec![20.0, 30.0, 40.0, 50.0]);
+    }
+
+    #[test]
+    fn window_ring_pads_when_short() {
+        let mut w = WindowRing::new(4);
+        w.push(7.0, 1.0);
+        let mut d = vec![9.0; 4];
+        let mut c = vec![9.0; 4];
+        w.snapshot_into(&mut d, &mut c);
+        assert_eq!(d, vec![0.0, 0.0, 0.0, 7.0]);
+        assert_eq!(c, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn forecast_policy_runs_in_broker() {
+        let broker = Broker::start(
+            cfg(2),
+            PolicyKind::DeterministicForecast { window: 8, ar_order: 2 },
+        );
+        for t in 0..300u32 {
+            broker.submit(DemandEvent { user_id: 0, slot: t, demand: 1 }).unwrap();
+        }
+        let report = broker.finish().unwrap();
+        let (_, r) = &report.per_user[0];
+        // stable demand must eventually be reserved
+        assert!(r.reservations >= 1);
+        assert_eq!(r.demand_slots, 300);
+    }
+}

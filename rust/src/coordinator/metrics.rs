@@ -1,0 +1,105 @@
+//! Coordinator metrics: cheap atomic counters shared across shards,
+//! rendered by the CLI and asserted by integration tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Fleet-wide counters. All methods are lock-free.
+#[derive(Debug)]
+pub struct Metrics {
+    pub events: AtomicU64,
+    pub demand_slots: AtomicU64,
+    pub reservations: AtomicU64,
+    pub on_demand_slots: AtomicU64,
+    pub analytics_ticks: AtomicU64,
+    pub gap_filled_slots: AtomicU64,
+    /// Microseconds spent inside policy decisions (summed across shards).
+    pub decide_micros: AtomicU64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            events: AtomicU64::new(0),
+            demand_slots: AtomicU64::new(0),
+            reservations: AtomicU64::new(0),
+            on_demand_slots: AtomicU64::new(0),
+            analytics_ticks: AtomicU64::new(0),
+            gap_filled_slots: AtomicU64::new(0),
+            decide_micros: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    #[inline]
+    pub fn record_event(&self, demand: u32, reserve: u32, on_demand: u32) {
+        self.events.fetch_add(1, Ordering::Relaxed);
+        self.demand_slots.fetch_add(demand as u64, Ordering::Relaxed);
+        self.reservations.fetch_add(reserve as u64, Ordering::Relaxed);
+        self.on_demand_slots.fetch_add(on_demand as u64, Ordering::Relaxed);
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.events.load(Ordering::Relaxed) as f64 / secs
+        }
+    }
+
+    /// One-line status render.
+    pub fn render(&self) -> String {
+        format!(
+            "events={} demand_slots={} reservations={} od_slots={} ticks={} gaps={} rate={:.0}/s",
+            self.events.load(Ordering::Relaxed),
+            self.demand_slots.load(Ordering::Relaxed),
+            self.reservations.load(Ordering::Relaxed),
+            self.on_demand_slots.load(Ordering::Relaxed),
+            self.analytics_ticks.load(Ordering::Relaxed),
+            self.gap_filled_slots.load(Ordering::Relaxed),
+            self.events_per_sec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_event(3, 1, 2);
+        m.record_event(0, 0, 0);
+        assert_eq!(m.events.load(Ordering::Relaxed), 2);
+        assert_eq!(m.demand_slots.load(Ordering::Relaxed), 3);
+        assert_eq!(m.reservations.load(Ordering::Relaxed), 1);
+        assert_eq!(m.on_demand_slots.load(Ordering::Relaxed), 2);
+        assert!(m.render().contains("events=2"));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.record_event(1, 0, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.events.load(Ordering::Relaxed), 4000);
+    }
+}

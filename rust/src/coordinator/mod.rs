@@ -1,0 +1,32 @@
+//! The reservation brokerage coordinator — the L3 service wrapping the
+//! paper's policies for multi-tenant, streaming operation.
+//!
+//! Topology (std threads; tokio is not in the offline vendor set):
+//!
+//! ```text
+//!              submit(DemandEvent)            per-shard bounded queues
+//!  ingestion ────────────────────▶ router ──┬─▶ worker 0 ─┐
+//!                                           ├─▶ worker 1 ─┤  purchases +
+//!                                           └─▶ worker N ─┘  billing
+//!                                                 │
+//!                        snapshot request/reply   ▼
+//!  analytics tick ◀──────────────────────── fleet posture batch
+//!        │
+//!        └─▶ runtime::fleet_step (AOT PJRT artifact: L1/L2 compute)
+//! ```
+//!
+//! * Each worker owns the policy state machine + billing ledger for its
+//!   users; the request path is pure Rust and allocation-light.
+//! * The analytics engine periodically snapshots every user's recent
+//!   (demand, coverage) window and evaluates the fleet's break-even
+//!   posture against a grid of `A_z` thresholds through the AOT artifact —
+//!   the L1 Pallas scan is on this (hot) analytics path, Python is not.
+//! * Backpressure: bounded channels; `submit` blocks when a shard lags.
+
+pub mod analytics;
+pub mod broker;
+pub mod metrics;
+
+pub use analytics::{AnalyticsEngine, FleetPosture};
+pub use broker::{Broker, BrokerConfig, BrokerReport, DemandEvent, PolicyKind};
+pub use metrics::Metrics;

@@ -1,0 +1,370 @@
+//! Short-term demand forecasting (Sec. VI): providers for the prediction
+//! window `d̂_{t+1..t+w}` consumed by `A^w_z`.
+//!
+//! The paper assumes reliable short-term predictions; these forecasters let
+//! the examples and ablation benches quantify how much of the Fig. 6/7
+//! gain survives *imperfect* predictions. The AR(k) model mirrors the L2
+//! JAX forecaster — `fit_ar` produces the coefficients that
+//! `python/compile/model.py` applies in the AOT artifact, and the
+//! coordinator can run either implementation (bit-identical math).
+
+use std::collections::VecDeque;
+
+/// A streaming demand forecaster.
+pub trait Forecaster: Send {
+    fn name(&self) -> String;
+    /// Observe the next actual demand.
+    fn observe(&mut self, demand: u32);
+    /// Predict the next `w` demands.
+    fn predict(&self, w: usize) -> Vec<u32>;
+}
+
+/// Predicts the last observed value forever.
+#[derive(Debug, Clone, Default)]
+pub struct LastValue {
+    last: u32,
+}
+
+impl Forecaster for LastValue {
+    fn name(&self) -> String {
+        "last-value".into()
+    }
+
+    fn observe(&mut self, demand: u32) {
+        self.last = demand;
+    }
+
+    fn predict(&self, w: usize) -> Vec<u32> {
+        vec![self.last; w]
+    }
+}
+
+/// Moving average over the last `k` observations.
+#[derive(Debug, Clone)]
+pub struct MovingAverage {
+    k: usize,
+    buf: VecDeque<u32>,
+    sum: u64,
+}
+
+impl MovingAverage {
+    pub fn new(k: usize) -> MovingAverage {
+        assert!(k >= 1);
+        MovingAverage { k, buf: VecDeque::new(), sum: 0 }
+    }
+}
+
+impl Forecaster for MovingAverage {
+    fn name(&self) -> String {
+        format!("moving-average({})", self.k)
+    }
+
+    fn observe(&mut self, demand: u32) {
+        self.buf.push_back(demand);
+        self.sum += demand as u64;
+        if self.buf.len() > self.k {
+            self.sum -= self.buf.pop_front().unwrap() as u64;
+        }
+    }
+
+    fn predict(&self, w: usize) -> Vec<u32> {
+        let avg = if self.buf.is_empty() {
+            0
+        } else {
+            ((self.sum as f64 / self.buf.len() as f64).round()) as u32
+        };
+        vec![avg; w]
+    }
+}
+
+/// Seasonal-naive: predict the value one season (e.g., one day) back.
+#[derive(Debug, Clone)]
+pub struct SeasonalNaive {
+    period: usize,
+    buf: VecDeque<u32>,
+}
+
+impl SeasonalNaive {
+    pub fn new(period: usize) -> SeasonalNaive {
+        assert!(period >= 1);
+        SeasonalNaive { period, buf: VecDeque::new() }
+    }
+}
+
+impl Forecaster for SeasonalNaive {
+    fn name(&self) -> String {
+        format!("seasonal-naive({})", self.period)
+    }
+
+    fn observe(&mut self, demand: u32) {
+        self.buf.push_back(demand);
+        if self.buf.len() > self.period {
+            self.buf.pop_front();
+        }
+    }
+
+    fn predict(&self, w: usize) -> Vec<u32> {
+        if self.buf.is_empty() {
+            return vec![0; w];
+        }
+        (0..w)
+            .map(|i| {
+                // value `period` slots before t+1+i
+                let idx = (self.buf.len() + i) % self.period.min(self.buf.len());
+                self.buf[idx.min(self.buf.len() - 1)]
+            })
+            .collect()
+    }
+}
+
+/// Fit AR(k) coefficients (with intercept) on a demand history by least
+/// squares: `d_t ≈ c + Σ_j a_j · d_{t−j}`. Returns `[c, a_1, …, a_k]`.
+/// Solved via normal equations + Gaussian elimination with partial
+/// pivoting (k is small).
+pub fn fit_ar(history: &[u32], k: usize) -> Vec<f64> {
+    assert!(k >= 1);
+    let n = history.len();
+    if n <= k + 1 {
+        // not enough data: fall back to predicting the mean
+        let mean = if n == 0 { 0.0 } else { history.iter().map(|&x| x as f64).sum::<f64>() / n as f64 };
+        let mut c = vec![0.0; k + 1];
+        c[0] = mean;
+        return c;
+    }
+    let dim = k + 1;
+    // X^T X and X^T y accumulated streaming
+    let mut xtx = vec![vec![0.0f64; dim]; dim];
+    let mut xty = vec![0.0f64; dim];
+    let mut row = vec![0.0f64; dim];
+    for t in k..n {
+        row[0] = 1.0;
+        for j in 1..=k {
+            row[j] = history[t - j] as f64;
+        }
+        let y = history[t] as f64;
+        for i in 0..dim {
+            xty[i] += row[i] * y;
+            for j in 0..dim {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // ridge regularization keeps degenerate (constant) histories solvable
+    for (i, r) in xtx.iter_mut().enumerate() {
+        r[i] += 1e-6;
+    }
+    solve_linear(xtx, xty)
+}
+
+/// Gaussian elimination with partial pivoting.
+fn solve_linear(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let diag = a[col][col];
+        if diag.abs() < 1e-12 {
+            continue; // singular direction; leave coefficient at 0
+        }
+        for r in col + 1..n {
+            let f = a[r][col] / diag;
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in col + 1..n {
+            acc -= a[col][c] * x[c];
+        }
+        x[col] = if a[col][col].abs() < 1e-12 { 0.0 } else { acc / a[col][col] };
+    }
+    x
+}
+
+/// Streaming AR(k) forecaster: refits every `refit_every` observations on a
+/// rolling history window.
+pub struct ArForecaster {
+    k: usize,
+    refit_every: usize,
+    max_history: usize,
+    history: VecDeque<u32>,
+    coef: Vec<f64>,
+    since_fit: usize,
+}
+
+impl ArForecaster {
+    pub fn new(k: usize, refit_every: usize, max_history: usize) -> ArForecaster {
+        assert!(max_history > k + 1);
+        ArForecaster {
+            k,
+            refit_every,
+            max_history,
+            history: VecDeque::new(),
+            coef: vec![0.0; k + 1],
+            since_fit: 0,
+        }
+    }
+
+    pub fn coefficients(&self) -> &[f64] {
+        &self.coef
+    }
+
+    /// Iterated multi-step prediction with the current coefficients —
+    /// mirrors the L2 `ar_forecast` graph exactly.
+    pub fn predict_f64(&self, w: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(w);
+        let mut scratch = Vec::new();
+        self.predict_f64_into(w, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocation-free variant for hot paths (EXPERIMENTS.md §Perf L3-3):
+    /// the AR iteration only ever consults the last `k` values, so we keep
+    /// a k-sized rolling scratch instead of copying the whole history.
+    pub fn predict_f64_into(&self, w: usize, out: &mut Vec<f64>, scratch: &mut Vec<f64>) {
+        out.clear();
+        scratch.clear();
+        let n = self.history.len();
+        for i in n.saturating_sub(self.k)..n {
+            scratch.push(self.history[i] as f64);
+        }
+        // scratch holds the last <=k values, oldest first; index from the end
+        for _ in 0..w {
+            let m = scratch.len();
+            let mut y = self.coef[0];
+            for j in 1..=self.k {
+                let v = if m >= j { scratch[m - j] } else { 0.0 };
+                y += self.coef[j] * v;
+            }
+            let y = y.max(0.0);
+            out.push(y);
+            // slide the k-window: drop the oldest once we exceed k entries
+            scratch.push(y);
+            if scratch.len() > self.k {
+                scratch.remove(0);
+            }
+        }
+    }
+}
+
+impl Forecaster for ArForecaster {
+    fn name(&self) -> String {
+        format!("ar({})", self.k)
+    }
+
+    fn observe(&mut self, demand: u32) {
+        self.history.push_back(demand);
+        if self.history.len() > self.max_history {
+            self.history.pop_front();
+        }
+        self.since_fit += 1;
+        if self.since_fit >= self.refit_every || self.coef.iter().all(|&c| c == 0.0) {
+            let hist: Vec<u32> = self.history.iter().copied().collect();
+            self.coef = fit_ar(&hist, self.k);
+            self.since_fit = 0;
+        }
+    }
+
+    fn predict(&self, w: usize) -> Vec<u32> {
+        self.predict_f64(w).into_iter().map(|y| y.round().max(0.0) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_value_predicts_last() {
+        let mut f = LastValue::default();
+        f.observe(3);
+        f.observe(7);
+        assert_eq!(f.predict(3), vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn moving_average_windows() {
+        let mut f = MovingAverage::new(2);
+        f.observe(2);
+        f.observe(4);
+        f.observe(6);
+        assert_eq!(f.predict(1), vec![5]); // mean(4,6)
+    }
+
+    #[test]
+    fn seasonal_naive_repeats_cycle() {
+        let mut f = SeasonalNaive::new(3);
+        for d in [1, 2, 3] {
+            f.observe(d);
+        }
+        assert_eq!(f.predict(3), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ar_fit_recovers_linear_recurrence() {
+        // d_t = 0.5 d_{t-1} + 10 (fixed point 20)
+        let mut h = vec![0u32];
+        for _ in 0..200 {
+            let prev = *h.last().unwrap() as f64;
+            h.push((0.5 * prev + 10.0).round() as u32);
+        }
+        let coef = fit_ar(&h, 1);
+        // rounding noise is tiny once the series settles, so expect
+        // approximately [10, 0.5] -- but the series converges to constant 20,
+        // making c + a*20 = 20 the identifiable constraint. Verify the
+        // one-step prediction instead of raw coefficients.
+        let pred = coef[0] + coef[1] * 20.0;
+        assert!((pred - 20.0).abs() < 0.5, "coef={coef:?} pred={pred}");
+    }
+
+    #[test]
+    fn ar_fit_on_ramp_extrapolates_upward() {
+        let h: Vec<u32> = (0..100).collect();
+        let coef = fit_ar(&h, 2);
+        // next value should be ~100
+        let pred = coef[0] + coef[1] * 99.0 + coef[2] * 98.0;
+        assert!((pred - 100.0).abs() < 2.0, "coef={coef:?} pred={pred}");
+    }
+
+    #[test]
+    fn ar_forecaster_streaming() {
+        let mut f = ArForecaster::new(2, 10, 500);
+        for i in 0..100u32 {
+            f.observe(i % 10);
+        }
+        let p = f.predict(5);
+        assert_eq!(p.len(), 5);
+        // predictions stay in a sane range
+        assert!(p.iter().all(|&x| x <= 20));
+    }
+
+    #[test]
+    fn ar_fit_short_history_falls_back_to_mean() {
+        let coef = fit_ar(&[4, 6], 3);
+        assert!((coef[0] - 5.0).abs() < 1e-9);
+        assert!(coef[1..].iter().all(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn ar_fit_constant_history_is_stable() {
+        let h = vec![5u32; 50];
+        let coef = fit_ar(&h, 3);
+        let pred = coef[0] + coef[1..].iter().sum::<f64>() * 5.0;
+        assert!((pred - 5.0).abs() < 0.1, "coef={coef:?} pred={pred}");
+    }
+
+    #[test]
+    fn solve_linear_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve_linear(a, vec![3.0, -2.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] + 2.0).abs() < 1e-12);
+    }
+}

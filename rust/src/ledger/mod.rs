@@ -1,0 +1,254 @@
+//! Reservation ledger and billing engine.
+//!
+//! The ledger tracks *actual* reservations (not the phantom bookkeeping the
+//! online algorithms use internally), exposes the number of reservations
+//! active at the current slot, and accumulates the exact cost decomposition
+//! from problem (1):
+//!
+//! ```text
+//! C = Σ_t  o_t·p  +  r_t  +  α·p·(d_t − o_t)
+//! ```
+//!
+//! It also verifies the feasibility constraint
+//! `o_t + Σ_{i=t−τ+1..t} r_i ≥ d_t` on every slot, so any policy bug that
+//! under-provisions is caught at billing time, and it maintains the cost
+//! identity `C = n + (1−α)·Od + α·S` (Eq. 34) used by tests.
+
+use std::collections::VecDeque;
+
+use crate::pricing::Pricing;
+
+/// Errors surfaced by the billing engine.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum LedgerError {
+    #[error("slot {t}: demand {d} exceeds on-demand {o} + active reservations {active}")]
+    Underprovisioned { t: usize, d: u32, o: u32, active: u32 },
+    #[error("slot {t}: on-demand count {o} exceeds demand {d} (wasteful decision rejected)")]
+    OverOnDemand { t: usize, o: u32, d: u32 },
+}
+
+/// Itemized cost report for one simulated user / policy run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostReport {
+    /// Total cost (normalized: reservation fee = 1).
+    pub total: f64,
+    /// Upfront fees paid (== number of reservations, fee normalized to 1).
+    pub reservation_fees: f64,
+    /// On-demand running costs Σ o_t p.
+    pub on_demand_cost: f64,
+    /// Discounted reserved running costs Σ α p (d_t − o_t).
+    pub reserved_usage_cost: f64,
+    /// Number of reservations made.
+    pub reservations: u64,
+    /// Total instance-slots served on demand.
+    pub on_demand_slots: u64,
+    /// Total instance-slots served by reservations.
+    pub reserved_slots: u64,
+    /// Total demand instance-slots.
+    pub demand_slots: u64,
+    /// Peak simultaneous active reservations.
+    pub peak_active: u32,
+    /// Slots processed.
+    pub slots: usize,
+}
+
+impl CostReport {
+    /// `S` from the paper: cost of serving everything on demand.
+    pub fn all_on_demand_cost(&self, pricing: &Pricing) -> f64 {
+        pricing.p * self.demand_slots as f64
+    }
+
+    /// Check Eq. (34): `C = n + (1−α)·Od + α·S` (floating tolerance).
+    pub fn identity_holds(&self, pricing: &Pricing, tol: f64) -> bool {
+        let s = self.all_on_demand_cost(pricing);
+        let rhs = self.reservations as f64 + (1.0 - pricing.alpha) * self.on_demand_cost + pricing.alpha * s;
+        (self.total - rhs).abs() <= tol * (1.0 + self.total.abs())
+    }
+}
+
+/// The reservation ledger + billing engine. Drive it slot by slot with the
+/// policy's decisions.
+#[derive(Debug, Clone)]
+pub struct Ledger {
+    pricing: Pricing,
+    /// Expiry slot (exclusive) of each active reservation, in FIFO order —
+    /// reservations are acquired in time order so the front expires first.
+    active: VecDeque<usize>,
+    /// Next slot to bill (slots must be billed consecutively from 0).
+    t: usize,
+    report: CostReport,
+}
+
+impl Ledger {
+    pub fn new(pricing: Pricing) -> Ledger {
+        Ledger { pricing, active: VecDeque::new(), t: 0, report: CostReport::default() }
+    }
+
+    pub fn pricing(&self) -> &Pricing {
+        &self.pricing
+    }
+
+    /// Number of reservations that can serve demand at the *current* slot
+    /// (those reserved in `[t−τ+1, t]` — equivalently not yet expired).
+    pub fn active_now(&mut self) -> u32 {
+        let t = self.t;
+        while matches!(self.active.front(), Some(&e) if e <= t) {
+            self.active.pop_front();
+        }
+        self.active.len() as u32
+    }
+
+    /// Current slot index.
+    pub fn now(&self) -> usize {
+        self.t
+    }
+
+    /// Bill one slot: `reserve_new` fresh reservations are made at slot `t`,
+    /// `on_demand` instances run on demand, and `demand − on_demand`
+    /// instances run on active reservations. Advances the clock.
+    pub fn bill_slot(
+        &mut self,
+        demand: u32,
+        reserve_new: u32,
+        on_demand: u32,
+    ) -> Result<(), LedgerError> {
+        let t = self.t;
+        if on_demand > demand {
+            return Err(LedgerError::OverOnDemand { t, o: on_demand, d: demand });
+        }
+        // Register new reservations: active for slots [t, t+tau-1].
+        for _ in 0..reserve_new {
+            self.active.push_back(t + self.pricing.tau);
+        }
+        let active = self.active_now();
+        let reserved_use = demand - on_demand;
+        if reserved_use > active {
+            return Err(LedgerError::Underprovisioned { t, d: demand, o: on_demand, active });
+        }
+
+        let p = self.pricing.p;
+        let alpha = self.pricing.alpha;
+        let fees = reserve_new as f64;
+        let od = on_demand as f64 * p;
+        let ru = alpha * p * reserved_use as f64;
+
+        let r = &mut self.report;
+        r.reservation_fees += fees;
+        r.on_demand_cost += od;
+        r.reserved_usage_cost += ru;
+        r.total += fees + od + ru;
+        r.reservations += reserve_new as u64;
+        r.on_demand_slots += on_demand as u64;
+        r.reserved_slots += reserved_use as u64;
+        r.demand_slots += demand as u64;
+        r.peak_active = r.peak_active.max(active);
+        r.slots += 1;
+
+        self.t += 1;
+        Ok(())
+    }
+
+    /// Final report.
+    pub fn report(&self) -> CostReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pricing() -> Pricing {
+        Pricing::normalized(0.1, 0.5, 3)
+    }
+
+    #[test]
+    fn bills_on_demand_only() {
+        let mut l = Ledger::new(pricing());
+        for _ in 0..10 {
+            l.bill_slot(2, 0, 2).unwrap();
+        }
+        let r = l.report();
+        assert!((r.total - 10.0 * 2.0 * 0.1).abs() < 1e-12);
+        assert_eq!(r.reservations, 0);
+        assert_eq!(r.on_demand_slots, 20);
+        assert_eq!(r.demand_slots, 20);
+    }
+
+    #[test]
+    fn reservation_expires_after_tau() {
+        let mut l = Ledger::new(pricing());
+        l.bill_slot(1, 1, 0).unwrap(); // reserve at t=0, covers t=0,1,2
+        assert_eq!(l.active_now(), 1);
+        l.bill_slot(1, 0, 0).unwrap(); // t=1 reserved
+        l.bill_slot(1, 0, 0).unwrap(); // t=2 reserved
+        // t=3: reservation expired, must use on-demand
+        assert_eq!(l.active_now(), 0);
+        let err = l.bill_slot(1, 0, 0).unwrap_err();
+        assert!(matches!(err, LedgerError::Underprovisioned { t: 3, .. }));
+    }
+
+    #[test]
+    fn cost_decomposition_example() {
+        // reserve 1 at t=0, serve d=1 for 3 slots reserved, then 1 on demand.
+        let mut l = Ledger::new(pricing());
+        l.bill_slot(1, 1, 0).unwrap();
+        l.bill_slot(1, 0, 0).unwrap();
+        l.bill_slot(1, 0, 0).unwrap();
+        l.bill_slot(1, 0, 1).unwrap();
+        let r = l.report();
+        // fee 1 + 3 * (0.5*0.1) + 1 * 0.1
+        assert!((r.total - (1.0 + 0.15 + 0.1)).abs() < 1e-12);
+        assert!(r.identity_holds(&pricing(), 1e-9));
+    }
+
+    #[test]
+    fn rejects_overprovisioned_on_demand() {
+        let mut l = Ledger::new(pricing());
+        let err = l.bill_slot(1, 0, 2).unwrap_err();
+        assert!(matches!(err, LedgerError::OverOnDemand { .. }));
+    }
+
+    #[test]
+    fn multi_reservation_overlap() {
+        let mut l = Ledger::new(pricing());
+        l.bill_slot(1, 1, 0).unwrap(); // res A t=0..2
+        l.bill_slot(3, 2, 0).unwrap(); // res B,C t=1..3, active=3
+        assert_eq!(l.active_now(), 3);
+        l.bill_slot(3, 0, 0).unwrap(); // t=2 all reserved
+        // t=3: A expired; B,C active
+        assert_eq!(l.active_now(), 2);
+        l.bill_slot(3, 0, 1).unwrap();
+        let r = l.report();
+        assert_eq!(r.reservations, 3);
+        assert_eq!(r.peak_active, 3);
+        assert!(r.identity_holds(&pricing(), 1e-9));
+    }
+
+    #[test]
+    fn zero_demand_slots_are_free_without_actions() {
+        let mut l = Ledger::new(pricing());
+        for _ in 0..5 {
+            l.bill_slot(0, 0, 0).unwrap();
+        }
+        assert_eq!(l.report().total, 0.0);
+    }
+
+    #[test]
+    fn identity_holds_on_mixed_run() {
+        let pr = Pricing::normalized(0.07, 0.3, 4);
+        let mut l = Ledger::new(pr);
+        let demands = [0u32, 2, 5, 1, 0, 7, 3, 3, 2, 1, 4, 0];
+        let mut rng = crate::util::rng::Rng::new(5);
+        for &d in &demands {
+            let active = l.active_now();
+            // random feasible decision
+            let max_new = 3u32;
+            let rnew = (rng.below(max_new as u64 + 1) as u32).min(d.saturating_sub(active) + 1);
+            let covered = (active + rnew).min(d);
+            let od = d - covered;
+            l.bill_slot(d, rnew, od).unwrap();
+        }
+        assert!(l.report().identity_holds(&pr, 1e-9));
+    }
+}

@@ -1,0 +1,35 @@
+//! # CloudReserve
+//!
+//! A production-grade reproduction of *"To Reserve or Not to Reserve:
+//! Optimal Online Multi-Instance Acquisition in IaaS Clouds"* (Wang, Li,
+//! Liang — 2013): online algorithms that combine on-demand and reserved
+//! IaaS instances to serve time-varying demand at near-optimal cost,
+//! without knowledge of the future.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L3** — this Rust crate: policies, ledger, traces, fleet simulator,
+//!   and a multi-tenant brokerage coordinator;
+//! * **L2** — a JAX compute graph (batched break-even window scans + AR
+//!   demand forecasting), AOT-lowered to HLO text at build time;
+//! * **L1** — Pallas kernels inside the L2 graph (see `python/compile/`).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
+//! client and the [`coordinator`] drives them on its analytics hot path.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod algos;
+pub mod analysis;
+pub mod coordinator;
+pub mod forecast;
+pub mod ledger;
+pub mod pricing;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub use algos::{Decision, Policy};
+pub use ledger::{CostReport, Ledger};
+pub use pricing::Pricing;

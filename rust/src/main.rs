@@ -1,0 +1,254 @@
+//! `cloudreserve` — CLI for the reservation brokerage.
+//!
+//! Subcommands:
+//! * `pricing-table` — reproduce Table I (catalog + normalized params).
+//! * `gen-traces`    — synthesize the Google-like population to CSV/BIN.
+//! * `classify`      — Fig. 4: per-user σ/μ classification + scatter.
+//! * `simulate`      — run the Sec. VII policy suite over a population,
+//!                     printing Table II and the Fig. 5 CDFs.
+//! * `serve`         — run the streaming broker on a synthetic feed with
+//!                     periodic PJRT analytics ticks (the L3 service demo).
+//! * `offline`       — exact offline OPT (small instances) for a demand
+//!                     sequence given on the command line.
+
+use cloudreserve::algos::offline;
+use cloudreserve::analysis::classify::{classify_population, group_counts};
+use cloudreserve::analysis::report::{render_cdf_table, render_fig4_scatter, render_table2, CostSeries};
+use cloudreserve::coordinator::{AnalyticsEngine, Broker, BrokerConfig, DemandEvent, PolicyKind};
+use cloudreserve::pricing::catalog::{ec2_small_compressed, render_table1};
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::fleet::run_benchmark_suite;
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::trace::{io as trace_io, Population};
+use cloudreserve::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("pricing-table") => cmd_pricing_table(),
+        Some("gen-traces") => cmd_gen_traces(&args),
+        Some("classify") => cmd_classify(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("offline") => cmd_offline(&args),
+        _ => {
+            eprintln!(
+                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline> [--options]\n\
+                 \n\
+                 gen-traces --users N --slots N --seed S --out FILE [--csv] [--plot-user U]\n\
+                 classify   [--traces FILE | --users N --slots N --seed S]\n\
+                 simulate   [--traces FILE | --users N --slots N] --seed S --threads N [--csv-out FILE]\n\
+                 serve      --users N --slots N --shards N --tick N [--artifacts DIR]\n\
+                 offline    --tau N --p F --alpha F d1 d2 d3 ..."
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_or_generate(args: &Args) -> anyhow::Result<Population> {
+    if let Some(path) = args.get("traces") {
+        let path = std::path::Path::new(path);
+        if path.extension().map(|e| e == "csv").unwrap_or(false) {
+            let slots = args.usize_or("slots", cloudreserve::trace::TRACE_SLOTS);
+            trace_io::read_csv(path, slots)
+        } else {
+            trace_io::read_bin(path)
+        }
+    } else {
+        let cfg = SynthConfig {
+            users: args.usize_or("users", 200),
+            slots: args.usize_or("slots", 10_000),
+            seed: args.u64_or("seed", 2013),
+            ..Default::default()
+        };
+        eprintln!("generating {} users x {} slots (seed {})", cfg.users, cfg.slots, cfg.seed);
+        Ok(generate(&cfg))
+    }
+}
+
+fn cmd_pricing_table() -> anyhow::Result<()> {
+    print!("{}", render_table1());
+    let pr = ec2_small_compressed();
+    println!(
+        "\ncompressed trace pricing (Sec. VII): p={:.6} alpha={:.4} tau={} minute-slots\n\
+         deterministic ratio 2-a = {:.4}, randomized e/(e-1+a) = {:.4}",
+        pr.p,
+        pr.alpha,
+        pr.tau,
+        pr.deterministic_ratio(),
+        pr.randomized_ratio()
+    );
+    Ok(())
+}
+
+fn cmd_gen_traces(args: &Args) -> anyhow::Result<()> {
+    let cfg = SynthConfig {
+        users: args.usize_or("users", cloudreserve::trace::NUM_USERS),
+        slots: args.usize_or("slots", cloudreserve::trace::TRACE_SLOTS),
+        seed: args.u64_or("seed", 2013),
+        ..Default::default()
+    };
+    let pop = generate(&cfg);
+    let out = args.str_or("out", "traces.bin");
+    let path = std::path::Path::new(&out);
+    if args.has("csv") || path.extension().map(|e| e == "csv").unwrap_or(false) {
+        trace_io::write_csv(&pop, path)?;
+    } else {
+        trace_io::write_bin(&pop, path)?;
+    }
+    let (g1, g2, g3) = group_counts(&pop);
+    println!("wrote {} users x {} slots to {out} (groups: {g1}/{g2}/{g3})", pop.len(), cfg.slots);
+    if let Some(uid) = args.get("plot-user") {
+        let uid: u32 = uid.parse()?;
+        let user = pop
+            .users
+            .iter()
+            .find(|u| u.user_id == uid)
+            .ok_or_else(|| anyhow::anyhow!("no user {uid}"))?;
+        // Fig. 3-style: per-day summary of the month-long curve
+        println!("Fig. 3 — demand curve of user {uid} (per-day mean/max):");
+        for (day, chunk) in user.demand.chunks(cloudreserve::trace::SLOTS_PER_DAY).enumerate() {
+            let s = cloudreserve::util::stats::summarize_u32(chunk);
+            println!("  day {day:>2}: mean {:>8.1}  max {:>6}", s.mean, s.max as u64);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> anyhow::Result<()> {
+    let pop = load_or_generate(args)?;
+    let rows = classify_population(&pop);
+    let (g1, g2, g3) = group_counts(&pop);
+    println!(
+        "Fig. 4 — user demand statistics: {} users -> G1={g1} ({:.0}%), G2={g2} ({:.0}%), G3={g3} ({:.0}%)",
+        pop.len(),
+        100.0 * g1 as f64 / pop.len() as f64,
+        100.0 * g2 as f64 / pop.len() as f64,
+        100.0 * g3 as f64 / pop.len() as f64,
+    );
+    let pts: Vec<(f64, f64)> = rows.iter().map(|(_, _, mean, cov)| (*mean, *cov)).collect();
+    print!("{}", render_fig4_scatter(&pts, 72, 20));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let pop = load_or_generate(args)?;
+    let pricing = ec2_small_compressed();
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+    let seed = args.u64_or("seed", 1);
+    eprintln!("running the Sec. VII suite over {} users ({} threads)...", pop.len(), threads);
+    let t0 = std::time::Instant::now();
+    let results = run_benchmark_suite(&pop, pricing, seed, threads);
+    eprintln!("suite done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let rows: Vec<(String, [f64; 4])> =
+        results.iter().map(|r| (r.policy.clone(), r.table2_row())).collect();
+    print!("{}", render_table2(&rows));
+
+    let series: Vec<CostSeries> = results
+        .iter()
+        .map(|r| CostSeries { name: r.policy.clone(), values: r.normalized(None) })
+        .collect();
+    println!();
+    print!(
+        "{}",
+        render_cdf_table("Fig. 5a — CDF of normalized cost (all users)", &series, 0.0, 2.0, 21)
+    );
+
+    if let Some(path) = args.get("csv-out") {
+        std::fs::write(path, cloudreserve::analysis::report::cdf_csv(&series, 0.0, 2.0, 101))?;
+        eprintln!("wrote CDF csv to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let users = args.usize_or("users", 64);
+    let slots = args.usize_or("slots", 2000);
+    let shards = args.usize_or("shards", 4);
+    let tick = args.usize_or("tick", 500);
+    let pricing = ec2_small_compressed();
+    let cfg = BrokerConfig { pricing, shards, queue_capacity: 8192, window: 64 };
+
+    let artifacts_dir = args.str_or("artifacts", "artifacts");
+    let engine = if std::path::Path::new(&artifacts_dir).join("manifest.json").exists() {
+        let rt = cloudreserve::runtime::Runtime::load_filtered(&artifacts_dir, |n| {
+            n.starts_with("fleet_step")
+        })?;
+        eprintln!("PJRT runtime up: platform={} artifacts={:?}", rt.platform(), rt.names());
+        Some(AnalyticsEngine::new(rt, pricing, 16, 128))
+    } else {
+        eprintln!("artifacts not found at {artifacts_dir}: serving without the analytics engine");
+        None
+    };
+
+    let pop = generate(&SynthConfig { users, slots, seed: args.u64_or("seed", 7), ..Default::default() });
+    let broker = Broker::start(cfg, PolicyKind::Deterministic { z: None });
+    let t0 = std::time::Instant::now();
+    for t in 0..slots {
+        for u in &pop.users {
+            broker.submit(DemandEvent { user_id: u.user_id, slot: t as u32, demand: u.demand[t] })?;
+        }
+        if t % tick == tick - 1 {
+            if let Some(engine) = &engine {
+                let posture = engine.tick(&broker)?;
+                eprintln!(
+                    "tick t={t}: mean reserve-pressure {:.3}, {} users over break-even | {}",
+                    posture.mean_pressure(),
+                    posture.over_breakeven().len(),
+                    broker.metrics().render()
+                );
+            } else {
+                eprintln!("t={t}: {}", broker.metrics().render());
+            }
+        }
+    }
+    let events = users * slots;
+    let report = broker.finish()?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {events} demand events in {dt:.2}s ({:.0} events/s); total cost {:.2} ({} reservations)",
+        events as f64 / dt,
+        report.total_cost(),
+        report.total_reservations()
+    );
+    Ok(())
+}
+
+fn cmd_offline(args: &Args) -> anyhow::Result<()> {
+    let tau = args.usize_or("tau", 3);
+    let p = args.f64_or("p", 0.1);
+    let alpha = args.f64_or("alpha", 0.5);
+    let pricing = Pricing::normalized(p, alpha, tau);
+    let demands: Vec<u32> = args
+        .positionals
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad demand '{s}'")))
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!demands.is_empty(), "give a demand sequence, e.g. `offline --tau 3 1 2 0 3`");
+    let sol = offline::optimal(&demands, &pricing);
+    println!(
+        "offline OPT: cost={:.4} reservations={} (lower bound {:.4})",
+        sol.cost,
+        sol.reservations,
+        offline::lower_bound(&demands, &pricing)
+    );
+    let mut det = cloudreserve::algos::deterministic::Deterministic::online(pricing);
+    let rep = cloudreserve::sim::run_policy(&mut det, &demands, pricing)?;
+    println!(
+        "A_beta online: cost={:.4} reservations={} -> ratio {:.4} (bound {:.4})",
+        rep.total,
+        rep.reservations,
+        rep.total / sol.cost.max(1e-12),
+        pricing.deterministic_ratio()
+    );
+    Ok(())
+}

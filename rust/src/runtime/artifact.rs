@@ -1,0 +1,129 @@
+//! Artifact metadata: the manifest entry describing one AOT-compiled HLO
+//! module (name, input/output shapes in HLO parameter order, static
+//! shape parameters).
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Parsed manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    /// Inputs in HLO parameter order: (name, dims).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Outputs in tuple order: (name, dims).
+    pub outputs: Vec<(String, Vec<usize>)>,
+    /// Static shape parameters (B, W, K, ...).
+    pub params: Vec<(String, usize)>,
+}
+
+impl ArtifactMeta {
+    pub fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest entry missing 'name'"))?
+            .to_string();
+        let kind = v
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest entry '{name}' missing 'kind'"))?
+            .to_string();
+        let file = v
+            .get("file")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest entry '{name}' missing 'file'"))?
+            .to_string();
+        let dims_of = |j: &Json, what: &str| -> Result<Vec<usize>> {
+            j.as_arr()
+                .ok_or_else(|| anyhow!("'{name}': {what} dims not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("'{name}': bad dim in {what}")))
+                .collect()
+        };
+        let io_of = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+            v.get(key)
+                .as_obj()
+                .ok_or_else(|| anyhow!("'{name}': '{key}' not an object"))?
+                .iter()
+                .map(|(k, dims)| Ok((k.clone(), dims_of(dims, k)?)))
+                .collect()
+        };
+        let inputs = io_of("inputs")?;
+        let outputs = io_of("outputs")?;
+        let params = v
+            .get("params")
+            .as_obj()
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, val)| val.as_usize().map(|u| (k.clone(), u)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ArtifactMeta { name, kind, file, inputs, outputs, params })
+    }
+
+    /// Static shape parameter lookup (0 if absent).
+    pub fn param(&self, key: &str) -> usize {
+        self.params.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0)
+    }
+}
+
+/// Output of a fleet-step analytics tick.
+#[derive(Debug, Clone)]
+pub struct FleetStepOutput {
+    /// Violation counts `V_u`, one per (unpadded) user.
+    pub counts: Vec<f32>,
+    /// Row-major `users × k` decision matrix: 1.0 iff `p·V_u > z_k`.
+    pub decisions: Vec<f32>,
+    /// Number of thresholds per user in `decisions`.
+    pub k: usize,
+}
+
+impl FleetStepOutput {
+    /// Decision for user `u` at threshold index `k`.
+    pub fn decided(&self, u: usize, k: usize) -> bool {
+        self.decisions[u * self.k + k] > 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn param_lookup_defaults_to_zero() {
+        let meta = ArtifactMeta {
+            name: "x".into(),
+            kind: "k".into(),
+            file: "f".into(),
+            inputs: vec![],
+            outputs: vec![],
+            params: vec![("B".into(), 8)],
+        };
+        assert_eq!(meta.param("B"), 8);
+        assert_eq!(meta.param("nope"), 0);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let v = json::parse(r#"{"name": "a"}"#).unwrap();
+        assert!(ArtifactMeta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn fleet_output_indexing() {
+        let out = FleetStepOutput {
+            counts: vec![1.0, 2.0],
+            decisions: vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+            k: 3,
+        };
+        assert!(out.decided(0, 0));
+        assert!(!out.decided(0, 1));
+        assert!(out.decided(1, 2));
+    }
+}

@@ -1,0 +1,302 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by `make artifacts`) and execute them from the Rust hot path.
+//!
+//! Wire protocol (see `python/compile/aot.py`): HLO **text** — the
+//! xla_extension 0.5.1 behind the published `xla` crate rejects jax≥0.5's
+//! 64-bit-id serialized protos, while the text parser reassigns ids.
+//! Every artifact is shape-specialized; `manifest.json` carries the
+//! catalog and this module picks a variant and zero-pads batches to fit.
+
+pub mod artifact;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json;
+pub use artifact::{ArtifactMeta, FleetStepOutput};
+
+/// A compiled artifact plus its manifest metadata.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with row-major f32 buffers. Inputs must be passed in the
+    /// artifact's HLO parameter order (= manifest order); names are checked.
+    /// Returns the flattened f32 outputs in tuple order.
+    pub fn execute_f32(&self, inputs: &[(&str, &[f32])]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, expects {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for ((name, buf), (want_name, dims)) in inputs.iter().zip(&self.meta.inputs) {
+            if name != want_name {
+                bail!(
+                    "artifact {}: input #{} is '{name}', expected '{want_name}' (parameter order matters)",
+                    self.meta.name,
+                    literals.len()
+                );
+            }
+            let expect: usize = dims.iter().product();
+            if expect != buf.len() {
+                bail!(
+                    "artifact {}: input '{name}' needs {expect} f32s ({dims:?}), got {}",
+                    self.meta.name,
+                    buf.len()
+                );
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(&dims_i64)
+                    .map_err(|e| anyhow!("reshape {name}: {e:?}"))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs, manifest says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}")))
+            .collect()
+    }
+}
+
+/// The artifact registry: a PJRT CPU client plus every compiled module.
+pub struct Runtime {
+    artifacts: HashMap<String, Artifact>,
+    dir: PathBuf,
+    platform: String,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Self::load_filtered(dir, |_| true)
+    }
+
+    /// Load a subset (predicate over artifact names) — tests and examples
+    /// use this to skip the big production variants for fast startup.
+    pub fn load_filtered(dir: impl AsRef<Path>, keep: impl Fn(&str) -> bool) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?} — run `make artifacts` first"))?;
+        let parsed = json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let entries = parsed.as_arr().ok_or_else(|| anyhow!("manifest: expected a JSON array"))?;
+
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("create PJRT CPU client: {e:?}"))?;
+        let platform = client.platform_name();
+
+        let mut artifacts = HashMap::new();
+        for entry in entries {
+            let meta = ArtifactMeta::from_json(entry)?;
+            if !keep(&meta.name) {
+                continue;
+            }
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+            artifacts.insert(meta.name.clone(), Artifact { meta, exe });
+        }
+        Ok(Runtime { artifacts, dir, platform })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (have: {:?})", self.names()))
+    }
+
+    /// Smallest loaded `fleet_step` variant that fits `(users, window, k)`;
+    /// the caller pads its batch to the variant's shape.
+    pub fn pick_fleet_step(&self, users: usize, window: usize, k: usize) -> Result<&Artifact> {
+        self.artifacts
+            .values()
+            .filter(|a| a.meta.kind == "fleet_step")
+            .filter(|a| {
+                a.meta.param("B") >= users && a.meta.param("W") >= window && a.meta.param("K") >= k
+            })
+            .min_by_key(|a| a.meta.param("B") * a.meta.param("W"))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no fleet_step artifact fits B>={users} W>={window} K>={k} (have: {:?})",
+                    self.names()
+                )
+            })
+    }
+
+    /// Run the fleet-step analytics tick, padding the batch as needed.
+    /// `demand`/`reserved` are `users × window` row-major; `z_grid` may be
+    /// shorter than the artifact's K (padded with +inf ⇒ never triggered).
+    pub fn fleet_step(
+        &self,
+        p: f64,
+        demand: &[f32],
+        reserved: &[f32],
+        users: usize,
+        window: usize,
+        z_grid: &[f32],
+    ) -> Result<FleetStepOutput> {
+        if demand.len() != users * window || reserved.len() != users * window {
+            bail!("fleet_step: demand/reserved must be users*window = {} f32s", users * window);
+        }
+        let artifact = self.pick_fleet_step(users, window, z_grid.len())?;
+        let b = artifact.meta.param("B");
+        let w = artifact.meta.param("W");
+        let k = artifact.meta.param("K");
+
+        let pad = |src: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; b * w];
+            for u in 0..users {
+                out[u * w..u * w + window].copy_from_slice(&src[u * window..(u + 1) * window]);
+            }
+            out
+        };
+        let d_pad = pad(demand);
+        let x_pad = pad(reserved);
+        let mut m_pad = vec![0.0f32; b * w];
+        for u in 0..users {
+            m_pad[u * w..u * w + window].iter_mut().for_each(|v| *v = 1.0);
+        }
+        // Thresholds are padded with a huge sentinel: strictly-greater
+        // comparisons never fire on the padding columns.
+        let mut z_pad = vec![f32::MAX; k];
+        z_pad[..z_grid.len()].copy_from_slice(z_grid);
+
+        let outs = artifact.execute_f32(&[
+            ("p", &[p as f32]),
+            ("demand", &d_pad),
+            ("reserved", &x_pad),
+            ("mask", &m_pad),
+            ("z_grid", &z_pad),
+        ])?;
+        let counts = outs[0][..users].to_vec();
+        let mut decisions = Vec::with_capacity(users * z_grid.len());
+        for u in 0..users {
+            decisions.extend_from_slice(&outs[1][u * k..u * k + z_grid.len()]);
+        }
+        Ok(FleetStepOutput { counts, decisions, k: z_grid.len() })
+    }
+
+    /// Batched AR forecast through the `ar_forecast` artifact. `history` is
+    /// `users × len` row-major (oldest first), `coef` is `users × (k+1)`.
+    /// Returns `(users × horizon, horizon)`.
+    pub fn ar_forecast(
+        &self,
+        history: &[f32],
+        coef: &[f32],
+        users: usize,
+        len: usize,
+    ) -> Result<(Vec<f32>, usize)> {
+        if history.len() != users * len || coef.len() % users != 0 {
+            bail!("ar_forecast: history must be users*len, coef users*(k+1)");
+        }
+        let k_user = coef.len() / users - 1;
+        let artifact = self
+            .artifacts
+            .values()
+            .filter(|a| a.meta.kind == "ar_forecast")
+            .filter(|a| {
+                a.meta.param("B") >= users && a.meta.param("L") >= len && a.meta.param("k") >= k_user
+            })
+            .min_by_key(|a| a.meta.param("B") * a.meta.param("L"))
+            .ok_or_else(|| anyhow!("no ar_forecast artifact fits B>={users} L>={len} k>={k_user}"))?;
+        let b = artifact.meta.param("B");
+        let l = artifact.meta.param("L");
+        let ka = artifact.meta.param("k");
+        let h = artifact.meta.param("H");
+
+        // History is right-aligned (newest last); left-pad with the oldest
+        // value so AR lags see a sensible, non-zero past.
+        let mut h_pad = vec![0.0f32; b * l];
+        for u in 0..users {
+            let row = &history[u * len..(u + 1) * len];
+            let lead = row.first().copied().unwrap_or(0.0);
+            h_pad[u * l..u * l + (l - len)].iter_mut().for_each(|v| *v = lead);
+            h_pad[u * l + (l - len)..(u + 1) * l].copy_from_slice(row);
+        }
+        // Coefficients [c, a_1..a_k_user] -> [c, a_1..a_ka] zero-padded.
+        let mut c_pad = vec![0.0f32; b * (ka + 1)];
+        for u in 0..users {
+            let src = &coef[u * (k_user + 1)..(u + 1) * (k_user + 1)];
+            c_pad[u * (ka + 1)..u * (ka + 1) + k_user + 1].copy_from_slice(src);
+        }
+        let outs = artifact.execute_f32(&[("history", &h_pad), ("coef", &c_pad)])?;
+        let mut fc = Vec::with_capacity(users * h);
+        for u in 0..users {
+            fc.extend_from_slice(&outs[0][u * h..(u + 1) * h]);
+        }
+        Ok((fc, h))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they
+    // need built artifacts); here we only test metadata parsing.
+    use super::artifact::ArtifactMeta;
+    use crate::util::json;
+
+    #[test]
+    fn meta_from_manifest_entry_preserves_order() {
+        let doc = r#"{"name": "fleet_step_b8_w64_k8", "kind": "fleet_step",
+            "file": "fleet_step_b8_w64_k8.hlo.txt",
+            "inputs": {"p": [1], "demand": [8, 64], "reserved": [8, 64],
+                       "mask": [8, 64], "z_grid": [8]},
+            "outputs": {"counts": [8], "decisions": [8, 8]},
+            "params": {"B": 8, "W": 64, "K": 8}}"#;
+        let v = json::parse(doc).unwrap();
+        let meta = ArtifactMeta::from_json(&v).unwrap();
+        assert_eq!(meta.name, "fleet_step_b8_w64_k8");
+        assert_eq!(meta.param("W"), 64);
+        assert_eq!(meta.inputs.len(), 5);
+        // inputs keep aot.py argument order (p, demand, reserved, mask, z_grid)
+        assert_eq!(meta.inputs[0].0, "p");
+        assert_eq!(meta.inputs[1].0, "demand");
+        assert_eq!(meta.inputs[4].0, "z_grid");
+        assert_eq!(meta.outputs[0].0, "counts");
+    }
+}

@@ -1,0 +1,238 @@
+//! Fleet-scale evaluation: run a suite of policies across a whole user
+//! population in parallel (std threads — one shard per core), producing the
+//! per-user normalized costs behind Fig. 5-7 and the per-group means of
+//! Table II.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::algos::{baselines, deterministic::Deterministic, randomized::Randomized, Policy};
+use crate::analysis::classify::{classify, Group};
+use crate::pricing::Pricing;
+use crate::sim::{all_on_demand_cost, run_policy};
+use crate::trace::Population;
+
+/// Which policy to instantiate per user (policies carry per-user state, so
+/// the fleet runner needs a factory, not an instance).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    AllOnDemand,
+    AllReserved,
+    Separate,
+    /// `A_z` with optional prediction window; `z = None` means `z = β`.
+    Deterministic { z: Option<f64>, window: usize },
+    /// Algorithm 2/4; the per-user draw is seeded from `seed ^ user_id`.
+    Randomized { window: usize, seed: u64 },
+}
+
+impl PolicySpec {
+    pub fn name(&self) -> String {
+        match self {
+            PolicySpec::AllOnDemand => "All-on-demand".into(),
+            PolicySpec::AllReserved => "All-reserved".into(),
+            PolicySpec::Separate => "Separate".into(),
+            PolicySpec::Deterministic { z, window } => match (z, window) {
+                (None, 0) => "Deterministic".into(),
+                (None, w) => format!("Deterministic(w={w})"),
+                (Some(z), 0) => format!("Deterministic(z={z:.3})"),
+                (Some(z), w) => format!("Deterministic(z={z:.3},w={w})"),
+            },
+            PolicySpec::Randomized { window: 0, .. } => "Randomized".into(),
+            PolicySpec::Randomized { window, .. } => format!("Randomized(w={window})"),
+        }
+    }
+
+    /// Instantiate for one user.
+    pub fn build(&self, pricing: Pricing, user_id: u32) -> Box<dyn Policy> {
+        match *self {
+            PolicySpec::AllOnDemand => Box::new(baselines::AllOnDemand::new()),
+            PolicySpec::AllReserved => Box::new(baselines::AllReserved::new(pricing)),
+            PolicySpec::Separate => Box::new(baselines::Separate::new(pricing)),
+            PolicySpec::Deterministic { z, window } => {
+                let z = z.unwrap_or_else(|| pricing.beta());
+                Box::new(Deterministic::new(pricing, z, window))
+            }
+            PolicySpec::Randomized { window, seed } => {
+                Box::new(Randomized::with_window(pricing, window, seed ^ (user_id as u64) << 17))
+            }
+        }
+    }
+}
+
+/// Per-user outcome for one policy.
+#[derive(Debug, Clone)]
+pub struct UserResult {
+    pub user_id: u32,
+    pub group: Group,
+    /// Cost normalized to All-on-demand (the Sec. VII normalization).
+    /// Users with zero demand are reported as 1.0 (no cost either way).
+    pub normalized_cost: f64,
+    pub absolute_cost: f64,
+    pub reservations: u64,
+}
+
+/// Fleet-wide outcome of one policy.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub policy: String,
+    pub per_user: Vec<UserResult>,
+}
+
+impl FleetResult {
+    /// Normalized costs of users in a group (or all).
+    pub fn normalized(&self, group: Option<Group>) -> Vec<f64> {
+        self.per_user
+            .iter()
+            .filter(|u| group.map(|g| u.group == g).unwrap_or(true))
+            .map(|u| u.normalized_cost)
+            .collect()
+    }
+
+    /// Mean normalized cost — a Table II cell.
+    pub fn mean_normalized(&self, group: Option<Group>) -> f64 {
+        let v = self.normalized(group);
+        if v.is_empty() {
+            f64::NAN
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    }
+
+    /// Table II row: [all, g1, g2, g3].
+    pub fn table2_row(&self) -> [f64; 4] {
+        [
+            self.mean_normalized(None),
+            self.mean_normalized(Some(Group::G1Sporadic)),
+            self.mean_normalized(Some(Group::G2Medium)),
+            self.mean_normalized(Some(Group::G3Stable)),
+        ]
+    }
+}
+
+/// Run one policy spec across the population, sharded over `threads`.
+pub fn run_fleet(pop: &Population, pricing: Pricing, spec: &PolicySpec, threads: usize) -> FleetResult {
+    let threads = threads.max(1).min(pop.users.len().max(1));
+    let (tx, rx) = mpsc::channel::<Vec<UserResult>>();
+    thread::scope(|scope| {
+        for shard in 0..threads {
+            let tx = tx.clone();
+            let spec = spec.clone();
+            let users = &pop.users;
+            scope.spawn(move || {
+                let mut out = Vec::new();
+                let mut idx = shard;
+                while idx < users.len() {
+                    let u = &users[idx];
+                    let mut policy = spec.build(pricing, u.user_id);
+                    let report = run_policy(policy.as_mut(), &u.demand, pricing)
+                        .unwrap_or_else(|e| panic!("user {}: infeasible decision: {e}", u.user_id));
+                    let denom = all_on_demand_cost(&u.demand, &pricing);
+                    let normalized = if denom > 0.0 { report.total / denom } else { 1.0 };
+                    out.push(UserResult {
+                        user_id: u.user_id,
+                        group: classify(&u.summary()),
+                        normalized_cost: normalized,
+                        absolute_cost: report.total,
+                        reservations: report.reservations,
+                    });
+                    idx += threads;
+                }
+                tx.send(out).expect("fleet collector alive");
+            });
+        }
+        drop(tx);
+        let mut per_user: Vec<UserResult> = rx.iter().flatten().collect();
+        per_user.sort_by_key(|u| u.user_id);
+        FleetResult { policy: spec.name(), per_user }
+    })
+}
+
+/// Run the full Sec. VII suite (5 policies) across the population.
+pub fn run_benchmark_suite(pop: &Population, pricing: Pricing, seed: u64, threads: usize) -> Vec<FleetResult> {
+    [
+        PolicySpec::AllOnDemand,
+        PolicySpec::AllReserved,
+        PolicySpec::Separate,
+        PolicySpec::Deterministic { z: None, window: 0 },
+        PolicySpec::Randomized { window: 0, seed },
+    ]
+    .iter()
+    .map(|spec| run_fleet(pop, pricing, spec, threads))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::{generate, SynthConfig};
+
+    fn small_pop() -> Population {
+        generate(&SynthConfig { users: 24, slots: 3000, seed: 5, ..Default::default() })
+    }
+
+    fn pricing() -> Pricing {
+        // compressed EC2 small but with tau that fits the short test trace
+        Pricing::normalized(0.08 / 69.0, 0.4875, 1000)
+    }
+
+    #[test]
+    fn all_on_demand_normalizes_to_one() {
+        let pop = small_pop();
+        let r = run_fleet(&pop, pricing(), &PolicySpec::AllOnDemand, 4);
+        for u in &r.per_user {
+            assert!((u.normalized_cost - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sharding_is_deterministic() {
+        let pop = small_pop();
+        let spec = PolicySpec::Deterministic { z: None, window: 0 };
+        let a = run_fleet(&pop, pricing(), &spec, 1);
+        let b = run_fleet(&pop, pricing(), &spec, 7);
+        for (x, y) in a.per_user.iter().zip(&b.per_user) {
+            assert_eq!(x.user_id, y.user_id);
+            assert!((x.normalized_cost - y.normalized_cost).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_beats_all_on_demand_overall() {
+        let pop = small_pop();
+        let det = run_fleet(&pop, pricing(), &PolicySpec::Deterministic { z: None, window: 0 }, 4);
+        // mean normalized cost must be <= 1 + epsilon: A_beta never pays
+        // more than (2-alpha) OPT <= (2-alpha) * AllOnDemand, and on mixed
+        // populations it should actually save.
+        let mean = det.mean_normalized(None);
+        assert!(mean <= 1.05, "mean normalized {mean}");
+    }
+
+    #[test]
+    fn randomized_seed_gives_reproducible_fleet() {
+        let pop = small_pop();
+        let spec = PolicySpec::Randomized { window: 0, seed: 99 };
+        let a = run_fleet(&pop, pricing(), &spec, 3);
+        let b = run_fleet(&pop, pricing(), &spec, 5);
+        for (x, y) in a.per_user.iter().zip(&b.per_user) {
+            assert!((x.normalized_cost - y.normalized_cost).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn suite_runs_all_five() {
+        let pop = small_pop();
+        let results = run_benchmark_suite(&pop, pricing(), 1, 4);
+        assert_eq!(results.len(), 5);
+        for r in &results {
+            assert_eq!(r.per_user.len(), pop.users.len());
+        }
+    }
+
+    #[test]
+    fn table2_row_shape() {
+        let pop = small_pop();
+        let r = run_fleet(&pop, pricing(), &PolicySpec::AllOnDemand, 2);
+        let row = r.table2_row();
+        assert!((row[0] - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,87 @@
+//! Simulation engine: replay demand traces through policies, bill through
+//! the [`Ledger`](crate::ledger::Ledger), and aggregate fleet-wide results
+//! (the machinery behind Fig. 5-7 and Table II).
+
+pub mod fleet;
+
+use crate::algos::Policy;
+use crate::ledger::{CostReport, Ledger, LedgerError};
+use crate::pricing::Pricing;
+
+/// Run one policy over one demand curve, billing every slot.
+///
+/// `future` slices are taken from the *actual* demand (the paper's
+/// assumption that short-term predictions are reliable, Sec. VI); pass a
+/// forecaster-backed provider through [`run_policy_with`] to study
+/// imperfect predictions.
+pub fn run_policy(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> Result<CostReport, LedgerError> {
+    let w = policy.window();
+    run_policy_with(policy, demands, pricing, |t| {
+        let hi = (t + 1 + w).min(demands.len());
+        demands[t + 1..hi].to_vec()
+    })
+}
+
+/// Run one policy with a custom future-demand provider (`t -> predicted
+/// demands for t+1..=t+w`).
+pub fn run_policy_with(
+    policy: &mut dyn Policy,
+    demands: &[u32],
+    pricing: Pricing,
+    mut future: impl FnMut(usize) -> Vec<u32>,
+) -> Result<CostReport, LedgerError> {
+    let mut ledger = Ledger::new(pricing);
+    let w = policy.window();
+    for (t, &d) in demands.iter().enumerate() {
+        let fut = if w == 0 { Vec::new() } else { future(t) };
+        let dec = policy.decide(d, &fut);
+        ledger.bill_slot(d, dec.reserve, dec.on_demand)?;
+    }
+    Ok(ledger.report())
+}
+
+/// Cost of serving a demand curve entirely on demand (`S = p·Σd_t`) — the
+/// normalization denominator used throughout Sec. VII.
+pub fn all_on_demand_cost(demands: &[u32], pricing: &Pricing) -> f64 {
+    pricing.p * demands.iter().map(|&d| d as u64).sum::<u64>() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::baselines::AllOnDemand;
+    use crate::algos::deterministic::Deterministic;
+
+    #[test]
+    fn run_policy_matches_manual_bill() {
+        let pricing = Pricing::normalized(0.1, 0.5, 4);
+        let demands = [1u32, 2, 0, 3];
+        let r = run_policy(&mut AllOnDemand::new(), &demands, pricing).unwrap();
+        assert!((r.total - 0.1 * 6.0).abs() < 1e-12);
+        assert!((r.total - all_on_demand_cost(&demands, &pricing)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn custom_future_provider_is_used() {
+        // A window policy fed an all-zero forecast behaves like one that
+        // never sees future demand spikes.
+        let pricing = Pricing::normalized(0.1, 0.0, 50);
+        let demands = vec![1u32; 40];
+        let mut with_oracle = Deterministic::with_window(pricing, 10);
+        let mut with_zeros = Deterministic::with_window(pricing, 10);
+        let r_oracle = run_policy(&mut with_oracle, &demands, pricing).unwrap();
+        let r_zeros =
+            run_policy_with(&mut with_zeros, &demands, pricing, |_| vec![0; 10]).unwrap();
+        // oracle foresees break-even sooner -> fewer on-demand slots
+        assert!(r_oracle.on_demand_slots <= r_zeros.on_demand_slots);
+    }
+
+    #[test]
+    fn identity_holds_for_policy_runs() {
+        let pricing = Pricing::normalized(0.05, 0.4875, 30);
+        let demands: Vec<u32> = (0..300).map(|i| ((i / 17) % 4) as u32).collect();
+        let mut det = Deterministic::online(pricing);
+        let r = run_policy(&mut det, &demands, pricing).unwrap();
+        assert!(r.identity_holds(&pricing, 1e-9));
+    }
+}

@@ -1,0 +1,193 @@
+//! Trace persistence: a CSV form (`user_id,slot,demand`, sparse — zero
+//! slots omitted) for interoperability, and a compact binary form for the
+//! 933-user month-long population (run-length encoded, ~100x smaller).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Population, UserTrace};
+
+/// Write a population as sparse CSV. NOTE: the format omits zero-demand
+/// slots, so users whose entire curve is zero do not round-trip (the
+/// binary format is lossless).
+pub fn write_csv(pop: &Population, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    writeln!(w, "user_id,slot,demand")?;
+    for u in &pop.users {
+        for (t, &d) in u.demand.iter().enumerate() {
+            if d > 0 {
+                writeln!(w, "{},{},{}", u.user_id, t, d)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a sparse CSV population; `slots` fixes every user's curve length.
+pub fn read_csv(path: &Path, slots: usize) -> Result<Population> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut users: std::collections::BTreeMap<u32, Vec<u32>> = std::collections::BTreeMap::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if lineno == 0 && line.starts_with("user_id") {
+            continue;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let (Some(uid), Some(slot), Some(d)) = (parts.next(), parts.next(), parts.next()) else {
+            bail!("line {}: expected user_id,slot,demand, got '{line}'", lineno + 1);
+        };
+        let uid: u32 = uid.trim().parse().with_context(|| format!("line {}: bad user_id", lineno + 1))?;
+        let slot: usize = slot.trim().parse().with_context(|| format!("line {}: bad slot", lineno + 1))?;
+        let d: u32 = d.trim().parse().with_context(|| format!("line {}: bad demand", lineno + 1))?;
+        if slot >= slots {
+            bail!("line {}: slot {slot} >= trace length {slots}", lineno + 1);
+        }
+        users.entry(uid).or_insert_with(|| vec![0; slots])[slot] = d;
+    }
+    Ok(Population {
+        users: users.into_iter().map(|(uid, demand)| UserTrace::new(uid, demand)).collect(),
+    })
+}
+
+const MAGIC: &[u8; 8] = b"CLDRSV01";
+
+/// Write the compact run-length-encoded binary form.
+pub fn write_bin(pop: &Population, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(pop.users.len() as u32).to_le_bytes())?;
+    for u in &pop.users {
+        w.write_all(&u.user_id.to_le_bytes())?;
+        w.write_all(&(u.demand.len() as u32).to_le_bytes())?;
+        // RLE: (value: u32, run: u32)*
+        let mut runs: Vec<(u32, u32)> = Vec::new();
+        for &d in &u.demand {
+            match runs.last_mut() {
+                Some((v, r)) if *v == d => *r += 1,
+                _ => runs.push((d, 1)),
+            }
+        }
+        w.write_all(&(runs.len() as u32).to_le_bytes())?;
+        for (v, r) in runs {
+            w.write_all(&v.to_le_bytes())?;
+            w.write_all(&r.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the binary form.
+pub fn read_bin(path: &Path) -> Result<Population> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a cloudreserve trace file (bad magic)");
+    }
+    let mut u32buf = [0u8; 4];
+    let mut read_u32 = |r: &mut BufReader<File>| -> Result<u32> {
+        r.read_exact(&mut u32buf)?;
+        Ok(u32::from_le_bytes(u32buf))
+    };
+    let n_users = read_u32(&mut r)? as usize;
+    if n_users > 10_000_000 {
+        bail!("implausible user count {n_users}");
+    }
+    let mut users = Vec::with_capacity(n_users);
+    for _ in 0..n_users {
+        let uid = read_u32(&mut r)?;
+        let len = read_u32(&mut r)? as usize;
+        let n_runs = read_u32(&mut r)? as usize;
+        let mut demand = Vec::with_capacity(len);
+        for _ in 0..n_runs {
+            let v = read_u32(&mut r)?;
+            let run = read_u32(&mut r)? as usize;
+            demand.extend(std::iter::repeat(v).take(run));
+        }
+        if demand.len() != len {
+            bail!("user {uid}: RLE expands to {} slots, header says {len}", demand.len());
+        }
+        users.push(UserTrace::new(uid, demand));
+    }
+    Ok(Population { users })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::{generate, SynthConfig};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("cloudreserve_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let pop = generate(&SynthConfig { users: 5, slots: 300, ..Default::default() });
+        let path = tmp("pop.csv");
+        write_csv(&pop, &path).unwrap();
+        let back = read_csv(&path, 300).unwrap();
+        // sparse CSV drops all-zero users by design; compare the rest
+        let nonzero: Vec<_> = pop.users.iter().filter(|u| u.total_demand() > 0).collect();
+        assert_eq!(nonzero.len(), back.users.len());
+        for (a, b) in nonzero.iter().zip(&back.users) {
+            assert_eq!(*a, b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let pop = generate(&SynthConfig { users: 8, slots: 500, ..Default::default() });
+        let path = tmp("pop.bin");
+        write_bin(&pop, &path).unwrap();
+        let back = read_bin(&path).unwrap();
+        assert_eq!(pop.users, back.users);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bin_is_compact_for_sparse_traces() {
+        // mostly-zero trace compresses far below 4 bytes/slot
+        let mut demand = vec![0u32; 10_000];
+        demand[5000] = 3;
+        let pop = Population { users: vec![UserTrace::new(0, demand)] };
+        let path = tmp("sparse.bin");
+        write_bin(&pop, &path).unwrap();
+        let size = std::fs::metadata(&path).unwrap().len();
+        assert!(size < 200, "sparse trace file is {size} bytes");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad.bin");
+        std::fs::write(&path, b"NOTATRACE").unwrap();
+        assert!(read_bin(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_out_of_range_slot() {
+        let path = tmp("bad.csv");
+        std::fs::write(&path, "user_id,slot,demand\n0,999,1\n").unwrap();
+        assert!(read_csv(&path, 100).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_malformed_line() {
+        let path = tmp("mal.csv");
+        std::fs::write(&path, "user_id,slot,demand\n0,abc,1\n").unwrap();
+        assert!(read_csv(&path, 100).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

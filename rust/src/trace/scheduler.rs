@@ -1,0 +1,255 @@
+//! Task → instance packing: the paper's trace preprocessing (Sec. VII-A,
+//! "Demand Curve").
+//!
+//! The Google traces record *tasks* with resource requirements; the paper
+//! schedules them onto instances of fixed capacity ("we set an instance to
+//! have the same computing capacity as a cluster machine"), with
+//! anti-affinity: "computational tasks that cannot run on the same server
+//! in the traces (e.g., tasks of MapReduce) are scheduled to different
+//! instances". The per-slot instance count is the demand curve `d_t`.
+//!
+//! This module reproduces that pipeline on synthetic task streams: a
+//! first-fit packer over (cpu, mem) vectors with anti-affinity groups.
+
+use crate::util::rng::Rng;
+
+/// A computational task to place.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    /// Arrival slot.
+    pub start: usize,
+    /// Duration in slots.
+    pub duration: usize,
+    /// Normalized CPU requirement in (0, 1].
+    pub cpu: f64,
+    /// Normalized memory requirement in (0, 1].
+    pub mem: f64,
+    /// Tasks sharing an anti-affinity group may not co-locate
+    /// (0 = no constraint).
+    pub anti_affinity: u32,
+}
+
+/// Instance capacity (a "cluster machine": normalized to 1.0 each axis).
+#[derive(Debug, Clone, Copy)]
+pub struct Capacity {
+    pub cpu: f64,
+    pub mem: f64,
+}
+
+impl Default for Capacity {
+    fn default() -> Self {
+        Capacity { cpu: 1.0, mem: 1.0 }
+    }
+}
+
+/// One running instance during packing.
+#[derive(Debug, Clone)]
+struct Instance {
+    cpu_free: f64,
+    mem_free: f64,
+    /// anti-affinity groups currently present
+    groups: Vec<u32>,
+    /// slot at which the last task on this instance ends
+    busy_until: usize,
+}
+
+/// Pack tasks onto instances slot by slot (first fit, arrival order) and
+/// return the demand curve: number of instances holding at least one task
+/// per slot.
+///
+/// Packing is *per-slot* renewed: an instance exists while it holds at
+/// least one running task (IaaS instances are billed hourly, the ledger
+/// handles billing; here we only need concurrent instance counts).
+pub fn demand_curve(tasks: &[Task], capacity: Capacity, slots: usize) -> Vec<u32> {
+    // Sweep over slots; maintain active instances with their tasks.
+    // For tractability on month-long traces we process arrival events.
+    #[derive(Debug)]
+    struct Placed {
+        instance: usize,
+        end: usize,
+        cpu: f64,
+        mem: f64,
+        group: u32,
+    }
+    let mut by_start: Vec<&Task> = tasks.iter().collect();
+    by_start.sort_by_key(|t| t.start);
+
+    let mut instances: Vec<Instance> = Vec::new();
+    let mut placed: Vec<Placed> = Vec::new();
+    let mut demand = vec![0u32; slots];
+    let mut next_task = 0usize;
+
+    for t in 0..slots {
+        // release finished tasks
+        placed.retain(|p| {
+            if p.end <= t {
+                let inst = &mut instances[p.instance];
+                inst.cpu_free += p.cpu;
+                inst.mem_free += p.mem;
+                if p.group != 0 {
+                    if let Some(pos) = inst.groups.iter().position(|&g| g == p.group) {
+                        inst.groups.swap_remove(pos);
+                    }
+                }
+                false
+            } else {
+                true
+            }
+        });
+        // place arrivals
+        while next_task < by_start.len() && by_start[next_task].start == t {
+            let task = by_start[next_task];
+            next_task += 1;
+            if task.duration == 0 || task.cpu <= 0.0 || task.mem <= 0.0 {
+                continue; // degenerate task: nothing to place
+            }
+            let end = (t + task.duration).min(slots);
+            // first fit
+            let slot_inst = instances.iter().position(|i| {
+                i.cpu_free >= task.cpu - 1e-9
+                    && i.mem_free >= task.mem - 1e-9
+                    && (task.anti_affinity == 0 || !i.groups.contains(&task.anti_affinity))
+                    && i.busy_until > t // only reuse instances that are alive now
+            });
+            let idx = match slot_inst {
+                Some(i) => i,
+                None => {
+                    // reuse a dead slot or push a new instance
+                    if let Some(i) = instances.iter().position(|i| i.busy_until <= t) {
+                        instances[i] = Instance {
+                            cpu_free: capacity.cpu,
+                            mem_free: capacity.mem,
+                            groups: Vec::new(),
+                            busy_until: t,
+                        };
+                        i
+                    } else {
+                        instances.push(Instance {
+                            cpu_free: capacity.cpu,
+                            mem_free: capacity.mem,
+                            groups: Vec::new(),
+                            busy_until: t,
+                        });
+                        instances.len() - 1
+                    }
+                }
+            };
+            let inst = &mut instances[idx];
+            inst.cpu_free -= task.cpu;
+            inst.mem_free -= task.mem;
+            if task.anti_affinity != 0 {
+                inst.groups.push(task.anti_affinity);
+            }
+            inst.busy_until = inst.busy_until.max(end);
+            placed.push(Placed { instance: idx, end, cpu: task.cpu, mem: task.mem, group: task.anti_affinity });
+        }
+        // count live instances
+        demand[t] = instances.iter().filter(|i| i.busy_until > t).count() as u32;
+    }
+    demand
+}
+
+/// Generate a synthetic task stream resembling one user's job submissions:
+/// batched MapReduce-style waves (anti-affine shards) plus singleton tasks.
+pub fn synth_tasks(slots: usize, intensity: f64, rng: &mut Rng) -> Vec<Task> {
+    let mut tasks = Vec::new();
+    let mut group_id = 1u32;
+    let mut t = rng.exponential(intensity.max(1e-6)) as usize;
+    while t < slots {
+        if rng.chance(0.3) {
+            // MapReduce wave: n shards that must not co-locate
+            let shards = 2 + rng.below(12) as usize;
+            let dur = (30.0 + rng.exponential(1.0 / 120.0)) as usize;
+            for _ in 0..shards {
+                tasks.push(Task {
+                    start: t,
+                    duration: dur.max(5),
+                    cpu: 0.3 + rng.f64() * 0.4,
+                    mem: 0.2 + rng.f64() * 0.4,
+                    anti_affinity: group_id,
+                });
+            }
+            group_id += 1;
+        } else {
+            tasks.push(Task {
+                start: t,
+                duration: (10.0 + rng.exponential(1.0 / 90.0)) as usize,
+                cpu: 0.1 + rng.f64() * 0.6,
+                mem: 0.1 + rng.f64() * 0.6,
+                anti_affinity: 0,
+            });
+        }
+        t += 1 + rng.exponential(intensity.max(1e-6)) as usize;
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_task_single_instance() {
+        let tasks = vec![Task { start: 2, duration: 3, cpu: 0.5, mem: 0.5, anti_affinity: 0 }];
+        let d = demand_curve(&tasks, Capacity::default(), 10);
+        assert_eq!(d, vec![0, 0, 1, 1, 1, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn small_tasks_pack_together() {
+        let tasks: Vec<Task> = (0..4)
+            .map(|_| Task { start: 0, duration: 5, cpu: 0.2, mem: 0.2, anti_affinity: 0 })
+            .collect();
+        let d = demand_curve(&tasks, Capacity::default(), 6);
+        assert_eq!(d[0], 1, "four 0.2-cpu tasks fit one instance");
+    }
+
+    #[test]
+    fn big_tasks_need_separate_instances() {
+        let tasks: Vec<Task> = (0..3)
+            .map(|_| Task { start: 0, duration: 5, cpu: 0.8, mem: 0.5, anti_affinity: 0 })
+            .collect();
+        let d = demand_curve(&tasks, Capacity::default(), 6);
+        assert_eq!(d[0], 3);
+    }
+
+    #[test]
+    fn anti_affinity_forces_spread() {
+        // two small tasks that WOULD fit together but share a group
+        let tasks: Vec<Task> = (0..2)
+            .map(|_| Task { start: 0, duration: 4, cpu: 0.1, mem: 0.1, anti_affinity: 7 })
+            .collect();
+        let d = demand_curve(&tasks, Capacity::default(), 5);
+        assert_eq!(d[0], 2, "anti-affine shards must not co-locate");
+    }
+
+    #[test]
+    fn instances_are_reused_after_release() {
+        let tasks = vec![
+            Task { start: 0, duration: 2, cpu: 0.9, mem: 0.9, anti_affinity: 0 },
+            Task { start: 3, duration: 2, cpu: 0.9, mem: 0.9, anti_affinity: 0 },
+        ];
+        let d = demand_curve(&tasks, Capacity::default(), 6);
+        // never more than 1 instance alive
+        assert!(d.iter().all(|&x| x <= 1), "{d:?}");
+    }
+
+    #[test]
+    fn synth_stream_produces_plausible_curve() {
+        let mut rng = Rng::new(11);
+        let tasks = synth_tasks(2000, 1.0 / 50.0, &mut rng);
+        assert!(!tasks.is_empty());
+        let d = demand_curve(&tasks, Capacity::default(), 2000);
+        assert!(d.iter().any(|&x| x > 0));
+        // demand never exceeds total task count
+        let peak = d.iter().max().unwrap();
+        assert!(*peak as usize <= tasks.len());
+    }
+
+    #[test]
+    fn degenerate_tasks_are_skipped() {
+        let tasks = vec![Task { start: 0, duration: 0, cpu: 0.5, mem: 0.5, anti_affinity: 0 }];
+        let d = demand_curve(&tasks, Capacity::default(), 3);
+        assert_eq!(d, vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Minimal micro-benchmark harness (criterion is not available in the
+//! offline vendor set). Provides warmup, repeated timed runs, and a robust
+//! summary (median / p10 / p90 / mean) printed in a fixed, grep-friendly
+//! format that the bench binaries under `rust/benches/` share.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration for each sample.
+    pub samples_ns: Vec<f64>,
+    /// Iterations executed per sample.
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::quantile_sorted(&s, 0.5)
+    }
+
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::quantile_sorted(&s, q)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len().max(1) as f64
+    }
+
+    /// Print the standard one-line report:
+    /// `bench <name> median 12.3us p10 11us p90 14us mean 12.5us (20 samples x 100 iters)`
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} median {:>12} p10 {:>12} p90 {:>12} mean {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.quantile_ns(0.10)),
+            fmt_ns(self.quantile_ns(0.90)),
+            fmt_ns(self.mean_ns()),
+            self.samples_ns.len(),
+            self.iters_per_sample
+        );
+    }
+
+    /// Throughput helper: items processed per second given items/iter.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns() * 1e-9)
+    }
+}
+
+/// Human formatting of nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with sensible defaults for this repo's workloads.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            samples: 15,
+            min_sample_time: Duration::from_millis(50),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+
+    /// Run `f` repeatedly and measure. A `black_box`-style sink is applied by
+    /// requiring `f` to return a value which we consume volatilely.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibration: figure out how many iters fit a sample.
+        let start = Instant::now();
+        let mut iters_done = 0u64;
+        while start.elapsed() < self.warmup || iters_done == 0 {
+            sink(f());
+            iters_done += 1;
+            if iters_done > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = start.elapsed().as_secs_f64() / iters_done as f64;
+        let iters_per_sample =
+            ((self.min_sample_time.as_secs_f64() / per_iter.max(1e-12)) as u64).clamp(1, 10_000_000);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                sink(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples_ns.push(dt / iters_per_sample as f64);
+        }
+        BenchResult { name: name.to_string(), samples_ns, iters_per_sample }
+    }
+}
+
+/// Prevent the optimizer from deleting the benchmarked computation.
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            min_sample_time: Duration::from_millis(2),
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.samples_ns.len(), 3);
+        assert!(r.median_ns() > 0.0);
+        assert!(r.throughput(100.0) > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

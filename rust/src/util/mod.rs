@@ -1,0 +1,9 @@
+//! In-tree substitutes for crates unavailable in the offline vendor set
+//! (rand, clap, criterion, proptest), plus shared statistics helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

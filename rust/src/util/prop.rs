@@ -1,0 +1,145 @@
+//! Tiny property-based testing harness (proptest is not available in the
+//! offline vendor set). Generates random cases from a seeded [`Rng`], runs a
+//! property, and on failure attempts greedy shrinking via a user-provided
+//! shrinker before reporting the minimal counterexample and the seed needed
+//! to replay it.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed is overridable via env for CI reproduction of failures.
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC10D_5EED);
+        Config { cases: 64, seed, max_shrink_steps: 400 }
+    }
+}
+
+/// Run `prop` against `cases` random inputs produced by `gen`.
+/// `shrink` proposes smaller variants of a failing input (return empty to
+/// stop). Panics with the minimal counterexample on failure.
+pub fn check<T, G, P, S>(cfg: &Config, name: &str, mut gen: G, mut prop: P, mut shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut input = gen(&mut rng);
+        if let Err(mut msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&input) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        input = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  {msg}\n  minimal input: {input:?}\n  replay with PROP_SEED={seed}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: property check without shrinking.
+pub fn check_no_shrink<T, G, P>(cfg: &Config, name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(cfg, name, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for demand sequences: try truncations, halving the
+/// values, and zeroing single positions.
+pub fn shrink_demand(d: &Vec<u32>) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    if d.len() > 1 {
+        out.push(d[..d.len() / 2].to_vec());
+        out.push(d[..d.len() - 1].to_vec());
+        out.push(d[d.len() / 2..].to_vec());
+    }
+    if d.iter().any(|&x| x > 0) {
+        out.push(d.iter().map(|&x| x / 2).collect());
+    }
+    for i in 0..d.len().min(8) {
+        if d[i] > 0 {
+            let mut c = d.clone();
+            c[i] = 0;
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config { cases: 32, seed: 1, max_shrink_steps: 10 };
+        check_no_shrink(
+            &cfg,
+            "sum-nonneg",
+            |r| (0..8).map(|_| r.below(10) as u32).collect::<Vec<u32>>(),
+            |d| {
+                let s: u32 = d.iter().sum();
+                if s < u32::MAX {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small' failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        let cfg = Config { cases: 64, seed: 2, max_shrink_steps: 100 };
+        check(
+            &cfg,
+            "always-small",
+            |r| (0..10).map(|_| r.below(100) as u32).collect::<Vec<u32>>(),
+            |d| {
+                if d.iter().all(|&x| x < 90) {
+                    Ok(())
+                } else {
+                    Err(format!("found value >= 90 in {d:?}"))
+                }
+            },
+            shrink_demand,
+        );
+    }
+
+    #[test]
+    fn shrinker_produces_smaller_candidates() {
+        let cands = shrink_demand(&vec![4, 5, 6, 7]);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().any(|c| c.len() < 4));
+    }
+}

@@ -1,0 +1,187 @@
+//! Descriptive statistics and empirical-CDF helpers used by the trace
+//! classifier (Fig. 4), the cost reports (Fig. 5), and the bench harness.
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Coefficient of variation sigma/mu — the paper's demand "fluctuation
+    /// level" (Sec. VII-A). Returns +inf for zero-mean, non-degenerate data.
+    pub fn cov(&self) -> f64 {
+        if self.mean == 0.0 {
+            if self.std == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Compute summary statistics (population standard deviation).
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        if x < min {
+            min = x;
+        }
+        if x > max {
+            max = x;
+        }
+    }
+    Summary { n: xs.len(), mean, std: var.sqrt(), min, max }
+}
+
+/// Summary over integer demand curves.
+pub fn summarize_u32(xs: &[u32]) -> Summary {
+    // Stream to avoid allocating a second copy of month-long minute traces.
+    if xs.is_empty() {
+        return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mut sum = 0.0f64;
+    let mut sumsq = 0.0f64;
+    let (mut min, mut max) = (u32::MAX, 0u32);
+    for &x in xs {
+        let f = x as f64;
+        sum += f;
+        sumsq += f * f;
+        min = min.min(x);
+        max = max.max(x);
+    }
+    let mean = sum / n;
+    let var = (sumsq / n - mean * mean).max(0.0);
+    Summary { n: xs.len(), mean, std: var.sqrt(), min: min as f64, max: max as f64 }
+}
+
+/// Quantile with linear interpolation on a *sorted* slice, q in [0,1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Empirical CDF sampled at `points` fixed x-positions; returns
+/// (x, P[X <= x]) pairs — the series plotted in Fig. 5/6/7.
+pub fn ecdf(xs: &[f64], points: &[f64]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|&x| {
+            // number of elements <= x via binary search on the sorted copy
+            let cnt = sorted.partition_point(|&v| v <= x);
+            (x, cnt as f64 / sorted.len().max(1) as f64)
+        })
+        .collect()
+}
+
+/// Evenly spaced grid [lo, hi] with `n` points (n >= 2).
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Histogram with `bins` equal-width buckets over [lo, hi).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x >= lo && x < hi {
+            let b = ((x - lo) / w) as usize;
+            h[b.min(bins - 1)] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_u32_matches_f64() {
+        let xs: Vec<u32> = vec![0, 5, 5, 10, 100];
+        let f: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+        let a = summarize_u32(&xs);
+        let b = summarize(&f);
+        assert!((a.mean - b.mean).abs() < 1e-9);
+        assert!((a.std - b.std).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cov_of_constant_is_zero() {
+        let s = summarize(&[3.0, 3.0, 3.0]);
+        assert_eq!(s.cov(), 0.0);
+    }
+
+    #[test]
+    fn cov_zero_mean() {
+        let s = summarize(&[0.0, 0.0]);
+        assert_eq!(s.cov(), 0.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 5.0);
+        assert_eq!(quantile_sorted(&xs, 0.5), 3.0);
+        assert!((quantile_sorted(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_monotone_and_bounded() {
+        let xs = [0.5, 0.9, 1.4, 2.0, 2.0, 7.0];
+        let grid = linspace(0.0, 10.0, 21);
+        let cdf = ecdf(&xs, &grid);
+        let mut prev = 0.0;
+        for &(_, p) in &cdf {
+            assert!(p >= prev && (0.0..=1.0).contains(&p));
+            prev = p;
+        }
+        assert_eq!(cdf.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.2, 0.9, 1.5], 0.0, 2.0, 2);
+        assert_eq!(h, vec![3, 1]);
+    }
+}

@@ -1,0 +1,295 @@
+//! Property-based verification of the paper's theory against the exact
+//! offline DP on small instances:
+//!
+//! * coverage feasibility for every policy (problem (1)'s constraint),
+//! * Lemma 2: `n_β ≤ n_OPT`,
+//! * Proposition 1: `C_{A_β} ≤ (2−α)·C_OPT`,
+//! * Proposition 3: `E[C_{A_z}] ≤ e/(e−1+α)·C_OPT` (Monte-Carlo),
+//! * Proposition 5: the prediction-window variants keep the same bounds,
+//! * the cost identity `C = n + (1−α)·Od + α·S` (Eq. 34).
+
+use cloudreserve::algos::baselines::{AllOnDemand, AllReserved, Separate};
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::algos::offline;
+use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::run_policy;
+use cloudreserve::util::prop::{check, shrink_demand, Config};
+use cloudreserve::util::rng::Rng;
+
+/// Random small instance: (demands, pricing) suitable for the exact DP.
+fn gen_instance(rng: &mut Rng) -> (Vec<u32>, Pricing) {
+    let tau = 2 + rng.below(4) as usize; // 2..=5
+    let p = 0.05 + rng.f64() * 0.5;
+    let alpha = rng.f64() * 0.95;
+    let t_len = 5 + rng.below(20) as usize;
+    let demands: Vec<u32> = (0..t_len)
+        .map(|_| if rng.chance(0.3) { 0 } else { rng.below(4) as u32 })
+        .collect();
+    (demands, Pricing::normalized(p, alpha, tau))
+}
+
+#[test]
+fn lemma2_deterministic_reserves_at_most_opt() {
+    let cfg = Config { cases: 120, ..Default::default() };
+    let mut rng = Rng::new(0xBEEF);
+    check(
+        &cfg,
+        "lemma2: n_beta <= n_opt",
+        move |r| gen_instance(&mut rng.fork(r.next_u64())),
+        |(demands, pricing)| {
+            let mut a = Deterministic::online(*pricing);
+            let rep = run_policy(&mut a, demands, *pricing).map_err(|e| e.to_string())?;
+            let opt = offline::optimal(demands, pricing);
+            if rep.reservations <= opt.reservations {
+                Ok(())
+            } else {
+                Err(format!(
+                    "n_beta={} > n_opt={} (opt cost {})",
+                    rep.reservations, opt.reservations, opt.cost
+                ))
+            }
+        },
+        |(d, pr)| shrink_demand(d).into_iter().map(|d2| (d2, *pr)).collect(),
+    );
+}
+
+#[test]
+fn prop1_deterministic_within_2_minus_alpha() {
+    let cfg = Config { cases: 150, ..Default::default() };
+    let mut rng = Rng::new(0xCAFE);
+    check(
+        &cfg,
+        "prop1: C_A <= (2-alpha) C_OPT",
+        move |r| gen_instance(&mut rng.fork(r.next_u64())),
+        |(demands, pricing)| {
+            let mut a = Deterministic::online(*pricing);
+            let rep = run_policy(&mut a, demands, *pricing).map_err(|e| e.to_string())?;
+            let opt = offline::optimal(demands, pricing).cost;
+            let bound = pricing.deterministic_ratio() * opt + 1e-9;
+            if rep.total <= bound {
+                Ok(())
+            } else {
+                Err(format!(
+                    "C_A={} > (2-a)*OPT={} (alpha={}, opt={})",
+                    rep.total, bound, pricing.alpha, opt
+                ))
+            }
+        },
+        |(d, pr)| shrink_demand(d).into_iter().map(|d2| (d2, *pr)).collect(),
+    );
+}
+
+#[test]
+fn prop5_prediction_window_keeps_bound() {
+    let cfg = Config { cases: 100, ..Default::default() };
+    let mut rng = Rng::new(0xD00D);
+    check(
+        &cfg,
+        "prop5: A^w_beta is (2-alpha)-competitive",
+        move |r| {
+            let mut rr = rng.fork(r.next_u64());
+            let (d, pr) = gen_instance(&mut rr);
+            let w = rr.below(pr.tau as u64 - 1) as usize;
+            (d, pr, w)
+        },
+        |(demands, pricing, w)| {
+            let mut a = Deterministic::with_window(*pricing, *w);
+            let rep = run_policy(&mut a, demands, *pricing).map_err(|e| e.to_string())?;
+            let opt = offline::optimal(demands, pricing).cost;
+            let bound = pricing.deterministic_ratio() * opt + 1e-9;
+            if rep.total <= bound {
+                Ok(())
+            } else {
+                Err(format!("C={} > bound={} (w={w})", rep.total, bound))
+            }
+        },
+        |(d, pr, w)| shrink_demand(d).into_iter().map(|d2| (d2, *pr, *w)).collect(),
+    );
+}
+
+#[test]
+fn prop3_randomized_expected_cost_bound() {
+    // Monte-Carlo over the threshold draw: expectation within the bound
+    // plus a sampling tolerance.
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..25u64 {
+        let (demands, pricing) = gen_instance(&mut rng);
+        let opt = offline::optimal(&demands, &pricing).cost;
+        if opt <= 0.0 {
+            continue;
+        }
+        let n = 400;
+        let mean: f64 = (0..n)
+            .map(|s| {
+                let mut a = Randomized::online(pricing, s as u64 * 7 + case);
+                run_policy(&mut a, &demands, pricing).unwrap().total
+            })
+            .sum::<f64>()
+            / n as f64;
+        let bound = pricing.randomized_ratio() * opt;
+        // 5% Monte-Carlo tolerance
+        assert!(
+            mean <= bound * 1.05 + 1e-9,
+            "case {case}: E[C]={mean} > e/(e-1+a)*OPT={bound} (alpha={}, demands={demands:?})",
+            pricing.alpha
+        );
+    }
+}
+
+#[test]
+fn randomized_beats_deterministic_in_expectation_on_adversarial_input() {
+    // The classic bad input for A_beta: demand stops right after the
+    // break-even point. Deterministic pays ~ (2-alpha) OPT; randomized
+    // does strictly better in expectation.
+    //
+    // KNOWN DEVIATION (EXPERIMENTS.md §Fig.2): on demand stopping at
+    // x = beta + eps, the density's atom at z = beta fires its reservation
+    // and pays the fee for epsilon of discounted use, adding
+    // alpha(1-alpha)/(e-1+alpha) to the expected ratio:
+    //   r(beta+eps) = (e + alpha(1-alpha)) / (e-1+alpha)  >  e/(e-1+alpha).
+    // The paper's claimed bound (Prop. 3) holds at x = beta exactly (see
+    // the next test) but not on this boundary family; the inequality chain
+    // (30)->(32) drops the atom's fee. We assert the *corrected* bound.
+    let p = 0.005;
+    let alpha = 0.3;
+    let pricing = Pricing::normalized(p, alpha, 100_000);
+    let beta = pricing.beta();
+    let n_slots = (beta / p).ceil() as usize + 1; // just past break-even
+    let mut demands = vec![1u32; n_slots];
+    demands.extend(vec![0u32; 30]);
+
+    let mut det = Deterministic::online(pricing);
+    let det_cost = run_policy(&mut det, &demands, pricing).unwrap().total;
+
+    let n = 2000;
+    let rand_mean: f64 = (0..n)
+        .map(|s| {
+            let mut a = Randomized::online(pricing, s as u64);
+            run_policy(&mut a, &demands, pricing).unwrap().total
+        })
+        .sum::<f64>()
+        / n as f64;
+
+    let opt = offline::optimal_single(&demands, &pricing).cost;
+    assert!(
+        rand_mean < det_cost,
+        "E[C_rand]={rand_mean} should beat C_det={det_cost} (OPT={opt})"
+    );
+    let e = std::f64::consts::E;
+    let corrected = (e + alpha * (1.0 - alpha)) / (e - 1.0 + alpha);
+    let ratio = rand_mean / opt;
+    assert!(
+        ratio <= corrected * 1.02,
+        "E[C]/OPT={ratio} vs corrected bound {corrected}"
+    );
+    // and the deviation is real: the ratio *exceeds* the paper's bound here
+    assert!(
+        ratio > pricing.randomized_ratio() * 1.02,
+        "expected the boundary family to exceed the paper bound ({} vs {})",
+        ratio,
+        pricing.randomized_ratio()
+    );
+}
+
+#[test]
+fn prop3_randomized_bound_tight_at_exact_breakeven() {
+    // At x = beta exactly the atom never fires (strict >) and the expected
+    // ratio equals e/(e-1+alpha) — the paper's bound, tight.
+    for &alpha in &[0.0, 0.3, 0.4875] {
+        let p = 0.002;
+        let pricing = Pricing::normalized(p, alpha, 1_000_000);
+        let beta = pricing.beta();
+        let n_slots = (beta / p).floor() as usize; // spend = beta (<= atom)
+        let demands = vec![1u32; n_slots];
+        let n = 4000;
+        let rand_mean: f64 = (0..n)
+            .map(|s| {
+                let mut a = Randomized::online(pricing, s as u64 * 13 + 1);
+                run_policy(&mut a, &demands, pricing).unwrap().total
+            })
+            .sum::<f64>()
+            / n as f64;
+        let opt = offline::optimal_single(&demands, &pricing).cost;
+        let ratio = rand_mean / opt;
+        let bound = pricing.randomized_ratio();
+        assert!(
+            (ratio - bound).abs() < 0.03 * bound + 3.0 * p,
+            "alpha={alpha}: ratio {ratio} should be ~= bound {bound}"
+        );
+    }
+}
+
+#[test]
+fn coverage_and_identity_for_all_policies() {
+    let cfg = Config { cases: 60, ..Default::default() };
+    let mut rng = Rng::new(0xF00D);
+    check(
+        &cfg,
+        "coverage + Eq.34 identity",
+        move |r| gen_instance(&mut rng.fork(r.next_u64())),
+        |(demands, pricing)| {
+            let policies: Vec<Box<dyn cloudreserve::Policy>> = vec![
+                Box::new(AllOnDemand::new()),
+                Box::new(AllReserved::new(*pricing)),
+                Box::new(Separate::new(*pricing)),
+                Box::new(Deterministic::online(*pricing)),
+                Box::new(Deterministic::with_threshold(*pricing, 0.0)),
+                Box::new(Randomized::online(*pricing, 7)),
+            ];
+            for mut p in policies {
+                let name = p.name();
+                // run_policy errors on any coverage violation
+                let rep = run_policy(p.as_mut(), demands, *pricing)
+                    .map_err(|e| format!("{name}: {e}"))?;
+                if !rep.identity_holds(pricing, 1e-9) {
+                    return Err(format!("{name}: Eq.34 identity violated: {rep:?}"));
+                }
+            }
+            Ok(())
+        },
+        |(d, pr)| shrink_demand(d).into_iter().map(|d2| (d2, *pr)).collect(),
+    );
+}
+
+#[test]
+fn deterministic_ratio_is_tight_on_bahncard_adversary() {
+    // Fig. 2 verification: the adversarial sequence drives A_beta's ratio
+    // toward 2-alpha as p -> 0. Demand for just past break-even then
+    // silence: A_beta pays ~2*beta while OPT pays ~beta.
+    for &alpha in &[0.0, 0.3, 0.4875, 0.7] {
+        let p = 0.01;
+        let pricing = Pricing::normalized(p, alpha, 100_000);
+        let beta = pricing.beta();
+        let pulses = (beta / p).ceil() as usize + 1;
+        let mut demands = vec![1u32; pulses];
+        demands.extend(vec![0u32; 10]);
+        let mut a = Deterministic::online(pricing);
+        let cost = run_policy(&mut a, &demands, pricing).unwrap().total;
+        let opt = offline::optimal_single(&demands, &pricing).cost;
+        let ratio = cost / opt;
+        let bound = pricing.deterministic_ratio();
+        assert!(ratio <= bound + 1e-9, "alpha={alpha}: ratio {ratio} > bound {bound}");
+        assert!(
+            ratio >= bound - 0.05,
+            "alpha={alpha}: adversarial ratio {ratio} should approach {bound}"
+        );
+    }
+}
+
+#[test]
+fn separate_never_beats_joint_on_level_shifting_load() {
+    // Sec. II-D: joint reservation dominates Separate when demand levels
+    // alternate (Separate cannot time-multiplex reservations).
+    let pricing = Pricing::normalized(0.1, 0.0, 40); // beta = 1
+    let mut demands = Vec::new();
+    for block in 0..8 {
+        let level = 1 + (block % 2) as u32;
+        demands.extend(std::iter::repeat(level).take(15));
+    }
+    let mut sep = Separate::new(pricing);
+    let mut det = Deterministic::online(pricing);
+    let c_sep = run_policy(&mut sep, &demands, pricing).unwrap().total;
+    let c_det = run_policy(&mut det, &demands, pricing).unwrap().total;
+    assert!(c_det <= c_sep + 1e-9, "joint {c_det} must not exceed separate {c_sep}");
+}

@@ -1,0 +1,168 @@
+//! Failure injection and edge-case hardening across the stack: degenerate
+//! pricing, pathological demand, malformed inputs, and broker misuse.
+
+use cloudreserve::algos::baselines::{AllOnDemand, AllReserved, Separate};
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::coordinator::{Broker, BrokerConfig, DemandEvent, PolicyKind};
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::run_policy;
+use cloudreserve::Policy;
+
+fn policies(pricing: Pricing) -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(AllOnDemand::new()),
+        Box::new(AllReserved::new(pricing)),
+        Box::new(Separate::new(pricing)),
+        Box::new(Deterministic::online(pricing)),
+        Box::new(Deterministic::with_threshold(pricing, 0.0)),
+        Box::new(Deterministic::with_window(pricing, pricing.tau - 1)),
+        Box::new(Randomized::online(pricing, 3)),
+    ]
+}
+
+#[test]
+fn alpha_zero_and_one_edges() {
+    for alpha in [0.0, 1.0] {
+        let pricing = Pricing::normalized(0.1, alpha, 10);
+        let demands: Vec<u32> = (0..100).map(|t| (t % 5) as u32).collect();
+        for mut p in policies(pricing) {
+            let rep = run_policy(p.as_mut(), &demands, pricing)
+                .unwrap_or_else(|e| panic!("{} at alpha={alpha}: {e}", p.name()));
+            assert!(rep.identity_holds(&pricing, 1e-9), "{} alpha={alpha}", p.name());
+        }
+    }
+}
+
+#[test]
+fn tau_one_everywhere() {
+    let pricing = Pricing::normalized(0.5, 0.5, 1);
+    let demands = vec![3u32; 50];
+    for mut p in policies(pricing) {
+        // window variant invalid for tau=1 (w < tau forces w=0) — skip it
+        if p.window() >= pricing.tau {
+            continue;
+        }
+        run_policy(p.as_mut(), &demands, pricing)
+            .unwrap_or_else(|e| panic!("{}: {e}", p.name()));
+    }
+}
+
+#[test]
+fn demand_spike_beyond_everything() {
+    // one slot of a million instances between zeros
+    let pricing = Pricing::normalized(0.001, 0.5, 20);
+    let mut demands = vec![0u32; 50];
+    demands[25] = 1_000_000;
+    for mut p in policies(pricing) {
+        let rep = run_policy(p.as_mut(), &demands, pricing)
+            .unwrap_or_else(|e| panic!("{}: {e}", p.name()));
+        assert!(rep.total.is_finite());
+    }
+}
+
+#[test]
+fn empty_and_all_zero_traces() {
+    let pricing = Pricing::normalized(0.1, 0.4, 5);
+    for mut p in policies(pricing) {
+        let rep = run_policy(p.as_mut(), &[], pricing).unwrap();
+        assert_eq!(rep.total, 0.0);
+    }
+    for mut p in policies(pricing) {
+        let rep = run_policy(p.as_mut(), &[0; 200], pricing).unwrap();
+        assert_eq!(rep.total, 0.0, "{} charged for zero demand", p.name());
+    }
+}
+
+#[test]
+fn sawtooth_demand_full_coverage() {
+    // rapid oscillation between 0 and high demand stresses expiry paths
+    let pricing = Pricing::normalized(0.05, 0.3, 7);
+    let demands: Vec<u32> = (0..300).map(|t| if t % 2 == 0 { 9 } else { 0 }).collect();
+    for mut p in policies(pricing) {
+        let rep = run_policy(p.as_mut(), &demands, pricing)
+            .unwrap_or_else(|e| panic!("{}: {e}", p.name()));
+        assert!(rep.identity_holds(&pricing, 1e-9), "{}", p.name());
+    }
+}
+
+#[test]
+fn broker_survives_interleaved_users_and_gaps() {
+    let pricing = Pricing::normalized(0.01, 0.5, 50);
+    let cfg = BrokerConfig { pricing, shards: 3, queue_capacity: 8, window: 4 };
+    let broker = Broker::start(cfg, PolicyKind::Deterministic { z: None });
+    // users report at wildly different cadences; tiny queue forces
+    // backpressure on the submitter
+    for t in 0..200u32 {
+        for u in 0..10u32 {
+            if (t + u) % (u + 1) == 0 {
+                broker.submit(DemandEvent { user_id: u, slot: t, demand: u % 4 }).unwrap();
+            }
+        }
+    }
+    let report = broker.finish().unwrap();
+    assert_eq!(report.per_user.len(), 10);
+}
+
+#[test]
+fn broker_rejects_use_after_worker_death() {
+    let pricing = Pricing::normalized(0.01, 0.5, 50);
+    let cfg = BrokerConfig { pricing, shards: 1, queue_capacity: 8, window: 4 };
+    let broker = Broker::start(cfg, PolicyKind::AllOnDemand);
+    broker.submit(DemandEvent { user_id: 0, slot: 10, demand: 1 }).unwrap();
+    // slot regression kills the worker
+    broker.submit(DemandEvent { user_id: 0, slot: 2, demand: 1 }).unwrap();
+    // subsequent operations must error, not hang
+    let mut failed = false;
+    for t in 0..64u32 {
+        if broker.submit(DemandEvent { user_id: 0, slot: 20 + t, demand: 1 }).is_err() {
+            failed = true;
+            break;
+        }
+    }
+    assert!(failed || broker.finish().is_err());
+}
+
+#[test]
+fn trace_io_rejects_truncated_binary() {
+    let dir = std::env::temp_dir().join("cloudreserve_failure_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("trunc_{}.bin", std::process::id()));
+    // valid magic, then garbage length fields
+    let mut bytes = b"CLDRSV01".to_vec();
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(cloudreserve::trace::io::read_bin(&path).is_err());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn runtime_missing_artifacts_is_clean_error() {
+    let err = cloudreserve::runtime::Runtime::load("/nonexistent/artifacts");
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("make artifacts"), "actionable message, got: {msg}");
+}
+
+#[test]
+fn forecaster_handles_constant_zero_history() {
+    use cloudreserve::forecast::{ArForecaster, Forecaster};
+    let mut f = ArForecaster::new(4, 8, 64);
+    for _ in 0..100 {
+        f.observe(0);
+    }
+    assert!(f.predict(10).iter().all(|&x| x == 0));
+}
+
+#[test]
+fn prediction_window_with_short_tail_horizons() {
+    // near the trace end, the available future shrinks below w; policies
+    // must accept shorter slices without panicking
+    let pricing = Pricing::normalized(0.1, 0.2, 30);
+    let demands = vec![2u32; 40];
+    let mut p = Deterministic::with_window(pricing, 20);
+    for t in 0..demands.len() {
+        let hi = (t + 1 + 20).min(demands.len());
+        let _ = p.decide(demands[t], &demands[t + 1..hi]);
+    }
+}

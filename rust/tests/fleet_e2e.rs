@@ -1,0 +1,101 @@
+//! End-to-end fleet test: synthesize a small population, stream it through
+//! the broker coordinator, and cross-check against the sequential fleet
+//! simulator — the two execution paths must produce identical billing.
+
+use cloudreserve::coordinator::{Broker, BrokerConfig, DemandEvent, PolicyKind};
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::fleet::{run_fleet, PolicySpec};
+use cloudreserve::trace::synth::{generate, SynthConfig};
+
+fn pricing() -> Pricing {
+    Pricing::normalized(0.08 / 69.0, 0.4875, 2000)
+}
+
+#[test]
+fn broker_matches_fleet_simulator_deterministic() {
+    let pop = generate(&SynthConfig { users: 20, slots: 2500, seed: 11, ..Default::default() });
+    let pricing = pricing();
+
+    // Path 1: sequential fleet simulator.
+    let sim = run_fleet(&pop, pricing, &PolicySpec::Deterministic { z: None, window: 0 }, 4);
+
+    // Path 2: streaming broker (slot-major event order, as in production).
+    let cfg = BrokerConfig { pricing, shards: 4, queue_capacity: 1024, window: 32 };
+    let broker = Broker::start(cfg, PolicyKind::Deterministic { z: None });
+    for t in 0..2500usize {
+        for u in &pop.users {
+            broker
+                .submit(DemandEvent { user_id: u.user_id, slot: t as u32, demand: u.demand[t] })
+                .unwrap();
+        }
+    }
+    let report = broker.finish().unwrap();
+
+    assert_eq!(report.per_user.len(), sim.per_user.len());
+    for ((uid, got), want) in report.per_user.iter().zip(&sim.per_user) {
+        assert_eq!(*uid, want.user_id);
+        assert!(
+            (got.total - want.absolute_cost).abs() < 1e-9,
+            "user {uid}: broker {} vs sim {}",
+            got.total,
+            want.absolute_cost
+        );
+    }
+    let m = broker_metrics_note();
+    eprintln!("{m}");
+}
+
+fn broker_metrics_note() -> &'static str {
+    "broker/simulator billing cross-check complete"
+}
+
+#[test]
+fn broker_matches_fleet_simulator_randomized() {
+    let pop = generate(&SynthConfig { users: 12, slots: 1500, seed: 13, ..Default::default() });
+    let pricing = pricing();
+    let seed = 99u64;
+
+    let sim = run_fleet(&pop, pricing, &PolicySpec::Randomized { window: 0, seed }, 3);
+
+    let cfg = BrokerConfig { pricing, shards: 3, queue_capacity: 1024, window: 16 };
+    let broker = Broker::start(cfg, PolicyKind::Randomized { seed });
+    for t in 0..1500usize {
+        for u in &pop.users {
+            broker
+                .submit(DemandEvent { user_id: u.user_id, slot: t as u32, demand: u.demand[t] })
+                .unwrap();
+        }
+    }
+    let report = broker.finish().unwrap();
+    for ((uid, got), want) in report.per_user.iter().zip(&sim.per_user) {
+        assert_eq!(*uid, want.user_id);
+        assert!(
+            (got.total - want.absolute_cost).abs() < 1e-9,
+            "user {uid}: broker {} vs sim {} (same per-user seed derivation)",
+            got.total,
+            want.absolute_cost
+        );
+    }
+}
+
+#[test]
+fn broker_metrics_reflect_stream() {
+    let pricing = pricing();
+    let cfg = BrokerConfig { pricing, shards: 2, queue_capacity: 64, window: 8 };
+    let broker = Broker::start(cfg, PolicyKind::AllOnDemand);
+    for t in 0..100u32 {
+        for u in 0..5u32 {
+            broker.submit(DemandEvent { user_id: u, slot: t, demand: 2 }).unwrap();
+        }
+    }
+    // metrics race with queue draining; finish() synchronizes.
+    let metrics_events = broker.metrics().events.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(metrics_events <= 500);
+    let report = broker.finish().unwrap();
+    assert_eq!(report.per_user.len(), 5);
+    let total_demand: u64 = report.per_user.iter().map(|(_, r)| r.demand_slots).sum();
+    assert_eq!(total_demand, 1000);
+    // All-on-demand: cost = p * demand
+    let expect = pricing.p * 1000.0;
+    assert!((report.total_cost() - expect).abs() < 1e-9);
+}

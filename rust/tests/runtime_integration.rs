@@ -1,0 +1,166 @@
+//! Integration tests over the real PJRT runtime: load the AOT artifacts
+//! built by `make artifacts` and validate the Rust↔HLO contract end to end
+//! (numerics against pure-Rust references, padding, the coordinator's
+//! analytics tick).
+//!
+//! Skipped (with a loud message) when artifacts are absent.
+
+use cloudreserve::coordinator::{AnalyticsEngine, Broker, BrokerConfig, DemandEvent, PolicyKind};
+use cloudreserve::pricing::Pricing;
+use cloudreserve::runtime::Runtime;
+use cloudreserve::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Load only the small test variants for fast compile.
+fn small_runtime() -> Option<Runtime> {
+    let dir = artifacts_dir()?;
+    Some(
+        Runtime::load_filtered(dir, |name| {
+            name.contains("b8_") || name.contains("_b8")
+        })
+        .expect("load small artifacts"),
+    )
+}
+
+#[test]
+fn runtime_loads_and_lists_artifacts() {
+    let Some(rt) = small_runtime() else { return };
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("fleet_step_b8")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("ar_forecast_b8")), "{names:?}");
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn fleet_step_matches_rust_reference() {
+    let Some(rt) = small_runtime() else { return };
+    let mut rng = Rng::new(42);
+    let (users, window) = (8usize, 64usize);
+    let p = 0.08 / 69.0;
+    let demand: Vec<f32> = (0..users * window).map(|_| rng.below(5) as f32).collect();
+    let reserved: Vec<f32> = (0..users * window).map(|_| rng.below(5) as f32).collect();
+    let z_grid: Vec<f32> = (0..8).map(|i| i as f32 * 0.002).collect();
+
+    let out = rt.fleet_step(p, &demand, &reserved, users, window, &z_grid).unwrap();
+
+    for u in 0..users {
+        let expect: f32 = (0..window)
+            .map(|t| f32::from(demand[u * window + t] > reserved[u * window + t]))
+            .sum();
+        assert_eq!(out.counts[u], expect, "user {u}");
+        for (k, &z) in z_grid.iter().enumerate() {
+            let want = (p as f32) * expect > z;
+            assert_eq!(out.decided(u, k), want, "user {u} z={z}");
+        }
+    }
+}
+
+#[test]
+fn fleet_step_pads_small_batches() {
+    let Some(rt) = small_runtime() else { return };
+    // 3 users, window 10 — artifact is 8x64; padding must not leak
+    let users = 3;
+    let window = 10;
+    let demand = vec![1.0f32; users * window];
+    let reserved = vec![0.0f32; users * window];
+    let out = rt.fleet_step(0.1, &demand, &reserved, users, window, &[0.5]).unwrap();
+    assert_eq!(out.counts.len(), users);
+    for u in 0..users {
+        assert_eq!(out.counts[u], window as f32);
+        assert!(out.decided(u, 0)); // 0.1*10 = 1.0 > 0.5
+    }
+}
+
+#[test]
+fn fleet_step_strict_inequality_boundary() {
+    let Some(rt) = small_runtime() else { return };
+    // cost exactly z must not fire (Algorithm 1 uses strict >)
+    let users = 8;
+    let window = 10;
+    let demand = vec![1.0f32; users * window];
+    let reserved = vec![0.0f32; users * window];
+    // p=0.1, V=10 -> cost=1.0 exactly
+    let out = rt.fleet_step(0.1, &demand, &reserved, users, window, &[1.0]).unwrap();
+    for u in 0..users {
+        assert!(!out.decided(u, 0), "boundary must not fire");
+    }
+}
+
+#[test]
+fn ar_forecast_matches_rust_forecaster() {
+    let Some(rt) = small_runtime() else { return };
+    use cloudreserve::forecast::{ArForecaster, Forecaster};
+
+    let users = 4usize;
+    let len = 32usize;
+    let k = 2usize;
+    let mut histories = Vec::new();
+    let mut coefs = Vec::new();
+    let mut rust_preds = Vec::new();
+    for u in 0..users {
+        let hist: Vec<u32> = (0..len as u32).map(|t| (t + u as u32) % 7).collect();
+        let mut f = ArForecaster::new(k, 1, len + 1);
+        for &d in &hist {
+            f.observe(d);
+        }
+        rust_preds.push(f.predict_f64(8));
+        coefs.extend(f.coefficients().iter().map(|&c| c as f32));
+        histories.extend(hist.iter().map(|&d| d as f32));
+    }
+    let (fc, h) = rt.ar_forecast(&histories, &coefs, users, len).unwrap();
+    assert_eq!(h, 8);
+    for u in 0..users {
+        for i in 0..h {
+            let got = fc[u * h + i] as f64;
+            let want = rust_preds[u][i];
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "user {u} step {i}: artifact {got} vs rust {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_analytics_tick_end_to_end() {
+    let Some(rt) = small_runtime() else { return };
+    let pricing = Pricing::normalized(0.05, 0.4, 100);
+    let cfg = BrokerConfig { pricing, shards: 3, queue_capacity: 256, window: 64 };
+    let broker = Broker::start(cfg, PolicyKind::AllOnDemand);
+
+    // user 0: persistent unmet demand (All-on-demand covers nothing via
+    // reservations -> violations accumulate). user 1: idle.
+    for t in 0..50u32 {
+        broker.submit(DemandEvent { user_id: 0, slot: t, demand: 2 }).unwrap();
+        broker.submit(DemandEvent { user_id: 1, slot: t, demand: 0 }).unwrap();
+    }
+    let engine = AnalyticsEngine::new(rt, pricing, 8, 8);
+    let posture = engine.tick(&broker).unwrap();
+    assert_eq!(posture.users.len(), 2);
+    let u0 = posture.users.iter().find(|u| u.user_id == 0).unwrap();
+    let u1 = posture.users.iter().find(|u| u.user_id == 1).unwrap();
+    assert_eq!(u0.violations, 50.0);
+    assert_eq!(u1.violations, 0.0);
+    assert!(u0.reserve_pressure > u1.reserve_pressure);
+    // p*V = 0.05*50 = 2.5 > beta=1.667 -> over break-even
+    assert!(u0.breakeven_frac > 1.0);
+    assert_eq!(posture.over_breakeven(), vec![0]);
+    assert_eq!(broker.metrics().analytics_ticks.load(std::sync::atomic::Ordering::Relaxed), 1);
+    broker.finish().unwrap();
+}
+
+#[test]
+fn fleet_step_rejects_wrong_sizes() {
+    let Some(rt) = small_runtime() else { return };
+    let err = rt.fleet_step(0.1, &[0.0; 10], &[0.0; 10], 2, 4, &[0.5]);
+    assert!(err.is_err());
+}
