@@ -10,7 +10,7 @@
 //! The measured deterministic ratio matches `2−α`. The measured randomized
 //! ratio matches `e/(e−1+α)` at x = β and exceeds it by
 //! `α(1−α)/(e−1+α)` just past β — the documented deviation from Prop. 3
-//! (see EXPERIMENTS.md).
+//! (see PERF.md §Known deviations).
 //!
 //! Run: `cargo run --release --example fig2_competitive_ratio`
 

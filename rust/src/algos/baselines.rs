@@ -128,7 +128,7 @@ impl Policy for Separate {
         let mut total = Decision::default();
         for (k, level) in self.levels.iter_mut().enumerate() {
             let d_k = u32::from((k as u32) < demand); // level k+1 active iff d_t >= k+1
-            // Perf (EXPERIMENTS.md §Perf L3-2): idle levels — no demand now
+            // Perf (PERF.md §Policy hot path): idle levels — no demand now
             // and no pending violations — cannot change any output this
             // slot, and their lazy expiry is safe to defer: violations only
             // *leave* the window with time, so a skipped level's V can

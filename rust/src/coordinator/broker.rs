@@ -117,7 +117,7 @@ struct UserSession {
     next_slot: u32,
     window: WindowRing,
     // reusable forecast buffers (no allocation on the event hot path —
-    // EXPERIMENTS.md §Perf L3-3)
+    // PERF.md §Policy hot path)
     future_buf: Vec<u32>,
     f64_buf: Vec<f64>,
     scratch: Vec<f64>,

@@ -226,7 +226,7 @@ impl ArForecaster {
         out
     }
 
-    /// Allocation-free variant for hot paths (EXPERIMENTS.md §Perf L3-3):
+    /// Allocation-free variant for hot paths (PERF.md §Policy hot path):
     /// the AR iteration only ever consults the last `k` values, so we keep
     /// a k-sized rolling scratch instead of copying the whole history.
     pub fn predict_f64_into(&self, w: usize, out: &mut Vec<f64>, scratch: &mut Vec<f64>) {

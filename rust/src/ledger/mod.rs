@@ -18,14 +18,30 @@ use std::collections::VecDeque;
 
 use crate::pricing::Pricing;
 
-/// Errors surfaced by the billing engine.
-#[derive(Debug, thiserror::Error, PartialEq)]
+/// Errors surfaced by the billing engine. (Display/Error are hand-written:
+/// `thiserror` is not in the offline vendor set.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LedgerError {
-    #[error("slot {t}: demand {d} exceeds on-demand {o} + active reservations {active}")]
     Underprovisioned { t: usize, d: u32, o: u32, active: u32 },
-    #[error("slot {t}: on-demand count {o} exceeds demand {d} (wasteful decision rejected)")]
     OverOnDemand { t: usize, o: u32, d: u32 },
 }
+
+impl std::fmt::Display for LedgerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            LedgerError::Underprovisioned { t, d, o, active } => write!(
+                f,
+                "slot {t}: demand {d} exceeds on-demand {o} + active reservations {active}"
+            ),
+            LedgerError::OverOnDemand { t, o, d } => write!(
+                f,
+                "slot {t}: on-demand count {o} exceeds demand {d} (wasteful decision rejected)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LedgerError {}
 
 /// Itemized cost report for one simulated user / policy run.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

@@ -15,9 +15,14 @@
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
 //! client and the [`coordinator`] drives them on its analytics hot path.
+//! (Offline builds link a stub `xla` backend — see `rust/vendor/xla` — and
+//! degrade to the pure-Rust paths.)
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
-//! paper-vs-measured results.
+//! The evaluation hot path is the batched fleet engine ([`sim::engine`]):
+//! zero allocation per slot, monomorphic policy dispatch, columnar trace
+//! storage ([`trace::FlatPopulation`]). Its measured baseline and the
+//! benchmark methodology live in `PERF.md`; regenerate the tracked
+//! `BENCH.json` with `cargo run --release -- bench`.
 
 pub mod algos;
 pub mod analysis;

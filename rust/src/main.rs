@@ -10,6 +10,9 @@
 //!                     periodic PJRT analytics ticks (the L3 service demo).
 //! * `offline`       — exact offline OPT (small instances) for a demand
 //!                     sequence given on the command line.
+//! * `bench`         — measure the batched fleet engine (suite throughput,
+//!                     offline-DP solve times, per-policy decide latency)
+//!                     and write the tracked `BENCH.json` perf baseline.
 
 use cloudreserve::algos::offline;
 use cloudreserve::analysis::classify::{classify_population, group_counts};
@@ -31,15 +34,17 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("offline") => cmd_offline(&args),
+        Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline> [--options]\n\
+                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline|bench> [--options]\n\
                  \n\
                  gen-traces --users N --slots N --seed S --out FILE [--csv] [--plot-user U]\n\
                  classify   [--traces FILE | --users N --slots N --seed S]\n\
                  simulate   [--traces FILE | --users N --slots N] --seed S --threads N [--csv-out FILE]\n\
                  serve      --users N --slots N --shards N --tick N [--artifacts DIR]\n\
-                 offline    --tau N --p F --alpha F d1 d2 d3 ..."
+                 offline    --tau N --p F --alpha F d1 d2 d3 ...\n\
+                 bench      [--users N --slots N --seed S --threads N --out FILE] [--quick] [--skip-reference]"
             );
             std::process::exit(2);
         }
@@ -220,6 +225,234 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.total_cost(),
         report.total_reservations()
     );
+    Ok(())
+}
+
+/// `bench`: the tracked perf baseline. Measures (a) Sec. VII suite
+/// throughput through the batched engine and — unless `--skip-reference` —
+/// the seed per-user path, verifying bit-identical results and recording
+/// the speedup; (b) offline-DP solve times over a (D, τ) grid; (c)
+/// per-policy decide latency. Writes everything to `--out` (default
+/// `BENCH.json`) so every future PR has a trajectory to beat.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use cloudreserve::sim::engine::{run_fleet_flat, FleetPolicy};
+    use cloudreserve::sim::fleet::{run_fleet_reference, suite_specs};
+    use cloudreserve::trace::FlatPopulation;
+    use cloudreserve::util::bench::{fmt_ns, Bencher};
+    use cloudreserve::util::json::Json;
+    use cloudreserve::util::rng::Rng;
+    use std::time::Instant;
+
+    let quick = args.has("quick");
+    let users = args.usize_or("users", cloudreserve::trace::NUM_USERS);
+    let default_slots = if quick {
+        3 * cloudreserve::trace::SLOTS_PER_DAY
+    } else {
+        cloudreserve::trace::TRACE_SLOTS
+    };
+    let slots = args.usize_or("slots", default_slots);
+    let seed = args.u64_or("seed", 2013);
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+    let out = args.str_or("out", "BENCH.json");
+    let skip_reference = args.has("skip-reference");
+    let policy_seed = args.u64_or("policy-seed", 1);
+
+    eprintln!("bench: generating {users} users x {slots} slots (seed {seed})...");
+    let pop = generate(&SynthConfig { users, slots, seed, ..Default::default() });
+    let flat = FlatPopulation::from(&pop);
+    let pricing = ec2_small_compressed();
+    let user_slots = flat.total_slots() as f64;
+    let specs = suite_specs(policy_seed);
+
+    // (a) suite throughput: batched engine, then the seed reference path.
+    eprintln!("bench: engine suite ({threads} threads)...");
+    let mut engine_rows = Vec::new();
+    let mut engine_results = Vec::new();
+    let mut engine_total_s = 0.0f64;
+    for spec in &specs {
+        let t0 = Instant::now();
+        let res = run_fleet_flat(&flat, pricing, spec, threads);
+        let dt = t0.elapsed().as_secs_f64();
+        engine_total_s += dt;
+        println!(
+            "engine    {:<28} {:>9.3}s {:>10.2} M user-slots/s",
+            res.policy,
+            dt,
+            user_slots / dt / 1e6
+        );
+        engine_rows.push(Json::obj(vec![
+            ("policy", Json::Str(res.policy.clone())),
+            ("wall_s", Json::Num(dt)),
+            ("user_slots_per_s", Json::Num(user_slots / dt)),
+        ]));
+        engine_results.push(res);
+    }
+    let engine_tput = user_slots * specs.len() as f64 / engine_total_s;
+
+    let (reference_json, speedup_json, parity) = if skip_reference {
+        (Json::Null, Json::Null, "skipped")
+    } else {
+        eprintln!("bench: reference (seed) suite...");
+        let mut ref_rows = Vec::new();
+        let mut ref_total_s = 0.0f64;
+        let mut identical = true;
+        for (spec, engine_res) in specs.iter().zip(&engine_results) {
+            let t0 = Instant::now();
+            let res = run_fleet_reference(&pop, pricing, spec, threads);
+            let dt = t0.elapsed().as_secs_f64();
+            ref_total_s += dt;
+            println!(
+                "reference {:<28} {:>9.3}s {:>10.2} M user-slots/s",
+                res.policy,
+                dt,
+                user_slots / dt / 1e6
+            );
+            identical &= res.per_user.len() == engine_res.per_user.len()
+                && res.per_user.iter().zip(&engine_res.per_user).all(|(a, b)| {
+                    a.user_id == b.user_id
+                        && a.normalized_cost.to_bits() == b.normalized_cost.to_bits()
+                        && a.absolute_cost.to_bits() == b.absolute_cost.to_bits()
+                        && a.reservations == b.reservations
+                });
+            ref_rows.push(Json::obj(vec![
+                ("policy", Json::Str(res.policy.clone())),
+                ("wall_s", Json::Num(dt)),
+                ("user_slots_per_s", Json::Num(user_slots / dt)),
+            ]));
+        }
+        anyhow::ensure!(
+            identical,
+            "batched engine results diverge from the reference path — refusing to record the baseline"
+        );
+        let ref_tput = user_slots * specs.len() as f64 / ref_total_s;
+        println!(
+            "suite: engine {:.2} M user-slots/s vs reference {:.2} M -> {:.2}x speedup (results bit-identical)",
+            engine_tput / 1e6,
+            ref_tput / 1e6,
+            engine_tput / ref_tput
+        );
+        (
+            Json::obj(vec![
+                ("total_wall_s", Json::Num(ref_total_s)),
+                ("user_slots_per_s", Json::Num(ref_tput)),
+                ("per_policy", Json::Arr(ref_rows)),
+            ]),
+            Json::Num(engine_tput / ref_tput),
+            "bit-identical",
+        )
+    };
+
+    // (b) offline-DP solve times across the (D, tau) envelope.
+    eprintln!("bench: offline DP grid...");
+    let dp_cases: &[(u32, usize, usize)] = if quick {
+        &[(2, 5, 120), (3, 5, 120), (2, 7, 120)]
+    } else {
+        &[(2, 5, 120), (3, 5, 120), (2, 7, 120), (3, 6, 120), (4, 6, 100), (3, 9, 100)]
+    };
+    let mut dp_rows = Vec::new();
+    for &(d_max, tau, t_len) in dp_cases {
+        let mut rng = Rng::new(seed ^ ((d_max as u64) << 8) ^ tau as u64);
+        let demands: Vec<u32> = (0..t_len).map(|_| rng.below(d_max as u64 + 1) as u32).collect();
+        let dp_pricing = Pricing::normalized(0.15, 0.45, tau);
+        let t0 = Instant::now();
+        let sol = cloudreserve::algos::offline::optimal(&demands, &dp_pricing);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "dp        D={d_max} tau={tau} T={t_len}{:<12} {:>9.2} ms  (cost {:.4}, {} reservations)",
+            "",
+            wall_ms,
+            sol.cost,
+            sol.reservations
+        );
+        dp_rows.push(Json::obj(vec![
+            ("d_max", Json::Num(d_max as f64)),
+            ("tau", Json::Num(tau as f64)),
+            ("slots", Json::Num(t_len as f64)),
+            ("wall_ms", Json::Num(wall_ms)),
+            ("cost", Json::Num(sol.cost)),
+            ("reservations", Json::Num(sol.reservations as f64)),
+        ]));
+    }
+
+    // (c) per-policy decide latency on the engine's monomorphic dispatch.
+    eprintln!("bench: per-policy decide latency...");
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let micro_slots = if quick { 5_000usize } else { 20_000 };
+    let mut rng = Rng::new(42);
+    let curve: Vec<u32> = (0..micro_slots)
+        .map(|t| {
+            let base = 4.0 + 3.0 * ((t as f64) / 720.0).sin();
+            (base * (1.0 + 0.3 * rng.normal()).max(0.0)).round() as u32
+        })
+        .collect();
+    let mut decide_rows = Vec::new();
+    for spec in &specs {
+        let r = bencher.run(&format!("decide/{}", spec.name()), || {
+            let mut p = FleetPolicy::build(spec, pricing, 1);
+            let mut acc = 0u32;
+            for &d in &curve {
+                let dec = p.decide(d, &[]);
+                acc = acc.wrapping_add(dec.reserve ^ dec.on_demand);
+            }
+            acc
+        });
+        let ns_per_decide = r.median_ns() / micro_slots as f64;
+        println!(
+            "decide    {:<28} {:>8.1} ns/decide  (trace {})",
+            spec.name(),
+            ns_per_decide,
+            fmt_ns(r.median_ns())
+        );
+        decide_rows.push(Json::obj(vec![
+            ("policy", Json::Str(spec.name())),
+            ("ns_per_decide", Json::Num(ns_per_decide)),
+            ("detail", r.to_json()),
+        ]));
+    }
+
+    let created_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("cloudreserve-bench/v1".into())),
+        ("created_unix", Json::Num(created_unix)),
+        (
+            "config",
+            Json::obj(vec![
+                ("users", Json::Num(users as f64)),
+                ("slots", Json::Num(slots as f64)),
+                ("seed", Json::Num(seed as f64)),
+                ("policy_seed", Json::Num(policy_seed as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("quick", Json::Bool(quick)),
+            ]),
+        ),
+        (
+            "suite",
+            Json::obj(vec![
+                ("user_slots_per_policy", Json::Num(user_slots)),
+                (
+                    "engine",
+                    Json::obj(vec![
+                        ("total_wall_s", Json::Num(engine_total_s)),
+                        ("user_slots_per_s", Json::Num(engine_tput)),
+                        ("per_policy", Json::Arr(engine_rows)),
+                    ]),
+                ),
+                ("reference", reference_json),
+                ("speedup_vs_reference", speedup_json),
+                ("parity", Json::Str(parity.to_string())),
+            ]),
+        ),
+        ("offline_dp", Json::Arr(dp_rows)),
+        ("decide_ns", Json::Arr(decide_rows)),
+    ]);
+    std::fs::write(&out, doc.dump_pretty())?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -1,0 +1,231 @@
+//! The batched fleet replay engine: zero-allocation per slot, monomorphic
+//! policy dispatch, contiguous-memory traversal.
+//!
+//! The seed fleet runner walked 933 heap-scattered `Vec<u32>` curves
+//! through `Box<dyn Policy>` with a per-slot `to_vec()` of the future
+//! window, sharded by striding (`idx += threads`) over an `mpsc` channel.
+//! This engine replaces all three costs:
+//!
+//! * **dispatch** — [`FleetPolicy`] is an enum over the five Sec. VII
+//!   policies; the per-slot `decide` is a direct `match`, so each arm
+//!   monomorphizes and inlines ([`crate::algos::Policy`] stays as the
+//!   extensibility trait — anything exotic still runs through the boxed
+//!   reference path in [`super::fleet::run_fleet_reference`]);
+//! * **allocation** — future windows are borrowed sub-slices of the demand
+//!   curve (see [`crate::sim::OracleFuture`] for the single-user form);
+//!   nothing allocates inside the slot loop;
+//! * **locality** — shards replay contiguous *chunks* of the columnar
+//!   [`FlatPopulation`] store, streaming one flat buffer front to back
+//!   instead of pointer-chasing per-user vectors, and results come back in
+//!   order without a channel.
+//!
+//! Numerical contract: for every policy the engine performs the exact same
+//! arithmetic in the exact same order as [`crate::sim::run_policy`], so
+//! results are **bit-identical** to the reference path — enforced by
+//! `rust/tests/engine_parity.rs`.
+
+use crate::algos::baselines::{AllOnDemand, AllReserved, Separate};
+use crate::algos::deterministic::Deterministic;
+use crate::algos::randomized::Randomized;
+use crate::algos::{Decision, Policy};
+use crate::analysis::classify::classify;
+use crate::ledger::Ledger;
+use crate::pricing::Pricing;
+use crate::sim::all_on_demand_cost;
+use crate::sim::fleet::{FleetResult, PolicySpec, UserResult};
+use crate::trace::FlatPopulation;
+use crate::util::stats::summarize_u32;
+
+/// Statically dispatched per-user policy state for the fleet hot path.
+/// One variant per Sec. VII policy; construction mirrors
+/// [`PolicySpec::build`] exactly (including the per-user randomized seed)
+/// so both paths replay identical decision sequences.
+pub enum FleetPolicy {
+    AllOnDemand(AllOnDemand),
+    AllReserved(AllReserved),
+    Separate(Separate),
+    Deterministic(Deterministic),
+    Randomized(Randomized),
+}
+
+impl FleetPolicy {
+    /// Instantiate for one user (the monomorphic mirror of
+    /// [`PolicySpec::build`]).
+    pub fn build(spec: &PolicySpec, pricing: Pricing, user_id: u32) -> FleetPolicy {
+        match *spec {
+            PolicySpec::AllOnDemand => FleetPolicy::AllOnDemand(AllOnDemand::new()),
+            PolicySpec::AllReserved => FleetPolicy::AllReserved(AllReserved::new(pricing)),
+            PolicySpec::Separate => FleetPolicy::Separate(Separate::new(pricing)),
+            PolicySpec::Deterministic { z, window } => {
+                let z = z.unwrap_or_else(|| pricing.beta());
+                FleetPolicy::Deterministic(Deterministic::new(pricing, z, window))
+            }
+            PolicySpec::Randomized { window, seed } => FleetPolicy::Randomized(
+                Randomized::with_window(pricing, window, seed ^ ((user_id as u64) << 17)),
+            ),
+        }
+    }
+
+    /// Per-slot decision — a direct match, no vtable.
+    #[inline]
+    pub fn decide(&mut self, demand: u32, future: &[u32]) -> Decision {
+        match self {
+            FleetPolicy::AllOnDemand(p) => p.decide(demand, future),
+            FleetPolicy::AllReserved(p) => p.decide(demand, future),
+            FleetPolicy::Separate(p) => p.decide(demand, future),
+            FleetPolicy::Deterministic(p) => p.decide(demand, future),
+            FleetPolicy::Randomized(p) => p.decide(demand, future),
+        }
+    }
+
+    /// Prediction window the policy wants (0 for purely online).
+    pub fn window(&self) -> usize {
+        match self {
+            FleetPolicy::AllOnDemand(p) => p.window(),
+            FleetPolicy::AllReserved(p) => p.window(),
+            FleetPolicy::Separate(p) => p.window(),
+            FleetPolicy::Deterministic(p) => p.window(),
+            FleetPolicy::Randomized(p) => p.window(),
+        }
+    }
+}
+
+/// Replay one user's demand curve through one policy: the allocation-free
+/// inner loop of the batched engine.
+pub fn replay_user(demand: &[u32], user_id: u32, pricing: Pricing, spec: &PolicySpec) -> UserResult {
+    let mut policy = FleetPolicy::build(spec, pricing, user_id);
+    let w = policy.window();
+    let len = demand.len();
+    let mut ledger = Ledger::new(pricing);
+    for (t, &d) in demand.iter().enumerate() {
+        let fut: &[u32] = if w == 0 {
+            &[]
+        } else {
+            // Borrowed future window [t+1, t+w] (shrinking at the tail).
+            &demand[t + 1..(t + 1 + w).min(len)]
+        };
+        let dec = policy.decide(d, fut);
+        ledger
+            .bill_slot(d, dec.reserve, dec.on_demand)
+            .unwrap_or_else(|e| panic!("user {user_id}: infeasible decision: {e}"));
+    }
+    let report = ledger.report();
+    let denom = all_on_demand_cost(demand, &pricing);
+    let normalized = if denom > 0.0 { report.total / denom } else { 1.0 };
+    UserResult {
+        user_id,
+        group: classify(&summarize_u32(demand)),
+        normalized_cost: normalized,
+        absolute_cost: report.total,
+        reservations: report.reservations,
+    }
+}
+
+/// Run one policy spec over a columnar population, sharded into contiguous
+/// chunks across `threads` std threads. Results are deterministic and
+/// independent of the thread count.
+pub fn run_fleet_flat(
+    flat: &FlatPopulation,
+    pricing: Pricing,
+    spec: &PolicySpec,
+    threads: usize,
+) -> FleetResult {
+    let n = flat.len();
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = if n == 0 { 0 } else { (n + threads - 1) / threads };
+    let mut per_user: Vec<UserResult> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for shard in 0..threads {
+            let lo = shard * chunk;
+            let hi = ((shard + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            handles.push(scope.spawn(move || {
+                (lo..hi)
+                    .map(|i| replay_user(flat.demand(i), flat.user_id(i), pricing, spec))
+                    .collect::<Vec<UserResult>>()
+            }));
+        }
+        for h in handles {
+            per_user.extend(h.join().expect("fleet shard panicked"));
+        }
+    });
+    // Chunking already preserves input order; sort by user id to keep the
+    // reference path's output contract for arbitrarily ordered populations.
+    per_user.sort_by_key(|u| u.user_id);
+    FleetResult { policy: spec.name(), per_user }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::{generate, SynthConfig};
+
+    fn pricing() -> Pricing {
+        Pricing::normalized(0.08 / 69.0, 0.4875, 1000)
+    }
+
+    fn specs() -> Vec<PolicySpec> {
+        vec![
+            PolicySpec::AllOnDemand,
+            PolicySpec::AllReserved,
+            PolicySpec::Separate,
+            PolicySpec::Deterministic { z: None, window: 0 },
+            PolicySpec::Deterministic { z: Some(0.4), window: 40 },
+            PolicySpec::Randomized { window: 0, seed: 11 },
+        ]
+    }
+
+    #[test]
+    fn fleet_policy_matches_boxed_dispatch() {
+        // The enum's decide must reproduce the trait-object path exactly.
+        let pop = generate(&SynthConfig { users: 6, slots: 1200, seed: 3, ..Default::default() });
+        for spec in specs() {
+            for u in &pop.users {
+                let mut fast = FleetPolicy::build(&spec, pricing(), u.user_id);
+                let mut slow = spec.build(pricing(), u.user_id);
+                assert_eq!(fast.window(), slow.window());
+                let w = fast.window();
+                for (t, &d) in u.demand.iter().enumerate() {
+                    let hi = (t + 1 + w).min(u.demand.len());
+                    let fut = &u.demand[t + 1..hi];
+                    let fut = if w == 0 { &[] as &[u32] } else { fut };
+                    assert_eq!(
+                        fast.decide(d, fut),
+                        slow.decide(d, fut),
+                        "{} user {} slot {t}",
+                        spec.name(),
+                        u.user_id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_sharding_is_thread_count_invariant() {
+        let pop = generate(&SynthConfig { users: 17, slots: 1500, seed: 9, ..Default::default() });
+        let flat = pop.flatten();
+        let spec = PolicySpec::Deterministic { z: None, window: 0 };
+        let one = run_fleet_flat(&flat, pricing(), &spec, 1);
+        for threads in [2usize, 3, 8, 64] {
+            let many = run_fleet_flat(&flat, pricing(), &spec, threads);
+            assert_eq!(one.per_user.len(), many.per_user.len());
+            for (a, b) in one.per_user.iter().zip(&many.per_user) {
+                assert_eq!(a.user_id, b.user_id);
+                assert_eq!(a.normalized_cost.to_bits(), b.normalized_cost.to_bits());
+                assert_eq!(a.absolute_cost.to_bits(), b.absolute_cost.to_bits());
+                assert_eq!(a.reservations, b.reservations);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_population_yields_empty_result() {
+        let flat = FlatPopulation::default();
+        let r = run_fleet_flat(&flat, pricing(), &PolicySpec::AllOnDemand, 4);
+        assert!(r.per_user.is_empty());
+    }
+}

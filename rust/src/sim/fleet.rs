@@ -1,7 +1,13 @@
 //! Fleet-scale evaluation: run a suite of policies across a whole user
-//! population in parallel (std threads — one shard per core), producing the
-//! per-user normalized costs behind Fig. 5-7 and the per-group means of
-//! Table II.
+//! population in parallel, producing the per-user normalized costs behind
+//! Fig. 5-7 and the per-group means of Table II.
+//!
+//! [`run_fleet`] drives the batched zero-allocation engine
+//! ([`crate::sim::engine`]) over a columnar [`FlatPopulation`]; the seed
+//! implementation (strided `mpsc` sharding over `Box<dyn Policy>`) is kept
+//! verbatim as [`run_fleet_reference`] — it is the golden model for the
+//! engine-parity tests and the baseline the `bench` CLI measures speedups
+//! against.
 
 use std::sync::mpsc;
 use std::thread;
@@ -9,8 +15,9 @@ use std::thread;
 use crate::algos::{baselines, deterministic::Deterministic, randomized::Randomized, Policy};
 use crate::analysis::classify::{classify, Group};
 use crate::pricing::Pricing;
+use crate::sim::engine::run_fleet_flat;
 use crate::sim::{all_on_demand_cost, run_policy};
-use crate::trace::Population;
+use crate::trace::{FlatPopulation, Population};
 
 /// Which policy to instantiate per user (policies carry per-user state, so
 /// the fleet runner needs a factory, not an instance).
@@ -110,7 +117,26 @@ impl FleetResult {
 }
 
 /// Run one policy spec across the population, sharded over `threads`.
+///
+/// Flattens the population and drives the batched engine; when running
+/// several specs over the same population, flatten once and call
+/// [`run_fleet_flat`] (or [`run_benchmark_suite`], which does) to avoid
+/// rebuilding the columnar store per policy.
 pub fn run_fleet(pop: &Population, pricing: Pricing, spec: &PolicySpec, threads: usize) -> FleetResult {
+    run_fleet_flat(&pop.flatten(), pricing, spec, threads)
+}
+
+/// The seed fleet runner, kept as the golden reference for the batched
+/// engine: strided sharding over an `mpsc` channel with `Box<dyn Policy>`
+/// dispatch and a freshly allocated future window per slot. Slower by
+/// design — use [`run_fleet`] everywhere except parity tests and the
+/// `bench` baseline measurement.
+pub fn run_fleet_reference(
+    pop: &Population,
+    pricing: Pricing,
+    spec: &PolicySpec,
+    threads: usize,
+) -> FleetResult {
     let threads = threads.max(1).min(pop.users.len().max(1));
     let (tx, rx) = mpsc::channel::<Vec<UserResult>>();
     thread::scope(|scope| {
@@ -147,8 +173,8 @@ pub fn run_fleet(pop: &Population, pricing: Pricing, spec: &PolicySpec, threads:
     })
 }
 
-/// Run the full Sec. VII suite (5 policies) across the population.
-pub fn run_benchmark_suite(pop: &Population, pricing: Pricing, seed: u64, threads: usize) -> Vec<FleetResult> {
+/// The Sec. VII policy suite, in the paper's order.
+pub fn suite_specs(seed: u64) -> [PolicySpec; 5] {
     [
         PolicySpec::AllOnDemand,
         PolicySpec::AllReserved,
@@ -156,9 +182,16 @@ pub fn run_benchmark_suite(pop: &Population, pricing: Pricing, seed: u64, thread
         PolicySpec::Deterministic { z: None, window: 0 },
         PolicySpec::Randomized { window: 0, seed },
     ]
-    .iter()
-    .map(|spec| run_fleet(pop, pricing, spec, threads))
-    .collect()
+}
+
+/// Run the full Sec. VII suite (5 policies) across the population,
+/// flattening to the columnar store once.
+pub fn run_benchmark_suite(pop: &Population, pricing: Pricing, seed: u64, threads: usize) -> Vec<FleetResult> {
+    let flat = FlatPopulation::from(pop);
+    suite_specs(seed)
+        .iter()
+        .map(|spec| run_fleet_flat(&flat, pricing, spec, threads))
+        .collect()
 }
 
 #[cfg(test)]
@@ -225,6 +258,22 @@ mod tests {
         assert_eq!(results.len(), 5);
         for r in &results {
             assert_eq!(r.per_user.len(), pop.users.len());
+        }
+    }
+
+    #[test]
+    fn engine_matches_reference_runner() {
+        // Full parity coverage lives in tests/engine_parity.rs; this is the
+        // fast in-tree smoke check.
+        let pop = small_pop();
+        let spec = PolicySpec::Deterministic { z: None, window: 0 };
+        let new = run_fleet(&pop, pricing(), &spec, 4);
+        let old = run_fleet_reference(&pop, pricing(), &spec, 4);
+        assert_eq!(new.per_user.len(), old.per_user.len());
+        for (a, b) in new.per_user.iter().zip(&old.per_user) {
+            assert_eq!(a.user_id, b.user_id);
+            assert_eq!(a.normalized_cost.to_bits(), b.normalized_cost.to_bits());
+            assert_eq!(a.reservations, b.reservations);
         }
     }
 

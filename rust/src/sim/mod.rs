@@ -2,39 +2,104 @@
 //! the [`Ledger`](crate::ledger::Ledger), and aggregate fleet-wide results
 //! (the machinery behind Fig. 5-7 and Table II).
 
+pub mod engine;
 pub mod fleet;
 
 use crate::algos::Policy;
 use crate::ledger::{CostReport, Ledger, LedgerError};
 use crate::pricing::Pricing;
 
-/// Run one policy over one demand curve, billing every slot.
+/// A per-slot future-demand provider: `future(t)` yields the predicted
+/// demands `d̂_{t+1}, …, d̂_{t+w}` (possibly shorter near the trace tail)
+/// as a **borrowed slice** — the replay hot path never allocates.
 ///
-/// `future` slices are taken from the *actual* demand (the paper's
-/// assumption that short-term predictions are reliable, Sec. VI); pass a
-/// forecaster-backed provider through [`run_policy_with`] to study
-/// imperfect predictions.
-pub fn run_policy(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> Result<CostReport, LedgerError> {
-    let w = policy.window();
-    run_policy_with(policy, demands, pricing, |t| {
-        let hi = (t + 1 + w).min(demands.len());
-        demands[t + 1..hi].to_vec()
-    })
+/// Implementors lend from either the actual trace ([`OracleFuture`]) or an
+/// internal reusable buffer ([`BufferedFuture`], forecaster adapters).
+pub trait FutureSource {
+    fn future(&mut self, t: usize) -> &[u32];
 }
 
-/// Run one policy with a custom future-demand provider (`t -> predicted
-/// demands for t+1..=t+w`).
+/// Oracle provider: borrows the future window straight from the actual
+/// demand curve (the paper's reliable-prediction assumption, Sec. VI).
+/// Zero-copy, zero-allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct OracleFuture<'a> {
+    demands: &'a [u32],
+    w: usize,
+}
+
+impl<'a> OracleFuture<'a> {
+    pub fn new(demands: &'a [u32], w: usize) -> OracleFuture<'a> {
+        OracleFuture { demands, w }
+    }
+}
+
+impl FutureSource for OracleFuture<'_> {
+    #[inline]
+    fn future(&mut self, t: usize) -> &[u32] {
+        let hi = (t + 1 + self.w).min(self.demands.len());
+        let lo = (t + 1).min(hi);
+        &self.demands[lo..hi]
+    }
+}
+
+/// Closure-backed provider (the pre-engine API): owns the closure's output
+/// so the borrowed-slice contract holds. Allocates whatever the closure
+/// allocates — use [`OracleFuture`] or a buffer-reusing source on hot paths.
+pub struct BufferedFuture<F: FnMut(usize) -> Vec<u32>> {
+    f: F,
+    buf: Vec<u32>,
+}
+
+impl<F: FnMut(usize) -> Vec<u32>> BufferedFuture<F> {
+    pub fn new(f: F) -> BufferedFuture<F> {
+        BufferedFuture { f, buf: Vec::new() }
+    }
+}
+
+impl<F: FnMut(usize) -> Vec<u32>> FutureSource for BufferedFuture<F> {
+    fn future(&mut self, t: usize) -> &[u32] {
+        self.buf = (self.f)(t);
+        &self.buf
+    }
+}
+
+/// Run one policy over one demand curve, billing every slot.
+///
+/// `future` slices are borrowed from the *actual* demand (the paper's
+/// assumption that short-term predictions are reliable, Sec. VI); pass a
+/// forecaster-backed provider through [`run_policy_with`] (or any
+/// [`FutureSource`] through [`run_policy_src`]) to study imperfect
+/// predictions.
+pub fn run_policy(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> Result<CostReport, LedgerError> {
+    let w = policy.window();
+    run_policy_src(policy, demands, pricing, &mut OracleFuture::new(demands, w))
+}
+
+/// Run one policy with a custom future-demand closure (`t -> predicted
+/// demands for t+1..=t+w`). Compatibility wrapper over [`run_policy_src`].
 pub fn run_policy_with(
     policy: &mut dyn Policy,
     demands: &[u32],
     pricing: Pricing,
-    mut future: impl FnMut(usize) -> Vec<u32>,
+    future: impl FnMut(usize) -> Vec<u32>,
+) -> Result<CostReport, LedgerError> {
+    run_policy_src(policy, demands, pricing, &mut BufferedFuture::new(future))
+}
+
+/// Core replay loop over any [`FutureSource`]. The provider is only
+/// consulted for window policies (`w > 0`).
+pub fn run_policy_src(
+    policy: &mut dyn Policy,
+    demands: &[u32],
+    pricing: Pricing,
+    future: &mut dyn FutureSource,
 ) -> Result<CostReport, LedgerError> {
     let mut ledger = Ledger::new(pricing);
     let w = policy.window();
     for (t, &d) in demands.iter().enumerate() {
-        let fut = if w == 0 { Vec::new() } else { future(t) };
-        let dec = policy.decide(d, &fut);
+        let fut: &[u32] = if w == 0 { &[] } else { future.future(t) };
+        let dec = policy.decide(d, fut);
         ledger.bill_slot(d, dec.reserve, dec.on_demand)?;
     }
     Ok(ledger.report())
@@ -74,6 +139,35 @@ mod tests {
             run_policy_with(&mut with_zeros, &demands, pricing, |_| vec![0; 10]).unwrap();
         // oracle foresees break-even sooner -> fewer on-demand slots
         assert!(r_oracle.on_demand_slots <= r_zeros.on_demand_slots);
+    }
+
+    #[test]
+    fn oracle_future_matches_closure_provider_bitwise() {
+        // The borrowed-slice oracle must reproduce the old to_vec() path
+        // exactly (bit-identical costs) for a window policy.
+        let pricing = Pricing::normalized(0.1, 0.0, 50);
+        let demands: Vec<u32> = (0..200).map(|i| ((i / 13) % 3) as u32).collect();
+        let w = 10;
+        let mut a = Deterministic::with_window(pricing, w);
+        let mut b = Deterministic::with_window(pricing, w);
+        let r_oracle = run_policy(&mut a, &demands, pricing).unwrap();
+        let r_closure = run_policy_with(&mut b, &demands, pricing, |t| {
+            let hi = (t + 1 + w).min(demands.len());
+            demands[t + 1..hi].to_vec()
+        })
+        .unwrap();
+        assert_eq!(r_oracle.total.to_bits(), r_closure.total.to_bits());
+        assert_eq!(r_oracle.reservations, r_closure.reservations);
+        assert_eq!(r_oracle.on_demand_slots, r_closure.on_demand_slots);
+    }
+
+    #[test]
+    fn oracle_future_tail_shrinks() {
+        let demands = [1u32, 2, 3];
+        let mut src = OracleFuture::new(&demands, 5);
+        assert_eq!(src.future(0), &[2, 3]);
+        assert_eq!(src.future(1), &[3]);
+        assert_eq!(src.future(2), &[] as &[u32]);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! generator, the task→instance packing scheduler (the paper's trace
 //! preprocessing step), and trace I/O.
 //!
-//! **Substitution note (DESIGN.md §3):** the paper drives its evaluation
+//! **Substitution note:** the paper drives its evaluation
 //! with the 2011 Google cluster-usage traces (40 GB, 933 users, 29 days),
 //! which are not redistributable here. [`synth`] generates a 933-user,
 //! 29-day population whose demand-fluctuation mixture (σ/μ groups of
@@ -65,6 +65,70 @@ impl Population {
     pub fn is_empty(&self) -> bool {
         self.users.is_empty()
     }
+
+    /// Columnar (structure-of-arrays) view for the batched fleet engine.
+    pub fn flatten(&self) -> FlatPopulation {
+        FlatPopulation::from_population(self)
+    }
+}
+
+/// Columnar demand store: every user's curve concatenated into one flat
+/// `Vec<u32>` with an offsets table, so fleet replay streams one contiguous
+/// buffer instead of chasing per-user heap allocations. This is the layout
+/// the batched engine ([`crate::sim::engine`]) shards over.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FlatPopulation {
+    user_ids: Vec<u32>,
+    /// `offsets[i]..offsets[i+1]` indexes user `i`'s demand in `demand`.
+    offsets: Vec<usize>,
+    demand: Vec<u32>,
+}
+
+impl FlatPopulation {
+    /// Build from an AoS population (single pass, one big allocation).
+    pub fn from_population(pop: &Population) -> FlatPopulation {
+        let total: usize = pop.users.iter().map(|u| u.demand.len()).sum();
+        let mut user_ids = Vec::with_capacity(pop.users.len());
+        let mut offsets = Vec::with_capacity(pop.users.len() + 1);
+        let mut demand = Vec::with_capacity(total);
+        offsets.push(0);
+        for u in &pop.users {
+            user_ids.push(u.user_id);
+            demand.extend_from_slice(&u.demand);
+            offsets.push(demand.len());
+        }
+        FlatPopulation { user_ids, offsets, demand }
+    }
+
+    /// Number of users.
+    pub fn len(&self) -> usize {
+        self.user_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.user_ids.is_empty()
+    }
+
+    /// Total instance-slots across all users (the suite-throughput unit).
+    pub fn total_slots(&self) -> usize {
+        self.demand.len()
+    }
+
+    /// User id of the `i`-th user.
+    pub fn user_id(&self, i: usize) -> u32 {
+        self.user_ids[i]
+    }
+
+    /// Borrowed demand curve of the `i`-th user — contiguous, zero-copy.
+    pub fn demand(&self, i: usize) -> &[u32] {
+        &self.demand[self.offsets[i]..self.offsets[i + 1]]
+    }
+}
+
+impl From<&Population> for FlatPopulation {
+    fn from(pop: &Population) -> FlatPopulation {
+        FlatPopulation::from_population(pop)
+    }
 }
 
 #[cfg(test)]
@@ -83,5 +147,30 @@ mod tests {
         assert_eq!(u.total_demand(), 6);
         assert_eq!(u.peak(), 4);
         assert!((u.summary().mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flatten_preserves_curves_and_ids() {
+        let pop = Population {
+            users: vec![
+                UserTrace::new(7, vec![1, 2, 3]),
+                UserTrace::new(9, vec![]),
+                UserTrace::new(11, vec![4, 0]),
+            ],
+        };
+        let flat = pop.flatten();
+        assert_eq!(flat.len(), 3);
+        assert_eq!(flat.total_slots(), 5);
+        assert_eq!(flat.user_id(0), 7);
+        assert_eq!(flat.demand(0), &[1, 2, 3]);
+        assert_eq!(flat.demand(1), &[] as &[u32]);
+        assert_eq!(flat.demand(2), &[4, 0]);
+    }
+
+    #[test]
+    fn flatten_empty_population() {
+        let flat = Population::default().flatten();
+        assert!(flat.is_empty());
+        assert_eq!(flat.total_slots(), 0);
     }
 }

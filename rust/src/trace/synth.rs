@@ -12,7 +12,7 @@
 //!
 //! Group weights are calibrated so Table II's population-wide averages are
 //! attainable (the overall All-reserved average of 16.48 pins Group 1 near
-//! one third of the users; see DESIGN.md §3).
+//! one third of the users; see the substitution note in [`super`]).
 
 use super::{Population, UserTrace, NUM_USERS, SLOTS_PER_DAY, TRACE_SLOTS};
 use crate::util::rng::Rng;

@@ -5,31 +5,54 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 /// One benchmark measurement series.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
-    /// Nanoseconds per iteration for each sample.
+    /// Nanoseconds per iteration for each sample, **sorted ascending**
+    /// (construct through [`BenchResult::new`], which sorts once — the
+    /// quantile accessors used to clone + re-sort on every call).
     pub samples_ns: Vec<f64>,
     /// Iterations executed per sample.
     pub iters_per_sample: u64,
 }
 
 impl BenchResult {
+    /// Build a result, sorting the samples once up front.
+    pub fn new(name: impl Into<String>, mut samples_ns: Vec<f64>, iters_per_sample: u64) -> BenchResult {
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchResult { name: name.into(), samples_ns, iters_per_sample }
+    }
+
     pub fn median_ns(&self) -> f64 {
-        let mut s = self.samples_ns.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        crate::util::stats::quantile_sorted(&s, 0.5)
+        self.quantile_ns(0.5)
     }
 
     pub fn quantile_ns(&self, q: f64) -> f64 {
-        let mut s = self.samples_ns.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        crate::util::stats::quantile_sorted(&s, q)
+        debug_assert!(
+            self.samples_ns.windows(2).all(|w| w[0] <= w[1]),
+            "BenchResult.samples_ns must be sorted (use BenchResult::new)"
+        );
+        crate::util::stats::quantile_sorted(&self.samples_ns, q)
     }
 
     pub fn mean_ns(&self) -> f64 {
         self.samples_ns.iter().sum::<f64>() / self.samples_ns.len().max(1) as f64
+    }
+
+    /// JSON form for the tracked perf baseline (`BENCH.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("median_ns", Json::Num(self.median_ns())),
+            ("p10_ns", Json::Num(self.quantile_ns(0.10))),
+            ("p90_ns", Json::Num(self.quantile_ns(0.90))),
+            ("mean_ns", Json::Num(self.mean_ns())),
+            ("samples", Json::Num(self.samples_ns.len() as f64)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+        ])
     }
 
     /// Print the standard one-line report:
@@ -119,7 +142,7 @@ impl Bencher {
             let dt = t0.elapsed().as_nanos() as f64;
             samples_ns.push(dt / iters_per_sample as f64);
         }
-        BenchResult { name: name.to_string(), samples_ns, iters_per_sample }
+        BenchResult::new(name, samples_ns, iters_per_sample)
     }
 }
 
@@ -151,6 +174,26 @@ mod tests {
         assert_eq!(r.samples_ns.len(), 3);
         assert!(r.median_ns() > 0.0);
         assert!(r.throughput(100.0) > 0.0);
+    }
+
+    #[test]
+    fn new_sorts_samples_and_quantiles_read_directly() {
+        let r = BenchResult::new("x", vec![5.0, 1.0, 3.0, 2.0, 4.0], 10);
+        assert_eq!(r.samples_ns, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(r.median_ns(), 3.0);
+        assert_eq!(r.quantile_ns(0.0), 1.0);
+        assert_eq!(r.quantile_ns(1.0), 5.0);
+    }
+
+    #[test]
+    fn to_json_has_the_tracked_fields() {
+        let r = BenchResult::new("suite", vec![10.0, 20.0], 7);
+        let j = r.to_json();
+        assert_eq!(j.get("name").as_str(), Some("suite"));
+        assert_eq!(j.get("iters_per_sample").as_f64(), Some(7.0));
+        assert!(j.get("median_ns").as_f64().unwrap() > 0.0);
+        // serializes to valid JSON
+        assert!(crate::util::json::parse(&j.dump()).is_ok());
     }
 
     #[test]

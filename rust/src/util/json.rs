@@ -1,7 +1,8 @@
-//! Minimal JSON parser (serde is not in the offline vendor set). Supports
-//! the subset the artifact manifest uses: objects, arrays, strings (with
-//! basic escapes), numbers, booleans, null. Not streaming, not fast — it
-//! parses a ~kB manifest once at startup.
+//! Minimal JSON parser **and serializer** (serde is not in the offline
+//! vendor set). Supports the subset the artifact manifest and the
+//! `BENCH.json` perf baseline use: objects, arrays, strings (with basic
+//! escapes), numbers, booleans, null. Not streaming, not fast — it parses
+//! a ~kB manifest once at startup and dumps small reports.
 
 use std::fmt;
 
@@ -58,6 +59,131 @@ impl Json {
             .and_then(|m| m.iter().find(|(k, _)| k == key))
             .map(|(_, v)| v)
             .unwrap_or(&NULL)
+    }
+
+    /// Convenience constructor for an object from `(key, value)` pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Serialize to a compact JSON document. Non-finite numbers (which JSON
+    /// cannot represent) serialize as `null`.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    /// Serialize with two-space indentation (for committed/diffed files).
+    pub fn dump_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(*n, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    push_indent(out, indent + 1);
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(pairs) if !pairs.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    push_indent(out, indent + 1);
+                    write_str(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+}
+
+fn push_indent(out: &mut String, level: usize) {
+    for _ in 0..level {
+        out.push_str("  ");
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n == n.trunc() && n.abs() < 9.0e15 {
+        // integral values print without a fraction (and round-trip exactly)
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.dump())
     }
 }
 
@@ -307,5 +433,45 @@ mod tests {
     fn missing_key_is_null() {
         let v = parse(r#"{"a": 1}"#).unwrap();
         assert_eq!(v.get("nope"), &Json::Null);
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let v = Json::obj(vec![
+            ("name", Json::Str("suite \"quoted\"\n".into())),
+            ("count", Json::Num(42.0)),
+            ("ratio", Json::Num(1.5125)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)])),
+        ]);
+        for text in [v.dump(), v.dump_pretty()] {
+            let back = parse(&text).unwrap();
+            assert_eq!(back, v, "from {text}");
+        }
+    }
+
+    #[test]
+    fn dump_integers_without_fraction() {
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(-3.0).dump(), "-3");
+        assert_eq!(Json::Num(0.5).dump(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn pretty_dump_is_valid_json() {
+        let v = Json::obj(vec![(
+            "nested",
+            Json::Arr(vec![Json::obj(vec![("k", Json::Num(1.0))]), Json::Arr(vec![])]),
+        )]);
+        let text = v.dump_pretty();
+        assert_eq!(parse(&text).unwrap(), v);
+        assert!(text.contains('\n'));
     }
 }

@@ -143,7 +143,7 @@ fn randomized_beats_deterministic_in_expectation_on_adversarial_input() {
     // break-even point. Deterministic pays ~ (2-alpha) OPT; randomized
     // does strictly better in expectation.
     //
-    // KNOWN DEVIATION (EXPERIMENTS.md §Fig.2): on demand stopping at
+    // KNOWN DEVIATION (PERF.md §Known deviations): on demand stopping at
     // x = beta + eps, the density's atom at z = beta fires its reservation
     // and pays the fee for epsilon of discounted use, adding
     // alpha(1-alpha)/(e-1+alpha) to the expected ratio:

@@ -1,0 +1,118 @@
+//! Golden-parity property test: the batched zero-allocation fleet engine
+//! must produce **bit-identical** `CostReport`-derived results to the seed
+//! per-user `run_policy` path — across random populations, seeds, thread
+//! counts, and every Sec. VII policy (plus prediction-window variants).
+//!
+//! Three independent oracles are compared:
+//! 1. `run_fleet` — the batched engine over the columnar store,
+//! 2. `run_fleet_reference` — the seed strided `mpsc` + `Box<dyn Policy>`
+//!    runner, kept verbatim,
+//! 3. a direct single-user `run_policy` replay (no fleet machinery at all).
+
+use cloudreserve::pricing::Pricing;
+use cloudreserve::sim::fleet::{run_fleet, run_fleet_reference, suite_specs, FleetResult, PolicySpec};
+use cloudreserve::sim::run_policy;
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::trace::Population;
+
+fn pricing() -> Pricing {
+    // compressed EC2 small, tau sized to the short test traces
+    Pricing::normalized(0.08 / 69.0, 0.4875, 1000)
+}
+
+fn assert_bit_identical(a: &FleetResult, b: &FleetResult, what: &str) {
+    assert_eq!(a.per_user.len(), b.per_user.len(), "{what}: user count");
+    for (x, y) in a.per_user.iter().zip(&b.per_user) {
+        assert_eq!(x.user_id, y.user_id, "{what}");
+        assert_eq!(x.group, y.group, "{what}: user {}", x.user_id);
+        assert_eq!(
+            x.normalized_cost.to_bits(),
+            y.normalized_cost.to_bits(),
+            "{what}: user {} normalized {} vs {}",
+            x.user_id,
+            x.normalized_cost,
+            y.normalized_cost
+        );
+        assert_eq!(
+            x.absolute_cost.to_bits(),
+            y.absolute_cost.to_bits(),
+            "{what}: user {} absolute",
+            x.user_id
+        );
+        assert_eq!(x.reservations, y.reservations, "{what}: user {} reservations", x.user_id);
+    }
+}
+
+fn specs_under_test(seed: u64) -> Vec<PolicySpec> {
+    let mut specs: Vec<PolicySpec> = suite_specs(seed).to_vec();
+    // prediction-window variants exercise the borrowed future slices
+    specs.push(PolicySpec::Deterministic { z: None, window: 60 });
+    specs.push(PolicySpec::Deterministic { z: Some(0.3), window: 200 });
+    specs.push(PolicySpec::Randomized { window: 90, seed });
+    specs
+}
+
+#[test]
+fn engine_matches_reference_across_populations_seeds_and_threads() {
+    // Sized for debug-mode CI: 2 random populations x 8 policy specs x
+    // 2 thread counts, engine vs reference compared pairwise plus a
+    // thread-count-invariance check against the single-thread engine run.
+    for (pop_seed, users, slots) in [(1u64, 10usize, 1500usize), (2013, 14, 1000)] {
+        let pop = generate(&SynthConfig { users, slots, seed: pop_seed, ..Default::default() });
+        for spec in specs_under_test(pop_seed ^ 0xA5) {
+            let engine_1t = run_fleet(&pop, pricing(), &spec, 1);
+            for threads in [4usize, 11] {
+                let engine = run_fleet(&pop, pricing(), &spec, threads);
+                let reference = run_fleet_reference(&pop, pricing(), &spec, threads);
+                let what = format!("{} pop_seed={pop_seed} threads={threads}", spec.name());
+                assert_bit_identical(&engine, &reference, &what);
+                assert_bit_identical(&engine, &engine_1t, &format!("{what} vs 1-thread"));
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_matches_direct_run_policy_per_user() {
+    let pop = generate(&SynthConfig { users: 12, slots: 2000, seed: 5, ..Default::default() });
+    for spec in specs_under_test(9) {
+        let fleet = run_fleet(&pop, pricing(), &spec, 4);
+        for (u, got) in pop.users.iter().zip(&fleet.per_user) {
+            let mut policy = spec.build(pricing(), u.user_id);
+            let want = run_policy(policy.as_mut(), &u.demand, pricing()).unwrap();
+            assert_eq!(got.user_id, u.user_id);
+            assert_eq!(
+                got.absolute_cost.to_bits(),
+                want.total.to_bits(),
+                "{}: user {}",
+                spec.name(),
+                u.user_id
+            );
+            assert_eq!(got.reservations, want.reservations);
+        }
+    }
+}
+
+#[test]
+fn engine_handles_degenerate_populations() {
+    // zero users, zero-demand users, and single-slot traces
+    let empty = Population::default();
+    let r = run_fleet(&empty, pricing(), &PolicySpec::AllOnDemand, 8);
+    assert!(r.per_user.is_empty());
+
+    let degenerate = Population {
+        users: vec![
+            cloudreserve::trace::UserTrace::new(0, vec![0; 500]),
+            cloudreserve::trace::UserTrace::new(1, vec![3]),
+            cloudreserve::trace::UserTrace::new(2, vec![]),
+        ],
+    };
+    for spec in suite_specs(3) {
+        let engine = run_fleet(&degenerate, pricing(), &spec, 2);
+        let reference = run_fleet_reference(&degenerate, pricing(), &spec, 2);
+        assert_bit_identical(&engine, &reference, &spec.name());
+        // zero-demand users normalize to exactly 1.0 on both paths
+        assert_eq!(engine.per_user[0].normalized_cost, 1.0, "{}", spec.name());
+        assert_eq!(engine.per_user[2].normalized_cost, 1.0, "{}", spec.name());
+    }
+}
