@@ -9,6 +9,7 @@
 use cloudreserve::analysis::classify::Group;
 use cloudreserve::analysis::report::{cdf_csv, render_cdf_table, render_table2, CostSeries};
 use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::pricing::Market;
 use cloudreserve::sim::fleet::run_benchmark_suite;
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::util::cli::Args;
@@ -27,10 +28,10 @@ fn main() -> anyhow::Result<()> {
     );
     eprintln!("population: {} users x {} slots (seed {})", cfg.users, cfg.slots, cfg.seed);
     let pop = generate(&cfg);
-    let pricing = ec2_small_compressed();
+    let market = Market::single(ec2_small_compressed());
 
     let t0 = std::time::Instant::now();
-    let results = run_benchmark_suite(&pop, pricing, args.u64_or("policy-seed", 1), threads);
+    let results = run_benchmark_suite(&pop, &market, args.u64_or("policy-seed", 1), threads);
     eprintln!("suite finished in {:.1}s", t0.elapsed().as_secs_f64());
 
     // Table II

@@ -128,10 +128,16 @@ fn run_window(
                     let mut pred = mk(w);
                     let cost = if use_forecaster {
                         let mut f = ArForecaster::new(8, 128, 1024);
-                        run_policy_with(pred.as_mut(), &u.demand, pricing, |t| {
-                            // observe up to t, predict the next w
+                        // reusable forecast buffers: the slot loop performs
+                        // no allocation once these reach the window size
+                        let mut f64_buf: Vec<f64> = Vec::new();
+                        let mut scratch: Vec<f64> = Vec::new();
+                        run_policy_with(pred.as_mut(), &u.demand, pricing, |t, buf| {
+                            // observe up to t, fill the reusable buffer
+                            // with the next-w prediction
                             f.observe(u.demand[t]);
-                            f.predict(w)
+                            f.predict_f64_into(w, &mut f64_buf, &mut scratch);
+                            buf.extend(f64_buf.iter().map(|y| y.round().max(0.0) as u32));
                         })
                         .unwrap()
                         .total

@@ -1,13 +1,20 @@
 //! Extension experiment (paper Sec. IX): combining multiple reserved
-//! offerings. Runs the generalized deterministic policy over a two-tier
-//! EC2-style menu (1-year light + 3-year heavy utilization, compressed)
-//! across the synthetic population, against the best *single*-offering
-//! alternatives — the question the paper leaves open.
+//! offerings through the first-class Market API. Runs the generalized
+//! deterministic menu policy over the two-term EC2 catalog market
+//! (1-year + 3-year Standard Small, compressed) across the synthetic
+//! population, against the best *single*-contract alternatives — the
+//! question the paper leaves open.
 //!
 //! Run: `cargo run --release --example multislope_offerings -- --users 150`
+//!
+//! Ad-hoc menus are a config file away: see the `scenario` subcommand and
+//! `examples/scenarios/table1_two_term.json`.
 
-use cloudreserve::algos::multislope::{Menu, MultiDeterministic};
+use cloudreserve::algos::market::MarketDeterministic;
 use cloudreserve::analysis::classify::{classify, Group};
+use cloudreserve::pricing::catalog::ec2_two_term_compressed;
+use cloudreserve::pricing::Market;
+use cloudreserve::sim::run_policy_market;
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::util::cli::Args;
 
@@ -20,32 +27,40 @@ fn main() {
         ..Default::default()
     };
     let pop = generate(&cfg);
-    let menu = Menu::ec2_two_tier_compressed();
-    let shallow_only = Menu::new(menu.p, vec![menu.offerings[0]]);
-    let deep_only = Menu::new(menu.p, vec![menu.offerings[1]]);
+    let market = ec2_two_term_compressed();
+    let shallow_only = Market::new(market.p(), vec![market.contract(0)]);
+    let deep_only = Market::new(market.p(), vec![market.contract(1)]);
 
     println!(
-        "two-tier menu: 1y-light (fee 1.00, a={:.3}, tau={}) + 3y-heavy (fee {:.2}, a={:.3}, tau={})",
-        menu.offerings[0].alpha,
-        menu.offerings[0].tau,
-        menu.offerings[1].fee,
-        menu.offerings[1].alpha,
-        menu.offerings[1].tau
+        "two-term menu: {} (fee {:.2}, a={:.3}, term={}) + {} (fee {:.2}, a={:.3}, term={})",
+        market.label(0),
+        market.contract(0).upfront,
+        market.alpha(0),
+        market.contract(0).term,
+        market.label(1),
+        market.contract(1).upfront,
+        market.alpha(1),
+        market.contract(1).term,
     );
     println!(
         "\n{:<10} {:>12} {:>12} {:>12} {:>14} {:>10}",
         "group", "menu", "1y-only", "3y-only", "menu vs best", "users"
     );
 
+    let run = |m: &Market, demand: &[u32]| -> f64 {
+        let mut policy = MarketDeterministic::new(m.clone());
+        run_policy_market(&mut policy, demand, m).expect("feasible billing").total
+    };
+
     let mut acc: Vec<(Group, f64, f64, f64)> = Vec::new();
     for u in &pop.users {
-        let denom = menu.p * u.total_demand() as f64;
+        let denom = market.p() * u.total_demand() as f64;
         if denom <= 0.0 {
             continue;
         }
-        let m = MultiDeterministic::run(menu.clone(), &u.demand).total / denom;
-        let s = MultiDeterministic::run(shallow_only.clone(), &u.demand).total / denom;
-        let d = MultiDeterministic::run(deep_only.clone(), &u.demand).total / denom;
+        let m = run(&market, &u.demand) / denom;
+        let s = run(&shallow_only, &u.demand) / denom;
+        let d = run(&deep_only, &u.demand) / denom;
         acc.push((classify(&u.summary()), m, s, d));
     }
 
@@ -76,5 +91,5 @@ fn main() {
             rows.len()
         );
     }
-    println!("\n(menu vs best = mean menu cost relative to the ex-post better single offering)");
+    println!("\n(menu vs best = mean menu cost relative to the ex-post better single contract)");
 }

@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     ];
 
     println!("\n{:<28} {:>10} {:>8} {:>10}", "policy", "cost", "#res", "vs on-dem");
-    let all_od = cloudreserve::sim::all_on_demand_cost(&demand, &pricing);
+    let all_od = cloudreserve::sim::all_on_demand_cost(&demand, pricing.p);
     for policy in policies.iter_mut() {
         let rep = run_policy(policy.as_mut(), &demand, pricing)?;
         println!(

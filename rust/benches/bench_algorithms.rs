@@ -43,7 +43,7 @@ fn main() {
             let mut acc = 0u32;
             for &d in &demand {
                 let dec = p.decide(d, &[]);
-                acc = acc.wrapping_add(dec.reserve + dec.on_demand);
+                acc = acc.wrapping_add(dec.total_reserved() + dec.on_demand);
             }
             acc
         });

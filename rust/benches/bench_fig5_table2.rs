@@ -3,6 +3,7 @@
 //! reporting both the Table II rows and the wall-time per policy.
 
 use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::pricing::Market;
 use cloudreserve::sim::fleet::{run_fleet, PolicySpec};
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::util::bench::fmt_ns;
@@ -10,7 +11,7 @@ use cloudreserve::util::bench::fmt_ns;
 fn main() {
     let cfg = SynthConfig { users: 300, slots: 20_000, seed: 2013, ..Default::default() };
     let pop = generate(&cfg);
-    let pricing = ec2_small_compressed();
+    let market = Market::single(ec2_small_compressed());
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
 
     println!(
@@ -30,7 +31,7 @@ fn main() {
     ];
     for spec in &specs {
         let t0 = std::time::Instant::now();
-        let result = run_fleet(&pop, pricing, spec, threads);
+        let result = run_fleet(&pop, &market, spec, threads);
         let dt = t0.elapsed();
         let row = result.table2_row();
         let slots_total = (cfg.users * cfg.slots) as f64;

@@ -5,6 +5,7 @@
 //! adds scan-bookkeeping work — this bench quantifies the overhead).
 
 use cloudreserve::pricing::catalog::ec2_small_compressed;
+use cloudreserve::pricing::Market;
 use cloudreserve::sim::fleet::{run_fleet, PolicySpec};
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::util::bench::fmt_ns;
@@ -12,7 +13,7 @@ use cloudreserve::util::bench::fmt_ns;
 fn main() {
     let cfg = SynthConfig { users: 200, slots: 20_000, seed: 2013, ..Default::default() };
     let pop = generate(&cfg);
-    let pricing = ec2_small_compressed();
+    let market = Market::single(ec2_small_compressed());
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let month = 8760 / 12;
 
@@ -24,7 +25,7 @@ fn main() {
             PolicySpec::Deterministic { z: None, window: 0 }
         };
         let t0 = std::time::Instant::now();
-        let base = run_fleet(&pop, pricing, &base_spec, threads);
+        let base = run_fleet(&pop, &market, &base_spec, threads);
         let base_dt = t0.elapsed();
         println!(
             "{:<16} {:>12} {:>12} {:>12}",
@@ -39,7 +40,7 @@ fn main() {
                 PolicySpec::Deterministic { z: None, window: w }
             };
             let t0 = std::time::Instant::now();
-            let res = run_fleet(&pop, pricing, &spec, threads);
+            let res = run_fleet(&pop, &market, &spec, threads);
             let dt = t0.elapsed();
             // normalize per user against the online run
             let mut sum = 0.0;

@@ -10,7 +10,7 @@
 
 use super::window::WindowScan;
 use super::{Decision, Policy, ResQueue};
-use crate::pricing::Pricing;
+use crate::pricing::{ContractId, Pricing};
 
 /// Never reserve; serve everything on demand.
 #[derive(Debug, Clone, Default)]
@@ -27,8 +27,8 @@ impl Policy for AllOnDemand {
         "All-on-demand".to_string()
     }
 
-    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision {
-        Decision { reserve: 0, on_demand: demand }
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision<'_> {
+        Decision::on_demand_only(demand)
     }
 }
 
@@ -38,11 +38,12 @@ pub struct AllReserved {
     pricing: Pricing,
     cover: ResQueue,
     t: usize,
+    out: [(ContractId, u32); 1],
 }
 
 impl AllReserved {
     pub fn new(pricing: Pricing) -> AllReserved {
-        AllReserved { pricing, cover: ResQueue::default(), t: 0 }
+        AllReserved { pricing, cover: ResQueue::default(), t: 0, out: [(0, 0)] }
     }
 }
 
@@ -51,7 +52,7 @@ impl Policy for AllReserved {
         "All-reserved".to_string()
     }
 
-    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision {
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision<'_> {
         let t = self.t;
         self.t += 1;
         let active = self.cover.active_at(t, self.pricing.tau);
@@ -59,7 +60,8 @@ impl Policy for AllReserved {
         for _ in 0..reserve {
             self.cover.push(t);
         }
-        Decision { reserve, on_demand: 0 }
+        self.out = [(0, reserve)];
+        Decision { on_demand: 0, reservations: &self.out[..usize::from(reserve > 0)] }
     }
 }
 
@@ -84,14 +86,16 @@ pub struct Separate {
     pricing: Pricing,
     levels: Vec<Level>,
     t: usize,
+    out: [(ContractId, u32); 1],
 }
 
 impl Separate {
     pub fn new(pricing: Pricing) -> Separate {
-        Separate { pricing, levels: Vec::new(), t: 0 }
+        Separate { pricing, levels: Vec::new(), t: 0, out: [(0, 0)] }
     }
 
-    fn step_level(level: &mut Level, t: usize, demand01: u32, pricing: &Pricing) -> Decision {
+    /// One virtual user's step: `(reserve, on_demand)` for its 0/1 demand.
+    fn step_level(level: &mut Level, t: usize, demand01: u32, pricing: &Pricing) -> (u32, u32) {
         let tau = pricing.tau;
         let beta = pricing.beta();
         level.scan.expire_before((t + 1).saturating_sub(tau));
@@ -109,7 +113,7 @@ impl Separate {
             reserve += 1;
         }
         let covered = level.cover.active_at(t, tau);
-        Decision { reserve, on_demand: demand01.saturating_sub(covered.min(demand01)) }
+        (reserve, demand01.saturating_sub(covered.min(demand01)))
     }
 }
 
@@ -118,14 +122,15 @@ impl Policy for Separate {
         "Separate (Bahncard ext.)".to_string()
     }
 
-    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision {
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision<'_> {
         let t = self.t;
         self.t += 1;
         // Lazily create levels up to the highest demand seen.
         while self.levels.len() < demand as usize {
             self.levels.push(Level::new());
         }
-        let mut total = Decision::default();
+        let mut reserve = 0u32;
+        let mut on_demand = 0u32;
         for (k, level) in self.levels.iter_mut().enumerate() {
             let d_k = u32::from((k as u32) < demand); // level k+1 active iff d_t >= k+1
             // Perf (PERF.md §Policy hot path): idle levels — no demand now
@@ -138,11 +143,12 @@ impl Policy for Separate {
             if d_k == 0 && level.scan.violations() == 0 {
                 continue;
             }
-            let dec = Self::step_level(level, t, d_k, &self.pricing);
-            total.reserve += dec.reserve;
-            total.on_demand += dec.on_demand;
+            let (r, od) = Self::step_level(level, t, d_k, &self.pricing);
+            reserve += r;
+            on_demand += od;
         }
-        total
+        self.out = [(0, reserve)];
+        Decision { on_demand, reservations: &self.out[..usize::from(reserve > 0)] }
     }
 }
 
@@ -152,10 +158,10 @@ mod tests {
     use crate::ledger::Ledger;
 
     fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> crate::ledger::CostReport {
-        let mut ledger = Ledger::new(pricing);
+        let mut ledger = Ledger::single(pricing);
         for &d in demands {
             let dec = policy.decide(d, &[]);
-            ledger.bill_slot(d, dec.reserve, dec.on_demand).unwrap();
+            ledger.bill(d, &dec).unwrap();
         }
         ledger.report()
     }

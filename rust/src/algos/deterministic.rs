@@ -13,9 +13,10 @@
 
 use super::window::WindowScan;
 use super::{Decision, Policy, ResQueue};
-use crate::pricing::Pricing;
+use crate::pricing::{ContractId, Pricing};
 
-/// Deterministic online reservation policy.
+/// Deterministic online reservation policy (single-contract: always
+/// reserves contract 0 of its market).
 #[derive(Debug, Clone)]
 pub struct Deterministic {
     pricing: Pricing,
@@ -33,6 +34,8 @@ pub struct Deterministic {
     t: usize,
     /// Next window slot index to insert into the scan (`t + w` ahead).
     next_scan_slot: usize,
+    /// Reusable typed-decision buffer (contract 0, count).
+    out: [(ContractId, u32); 1],
 }
 
 impl Deterministic {
@@ -64,6 +67,7 @@ impl Deterministic {
             scan_res: std::collections::VecDeque::new(),
             t: 0,
             next_scan_slot: 0,
+            out: [(0, 0)],
         }
     }
 
@@ -104,7 +108,7 @@ impl Policy for Deterministic {
         self.w
     }
 
-    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision {
+    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision<'_> {
         let t = self.t;
         self.t += 1;
         let tau = self.pricing.tau;
@@ -147,7 +151,8 @@ impl Policy for Deterministic {
         // Launch on-demand instances for the uncovered remainder (line 9).
         let covered = self.cover.active_at(t, tau);
         let on_demand = demand.saturating_sub(covered);
-        Decision { reserve, on_demand }
+        self.out = [(0, reserve)];
+        Decision { on_demand, reservations: &self.out[..usize::from(reserve > 0)] }
     }
 }
 
@@ -163,11 +168,11 @@ mod tests {
     /// Run a policy over demands, bill through the ledger, return report.
     fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> crate::ledger::CostReport {
         let w = policy.window();
-        let mut ledger = Ledger::new(pricing);
+        let mut ledger = Ledger::single(pricing);
         for t in 0..demands.len() {
             let hi = (t + 1 + w).min(demands.len());
             let dec = policy.decide(demands[t], &demands[t + 1..hi]);
-            ledger.bill_slot(demands[t], dec.reserve, dec.on_demand).unwrap();
+            ledger.bill(demands[t], &dec).unwrap();
         }
         ledger.report()
     }
@@ -239,7 +244,8 @@ mod tests {
         use crate::algos::window::NaiveScan;
         use crate::util::rng::Rng;
 
-        fn literal_a_z(demands: &[u32], pricing: &Pricing, z: f64) -> Vec<Decision> {
+        /// `(reserve, on_demand)` per slot from the literal transcription.
+        fn literal_a_z(demands: &[u32], pricing: &Pricing, z: f64) -> Vec<(u32, u32)> {
             let tau = pricing.tau;
             let p = pricing.p;
             let mut naive = NaiveScan::new(tau);
@@ -254,7 +260,7 @@ mod tests {
                     reserve += 1;
                 }
                 let active = res_times.iter().filter(|&&rt| rt + tau > t).count() as u32;
-                out.push(Decision { reserve, on_demand: d.saturating_sub(active) });
+                out.push((reserve, d.saturating_sub(active)));
             }
             out
         }
@@ -269,7 +275,11 @@ mod tests {
             let mut a = Deterministic::with_threshold(pricing, z);
             for (t, &d) in demands.iter().enumerate() {
                 let got = a.decide(d, &[]);
-                assert_eq!(got, expected[t], "case={case} t={t} tau={tau} z={z}");
+                assert_eq!(
+                    (got.total_reserved(), got.on_demand),
+                    expected[t],
+                    "case={case} t={t} tau={tau} z={z}"
+                );
             }
         }
     }
@@ -304,7 +314,7 @@ mod tests {
         for (t, &d) in demands.iter().enumerate() {
             let hi = (t + 1 + 25).min(demands.len());
             let dec = pred.decide(d, &demands[t + 1..hi]);
-            if dec.reserve > 0 && first_reserve_t.is_none() {
+            if dec.total_reserved() > 0 && first_reserve_t.is_none() {
                 first_reserve_t = Some(t);
             }
         }

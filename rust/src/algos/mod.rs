@@ -10,24 +10,48 @@
 //! | Algorithm 4 (randomized + window) | [`randomized::Randomized`] with window `w` |
 //! | All-on-demand / All-reserved / Separate (Sec. VII-B) | [`baselines`] |
 //! | offline OPT (Sec. III) | [`offline`] |
+//! | menu generalization (Sec. IX extension) | [`market`] |
 
 pub mod baselines;
 pub mod density;
 pub mod deterministic;
+pub mod market;
 pub mod offline;
 pub mod randomized;
-pub mod multislope;
 pub mod window;
 
-use crate::pricing::Pricing;
+use crate::pricing::{ContractId, Pricing};
 
-/// One slot's purchase decision: reserve `reserve` new instances now and run
-/// `on_demand` instances on demand; the rest of the demand runs on active
-/// reservations.
+/// One slot's typed purchase decision: run `on_demand` instances on demand,
+/// commit to `reservations` — `(contract id, count)` pairs from the
+/// [`Market`](crate::pricing::Market) menu — and serve the rest of the
+/// demand on active reservations.
+///
+/// The slice is **borrowed from the policy** (each policy owns a small
+/// reusable buffer), so deciding allocates nothing; copy the counts out if
+/// you need to keep them past the next `decide` call. Single-contract
+/// policies always reserve contract 0.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct Decision {
-    pub reserve: u32,
+pub struct Decision<'a> {
     pub on_demand: u32,
+    pub reservations: &'a [(ContractId, u32)],
+}
+
+impl<'a> Decision<'a> {
+    /// A pure on-demand decision (no reservations).
+    pub fn on_demand_only(n: u32) -> Decision<'static> {
+        Decision { on_demand: n, reservations: &[] }
+    }
+
+    /// Total new reservations across all contracts.
+    pub fn total_reserved(&self) -> u32 {
+        self.reservations.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// New reservations of one specific contract.
+    pub fn reserved(&self, cid: ContractId) -> u32 {
+        self.reservations.iter().filter(|&&(c, _)| c == cid).map(|&(_, n)| n).sum()
+    }
 }
 
 /// An online instance-acquisition policy. Drive it slot by slot; slots are
@@ -39,8 +63,9 @@ pub struct Decision {
 pub trait Policy: Send {
     /// Human-readable name used in reports.
     fn name(&self) -> String;
-    /// Decide purchases for the next slot given its demand.
-    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision;
+    /// Decide purchases for the next slot given its demand. The returned
+    /// [`Decision`] borrows the policy's internal reservation buffer.
+    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision<'_>;
     /// Prediction window length `w` this policy wants (0 for online).
     fn window(&self) -> usize {
         0

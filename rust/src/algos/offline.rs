@@ -8,7 +8,7 @@
 //! (`C_{A_β} ≤ (2−α)·C_OPT`), and Proposition 3, and to drive the Fig. 2
 //! empirical ratio measurements.
 
-use crate::pricing::Pricing;
+use crate::pricing::{Contract, ContractId, Market, Pricing};
 
 /// Result of an offline solve.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -16,6 +16,17 @@ pub struct OfflineSolution {
     pub cost: f64,
     /// Number of reservations made by the optimal schedule.
     pub reservations: u64,
+}
+
+/// Whether the exact DP can solve an instance: the packed state space
+/// `(D+1)^(τ−1)` fits the size envelope AND the `(τ−1)`-entry history
+/// tuple packs into a `u64` key (relevant for tiny `D` — an all-zero
+/// trace still needs one bit per entry). Mirrors both of
+/// [`optimal_for_contract`]'s guards.
+pub fn dp_tractable(d_max: u32, tau: usize) -> bool {
+    let bits = (64 - (d_max as u64).leading_zeros()).max(1) as u64;
+    ((d_max as u64 + 1) as f64).powi(tau as i32 - 1) <= 1.6e7
+        && tau.saturating_sub(1) as u64 * bits <= 64
 }
 
 /// Sentinel for empty slots in [`FlatFrontier`]. Packed states can never
@@ -112,9 +123,20 @@ impl FlatFrontier {
     }
 }
 
-/// Exact offline optimum via dynamic programming over the reservation
-/// history tuple `(r_{t−τ+2}, …, r_t)`. State space is `O((D+1)^{τ−1})`
-/// where `D = max_t d_t` — use only for small `τ` and demand.
+/// Exact offline optimum for the classic normalized single-contract
+/// pricing: the `upfront = 1`, `rate = α·p` view of
+/// [`optimal_for_contract`] (bit-identical arithmetic).
+pub fn optimal(demands: &[u32], pricing: &Pricing) -> OfflineSolution {
+    let contract =
+        Contract { upfront: 1.0, rate: pricing.alpha * pricing.p, term: pricing.tau };
+    optimal_for_contract(demands, pricing.p, &contract)
+}
+
+/// Exact offline optimum restricted to **one contract type**, via dynamic
+/// programming over the reservation history tuple `(r_{t−τ+2}, …, r_t)`
+/// with `τ = contract.term`. State space is `O((D+1)^{τ−1})` where
+/// `D = max_t d_t` — use only for small `τ` and demand (check
+/// [`dp_tractable`] first to avoid the panic).
 ///
 /// The frontier is a double-buffered [`FlatFrontier`] keyed on the packed
 /// `u64` state; successor keys are computed arithmetically (mask, shift,
@@ -124,35 +146,33 @@ impl FlatFrontier {
 ///
 /// The per-slot instance split is implied: with `a` active reservations,
 /// serving `min(d, a)` on reservations and the rest on demand is optimal
-/// because `α ≤ 1` makes discounted usage never more expensive.
-pub fn optimal(demands: &[u32], pricing: &Pricing) -> OfflineSolution {
-    let tau = pricing.tau;
+/// because `rate ≤ p` makes discounted usage never more expensive. Costs
+/// are in market currency (`upfront` per fee, `p`/`rate` per slot).
+pub fn optimal_for_contract(demands: &[u32], p: f64, contract: &Contract) -> OfflineSolution {
+    let tau = contract.term;
+    let upfront = contract.upfront;
+    let rate = contract.rate;
     let d_max = demands.iter().copied().max().unwrap_or(0);
-    // Guard rails: refuse clearly intractable instances. The flat frontier
-    // raised this envelope 3.2x over the seed HashMap path (5e6); at the
-    // bound the two buffers peak around 1.5 GB.
+    // Guard rails: refuse clearly intractable instances — [`dp_tractable`]
+    // is the single source of truth (state-count envelope + u64 key
+    // width). The flat frontier raised the envelope 3.2x over the seed
+    // HashMap path (5e6); at the bound the two buffers peak around 1.5 GB.
     let states_bound = ((d_max as u64 + 1) as f64).powi(tau as i32 - 1);
     assert!(
-        states_bound <= 1.6e7,
-        "offline DP intractable here: (D+1)^(tau-1) = {states_bound:.0} states — the curse of dimensionality (Sec. III)"
+        dp_tractable(d_max, tau),
+        "offline DP intractable here: (D+1)^(tau-1) = {states_bound:.0} states / packed key over 64 bits — the curse of dimensionality (Sec. III)"
     );
 
     // State: reservation counts of the last tau-1 slots (oldest first),
-    // bit-packed into a u64 with just enough bits per entry.
+    // bit-packed into a u64 with just enough bits per entry (the key fits:
+    // guaranteed by the dp_tractable assert above).
     let hist_len = tau - 1;
     let bits = (64 - (d_max as u64).leading_zeros()).max(1) as u64; // bits to hold 0..=d_max
-    assert!(
-        hist_len as u64 * bits <= 64,
-        "state tuple does not fit a u64 key: tau-1={hist_len} entries x {bits} bits"
-    );
     let entry_mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
     // Dropping the oldest entry keeps the low (hist_len-1)*bits bits; the
     // shift below then appends r_t as the newest entry.
     let keep_bits = hist_len.saturating_sub(1) as u64 * bits;
     let keep_mask = if keep_bits >= 64 { u64::MAX } else { (1u64 << keep_bits) - 1 };
-
-    let p = pricing.p;
-    let alpha = pricing.alpha;
 
     let mut cur = FlatFrontier::with_capacity_pow2(1 << 10);
     let mut next = FlatFrontier::with_capacity_pow2(1 << 10);
@@ -177,7 +197,8 @@ pub fn optimal(demands: &[u32], pricing: &Pricing) -> OfflineSolution {
             for r_t in 0..=needed.min(d_max) {
                 let active = active_hist + r_t;
                 let on_dem = d.saturating_sub(active);
-                let step_cost = r_t as f64 + p * on_dem as f64 + alpha * p * (d - on_dem) as f64;
+                let step_cost =
+                    r_t as f64 * upfront + p * on_dem as f64 + rate * (d - on_dem) as f64;
                 let k2 = if hist_len == 0 { 0 } else { shifted | r_t as u64 };
                 next.offer(k2, cost + step_cost, nres + r_t as u64);
             }
@@ -194,6 +215,60 @@ pub fn optimal(demands: &[u32], pricing: &Pricing) -> OfflineSolution {
     }
     let (cost, reservations) = best.expect("non-empty DP frontier");
     OfflineSolution { cost, reservations }
+}
+
+/// Best offline cost over a [`Market`] menu, restricted to committing to a
+/// **single contract type** (plus on-demand): the exact DP per contract,
+/// minimized across the menu. Exact for single-contract markets; for true
+/// multi-contract menus the unrestricted optimum could only be cheaper, so
+/// this is a *feasible offline schedule's* cost — the comparator the
+/// scenario runner reports ratios against.
+///
+/// Contracts outside the DP tractability envelope are skipped (their ids
+/// are returned in `skipped`); `best` is `None` when no contract is
+/// solvable. An empty menu yields the pure on-demand schedule.
+pub fn optimal_market(demands: &[u32], market: &Market) -> MarketOffline {
+    let d_max = demands.iter().copied().max().unwrap_or(0);
+    let mut per_contract: Vec<(ContractId, OfflineSolution)> = Vec::new();
+    let mut skipped: Vec<ContractId> = Vec::new();
+    for cid in 0..market.len() {
+        let c = market.contract(cid);
+        if dp_tractable(d_max, c.term) {
+            per_contract.push((cid, optimal_for_contract(demands, market.p(), &c)));
+        } else {
+            skipped.push(cid);
+        }
+    }
+    // When every contract on a non-empty menu is intractable there is
+    // nothing useful to report; otherwise pure on-demand is always a
+    // feasible candidate alongside the solved contracts.
+    let nothing_solved = !skipped.is_empty() && per_contract.is_empty();
+    let mut best: Option<(Option<ContractId>, OfflineSolution)> = if nothing_solved {
+        None
+    } else {
+        let od_cost: f64 = market.p() * demands.iter().map(|&d| d as u64).sum::<u64>() as f64;
+        Some((None, OfflineSolution { cost: od_cost, reservations: 0 }))
+    };
+    for &(cid, sol) in &per_contract {
+        match best {
+            Some((_, b)) if b.cost <= sol.cost => {}
+            _ => best = Some((Some(cid), sol)),
+        }
+    }
+    MarketOffline { best, per_contract, skipped }
+}
+
+/// Result of [`optimal_market`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarketOffline {
+    /// Cheapest restricted schedule: the contract it commits to (`None` =
+    /// pure on-demand) and its solution. `None` only when every contract
+    /// was skipped as intractable.
+    pub best: Option<(Option<ContractId>, OfflineSolution)>,
+    /// Exact per-contract solutions, in menu order (tractable ones only).
+    pub per_contract: Vec<(ContractId, OfflineSolution)>,
+    /// Contracts skipped because their term puts the DP out of range.
+    pub skipped: Vec<ContractId>,
 }
 
 /// Exact offline optimum for **single-instance** demand (`d_t ≤ 1`): the
@@ -422,6 +497,81 @@ mod tests {
         assert_eq!(seen, 500);
         f.clear();
         assert_eq!(f.iter().count(), 0);
+    }
+
+    #[test]
+    fn optimal_market_single_matches_classic_bitwise() {
+        let pricing = pr(0.3, 0.2, 5);
+        let demands = [1u32; 10];
+        let classic = optimal(&demands, &pricing);
+        let m = Market::single(pricing);
+        let res = optimal_market(&demands, &m);
+        let (which, sol) = res.best.unwrap();
+        // stable demand at these prices: reserving wins over pure on-demand
+        assert_eq!(which, Some(0));
+        assert_eq!(sol.cost.to_bits(), classic.cost.to_bits());
+        assert_eq!(sol.reservations, classic.reservations);
+    }
+
+    #[test]
+    fn optimal_market_picks_cheaper_contract() {
+        // short dear contract vs long cheap contract on stable demand
+        let m = Market::new(
+            0.3,
+            vec![
+                crate::pricing::Contract { upfront: 0.5, rate: 0.15, term: 4 },
+                crate::pricing::Contract { upfront: 1.0, rate: 0.03, term: 10 },
+            ],
+        );
+        assert_eq!(m.len(), 2);
+        let demands = vec![1u32; 10];
+        let res = optimal_market(&demands, &m);
+        let (which, sol) = res.best.unwrap();
+        // c1: 1.0 + 10*0.03 = 1.3; c0 needs >= 2 fees + od; od alone: 3.0
+        assert_eq!(which, Some(1));
+        assert!((sol.cost - 1.3).abs() < 1e-9, "cost {}", sol.cost);
+        assert_eq!(res.skipped.len(), 0);
+        assert_eq!(res.per_contract.len(), 2);
+    }
+
+    #[test]
+    fn optimal_market_empty_menu_is_on_demand() {
+        let m = Market::new(0.1, vec![crate::pricing::Contract { upfront: 9.0, rate: 0.05, term: 3 }]);
+        assert!(m.is_empty());
+        let demands = [2u32, 0, 1];
+        let res = optimal_market(&demands, &m);
+        let (which, sol) = res.best.unwrap();
+        assert_eq!(which, None);
+        assert!((sol.cost - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_market_skips_long_terms_even_on_zero_demand() {
+        // d_max = 0 makes the state-count bound trivially 1, but the packed
+        // key still needs one bit per history entry: term >= 66 must be
+        // reported as skipped, not panic inside the DP.
+        let m = Market::new(
+            0.1,
+            vec![crate::pricing::Contract { upfront: 1.0, rate: 0.01, term: 200 }],
+        );
+        assert!(!dp_tractable(0, 200));
+        let demands = vec![0u32; 50];
+        let res = optimal_market(&demands, &m);
+        assert_eq!(res.skipped, vec![0]);
+        assert!(res.best.is_none());
+    }
+
+    #[test]
+    fn optimal_market_skips_intractable_terms() {
+        let m = Market::new(
+            0.1,
+            vec![crate::pricing::Contract { upfront: 1.0, rate: 0.01, term: 100 }],
+        );
+        let demands = vec![5u32; 50];
+        assert!(!dp_tractable(5, 100));
+        let res = optimal_market(&demands, &m);
+        assert_eq!(res.skipped, vec![0]);
+        assert!(res.best.is_none());
     }
 
     #[test]

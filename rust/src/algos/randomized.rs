@@ -59,7 +59,7 @@ impl Policy for Randomized {
         self.inner.window()
     }
 
-    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision {
+    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision<'_> {
         self.inner.decide(demand, future)
     }
 }
@@ -71,11 +71,11 @@ mod tests {
 
     fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> f64 {
         let w = policy.window();
-        let mut ledger = Ledger::new(pricing);
+        let mut ledger = Ledger::single(pricing);
         for t in 0..demands.len() {
             let hi = (t + 1 + w).min(demands.len());
             let dec = policy.decide(demands[t], &demands[t + 1..hi]);
-            ledger.bill_slot(demands[t], dec.reserve, dec.on_demand).unwrap();
+            ledger.bill(demands[t], &dec).unwrap();
         }
         ledger.report().total
     }
@@ -111,11 +111,11 @@ mod tests {
         let pricing = Pricing::normalized(0.05, 1.0, 20);
         let demands = vec![3u32; 200];
         let mut policy = Randomized::online(pricing, 3);
-        let mut ledger = Ledger::new(pricing);
+        let mut ledger = Ledger::single(pricing);
         for &d in &demands {
             let dec = policy.decide(d, &[]);
-            assert_eq!(dec.reserve, 0);
-            ledger.bill_slot(d, dec.reserve, dec.on_demand).unwrap();
+            assert_eq!(dec.total_reserved(), 0);
+            ledger.bill(d, &dec).unwrap();
         }
         assert_eq!(ledger.report().reservations, 0);
     }

@@ -61,7 +61,7 @@ impl PolicyKind {
         UserSession {
             policy,
             forecaster,
-            ledger: Ledger::new(pricing),
+            ledger: Ledger::single(pricing),
             next_slot: 0,
             window: WindowRing::new(64),
             future_buf: Vec::new(),
@@ -177,14 +177,20 @@ impl UserSession {
             }
             (None, _) => self.future_buf.clear(),
         }
-        let dec = self.policy.decide(demand, &self.future_buf[offset.min(self.future_buf.len())..]);
+        // Typed decision: broker policies are single-contract, so the
+        // reservation total is the contract-0 count.
+        let (reserve, on_demand) = {
+            let dec =
+                self.policy.decide(demand, &self.future_buf[offset.min(self.future_buf.len())..]);
+            (dec.total_reserved(), dec.on_demand)
+        };
         self.ledger
-            .bill_slot(demand, dec.reserve, dec.on_demand)
+            .bill_slot(demand, reserve, on_demand)
             .map_err(|e| anyhow!("billing: {e}"))?;
-        let covered = demand - dec.on_demand;
+        let covered = demand - on_demand;
         self.window.push(demand as f32, covered as f32);
         self.next_slot += 1;
-        Ok((dec.reserve, dec.on_demand))
+        Ok((reserve, on_demand))
     }
 }
 

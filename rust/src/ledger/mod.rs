@@ -1,22 +1,29 @@
-//! Reservation ledger and billing engine.
+//! Reservation ledger and billing engine over a [`Market`] menu.
 //!
 //! The ledger tracks *actual* reservations (not the phantom bookkeeping the
-//! online algorithms use internally), exposes the number of reservations
-//! active at the current slot, and accumulates the exact cost decomposition
-//! from problem (1):
+//! online algorithms use internally) **per contract id**, exposes the
+//! number of reservations active at the current slot, and accumulates the
+//! exact cost decomposition generalizing problem (1):
 //!
 //! ```text
-//! C = Σ_t  o_t·p  +  r_t  +  α·p·(d_t − o_t)
+//! C = Σ_t  o_t·p  +  Σ_j r_{j,t}·upfront_j  +  Σ_j rate_j·(reserved use on j)
 //! ```
 //!
+//! Reserved usage is billed against the **cheapest applicable** active
+//! reservation first (ascending usage rate — [`Market::rate_order`]).
+//!
 //! It also verifies the feasibility constraint
-//! `o_t + Σ_{i=t−τ+1..t} r_i ≥ d_t` on every slot, so any policy bug that
-//! under-provisions is caught at billing time, and it maintains the cost
-//! identity `C = n + (1−α)·Od + α·S` (Eq. 34) used by tests.
+//! `o_t + Σ_j active_j(t) ≥ d_t` on every slot, so any policy bug that
+//! under-provisions is caught at billing time, and — for single-contract
+//! markets — it maintains the cost identity `C = n + (1−α)·Od + α·S`
+//! (Eq. 34) used by tests. [`Ledger::single`] embeds a classic [`Pricing`]
+//! via [`Market::single`]; that path is bit-identical to the v1 billing
+//! arithmetic (`upfront = 1`, `rate = α·p`).
 
 use std::collections::VecDeque;
 
-use crate::pricing::Pricing;
+use crate::algos::Decision;
+use crate::pricing::{ContractId, Market, Pricing};
 
 /// Errors surfaced by the billing engine. (Display/Error are hand-written:
 /// `thiserror` is not in the offline vendor set.)
@@ -24,6 +31,8 @@ use crate::pricing::Pricing;
 pub enum LedgerError {
     Underprovisioned { t: usize, d: u32, o: u32, active: u32 },
     OverOnDemand { t: usize, o: u32, d: u32 },
+    /// A decision referenced a contract id outside the market menu.
+    UnknownContract { t: usize, contract: ContractId },
 }
 
 impl std::fmt::Display for LedgerError {
@@ -37,24 +46,30 @@ impl std::fmt::Display for LedgerError {
                 f,
                 "slot {t}: on-demand count {o} exceeds demand {d} (wasteful decision rejected)"
             ),
+            LedgerError::UnknownContract { t, contract } => write!(
+                f,
+                "slot {t}: decision references contract {contract} outside the market menu"
+            ),
         }
     }
 }
 
 impl std::error::Error for LedgerError {}
 
-/// Itemized cost report for one simulated user / policy run.
+/// Itemized cost report for one simulated user / policy run. Costs are in
+/// market currency (for [`Ledger::single`], the normalized fee unit).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CostReport {
-    /// Total cost (normalized: reservation fee = 1).
+    /// Total cost.
     pub total: f64,
-    /// Upfront fees paid (== number of reservations, fee normalized to 1).
+    /// Upfront fees paid (for single-contract normalized markets this
+    /// equals the number of reservations).
     pub reservation_fees: f64,
     /// On-demand running costs Σ o_t p.
     pub on_demand_cost: f64,
-    /// Discounted reserved running costs Σ α p (d_t − o_t).
+    /// Discounted reserved running costs.
     pub reserved_usage_cost: f64,
-    /// Number of reservations made.
+    /// Number of reservations made (all contracts).
     pub reservations: u64,
     /// Total instance-slots served on demand.
     pub on_demand_slots: u64,
@@ -62,7 +77,7 @@ pub struct CostReport {
     pub reserved_slots: u64,
     /// Total demand instance-slots.
     pub demand_slots: u64,
-    /// Peak simultaneous active reservations.
+    /// Peak simultaneous active reservations (all contracts).
     pub peak_active: u32,
     /// Slots processed.
     pub slots: usize,
@@ -75,6 +90,7 @@ impl CostReport {
     }
 
     /// Check Eq. (34): `C = n + (1−α)·Od + α·S` (floating tolerance).
+    /// Meaningful for single-contract normalized markets.
     pub fn identity_holds(&self, pricing: &Pricing, tol: f64) -> bool {
         let s = self.all_on_demand_cost(pricing);
         let rhs = self.reservations as f64 + (1.0 - pricing.alpha) * self.on_demand_cost + pricing.alpha * s;
@@ -83,35 +99,52 @@ impl CostReport {
 }
 
 /// The reservation ledger + billing engine. Drive it slot by slot with the
-/// policy's decisions.
+/// policy's typed decisions.
 #[derive(Debug, Clone)]
 pub struct Ledger {
-    pricing: Pricing,
-    /// Expiry slot (exclusive) of each active reservation, in FIFO order —
-    /// reservations are acquired in time order so the front expires first.
-    active: VecDeque<usize>,
+    market: Market,
+    /// Expiry slot (exclusive) of each active reservation, one FIFO queue
+    /// per contract id — reservations of a contract are acquired in time
+    /// order, so each queue's front expires first.
+    active: Vec<VecDeque<usize>>,
     /// Next slot to bill (slots must be billed consecutively from 0).
     t: usize,
     report: CostReport,
 }
 
 impl Ledger {
-    pub fn new(pricing: Pricing) -> Ledger {
-        Ledger { pricing, active: VecDeque::new(), t: 0, report: CostReport::default() }
+    pub fn new(market: Market) -> Ledger {
+        let k = market.len();
+        Ledger {
+            market,
+            active: (0..k).map(|_| VecDeque::new()).collect(),
+            t: 0,
+            report: CostReport::default(),
+        }
     }
 
-    pub fn pricing(&self) -> &Pricing {
-        &self.pricing
+    /// Single-contract convenience: bill a classic [`Pricing`] through the
+    /// bit-identical [`Market::single`] embedding.
+    pub fn single(pricing: Pricing) -> Ledger {
+        Ledger::new(Market::single(pricing))
     }
 
-    /// Number of reservations that can serve demand at the *current* slot
-    /// (those reserved in `[t−τ+1, t]` — equivalently not yet expired).
+    pub fn market(&self) -> &Market {
+        &self.market
+    }
+
+    /// Number of reservations (across all contracts) that can serve demand
+    /// at the *current* slot.
     pub fn active_now(&mut self) -> u32 {
         let t = self.t;
-        while matches!(self.active.front(), Some(&e) if e <= t) {
-            self.active.pop_front();
+        let mut total = 0u32;
+        for q in self.active.iter_mut() {
+            while matches!(q.front(), Some(&e) if e <= t) {
+                q.pop_front();
+            }
+            total += q.len() as u32;
         }
-        self.active.len() as u32
+        total
     }
 
     /// Current slot index.
@@ -119,41 +152,64 @@ impl Ledger {
         self.t
     }
 
-    /// Bill one slot: `reserve_new` fresh reservations are made at slot `t`,
-    /// `on_demand` instances run on demand, and `demand − on_demand`
-    /// instances run on active reservations. Advances the clock.
-    pub fn bill_slot(
-        &mut self,
-        demand: u32,
-        reserve_new: u32,
-        on_demand: u32,
-    ) -> Result<(), LedgerError> {
+    /// Bill one slot with a typed decision: register the decision's new
+    /// reservations at slot `t`, run `decision.on_demand` instances on
+    /// demand, and serve `demand − on_demand` instances on active
+    /// reservations, cheapest usage rate first. Advances the clock.
+    pub fn bill(&mut self, demand: u32, decision: &Decision<'_>) -> Result<(), LedgerError> {
         let t = self.t;
+        let on_demand = decision.on_demand;
         if on_demand > demand {
             return Err(LedgerError::OverOnDemand { t, o: on_demand, d: demand });
         }
-        // Register new reservations: active for slots [t, t+tau-1].
-        for _ in 0..reserve_new {
-            self.active.push_back(t + self.pricing.tau);
+        // Validate the whole decision before mutating anything, so a
+        // recoverable error leaves no unpaid phantom reservations behind.
+        for &(cid, _) in decision.reservations {
+            if cid >= self.market.len() {
+                return Err(LedgerError::UnknownContract { t, contract: cid });
+            }
         }
-        let active = self.active_now();
+        // Feasibility: new reservations (active from t, term >= 1) plus
+        // surviving old ones must cover the non-on-demand remainder.
+        let active = self.active_now() + decision.total_reserved();
         let reserved_use = demand - on_demand;
         if reserved_use > active {
             return Err(LedgerError::Underprovisioned { t, d: demand, o: on_demand, active });
         }
+        // Register new reservations: contract j active for [t, t+term_j-1].
+        let mut fees = 0.0f64;
+        let mut new_count = 0u64;
+        for &(cid, n) in decision.reservations {
+            let c = self.market.contract(cid);
+            for _ in 0..n {
+                self.active[cid].push_back(t + c.term);
+            }
+            fees += n as f64 * c.upfront;
+            new_count += n as u64;
+        }
 
-        let p = self.pricing.p;
-        let alpha = self.pricing.alpha;
-        let fees = reserve_new as f64;
+        let p = self.market.p();
         let od = on_demand as f64 * p;
-        let ru = alpha * p * reserved_use as f64;
+        // Serve reserved usage against the cheapest applicable contract
+        // first (ascending usage rate).
+        let mut ru = 0.0f64;
+        let mut rem = reserved_use;
+        for &cid in self.market.rate_order() {
+            if rem == 0 {
+                break;
+            }
+            let avail = self.active[cid].len() as u32;
+            let take = rem.min(avail);
+            ru += self.market.contract(cid).rate * take as f64;
+            rem -= take;
+        }
 
         let r = &mut self.report;
         r.reservation_fees += fees;
         r.on_demand_cost += od;
         r.reserved_usage_cost += ru;
         r.total += fees + od + ru;
-        r.reservations += reserve_new as u64;
+        r.reservations += new_count;
         r.on_demand_slots += on_demand as u64;
         r.reserved_slots += reserved_use as u64;
         r.demand_slots += demand as u64;
@@ -162,6 +218,22 @@ impl Ledger {
 
         self.t += 1;
         Ok(())
+    }
+
+    /// Single-contract shorthand: `reserve_new` reservations of contract 0
+    /// plus `on_demand` on-demand instances. The low-level entry point for
+    /// callers still speaking the v1 vocabulary; contract 0 is the whole
+    /// menu of a [`Ledger::single`].
+    pub fn bill_slot(
+        &mut self,
+        demand: u32,
+        reserve_new: u32,
+        on_demand: u32,
+    ) -> Result<(), LedgerError> {
+        let res = [(0usize, reserve_new)];
+        let decision =
+            Decision { on_demand, reservations: &res[..usize::from(reserve_new > 0)] };
+        self.bill(demand, &decision)
     }
 
     /// Final report.
@@ -173,6 +245,7 @@ impl Ledger {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pricing::Contract;
 
     fn pricing() -> Pricing {
         Pricing::normalized(0.1, 0.5, 3)
@@ -180,7 +253,7 @@ mod tests {
 
     #[test]
     fn bills_on_demand_only() {
-        let mut l = Ledger::new(pricing());
+        let mut l = Ledger::single(pricing());
         for _ in 0..10 {
             l.bill_slot(2, 0, 2).unwrap();
         }
@@ -193,7 +266,7 @@ mod tests {
 
     #[test]
     fn reservation_expires_after_tau() {
-        let mut l = Ledger::new(pricing());
+        let mut l = Ledger::single(pricing());
         l.bill_slot(1, 1, 0).unwrap(); // reserve at t=0, covers t=0,1,2
         assert_eq!(l.active_now(), 1);
         l.bill_slot(1, 0, 0).unwrap(); // t=1 reserved
@@ -207,7 +280,7 @@ mod tests {
     #[test]
     fn cost_decomposition_example() {
         // reserve 1 at t=0, serve d=1 for 3 slots reserved, then 1 on demand.
-        let mut l = Ledger::new(pricing());
+        let mut l = Ledger::single(pricing());
         l.bill_slot(1, 1, 0).unwrap();
         l.bill_slot(1, 0, 0).unwrap();
         l.bill_slot(1, 0, 0).unwrap();
@@ -220,14 +293,14 @@ mod tests {
 
     #[test]
     fn rejects_overprovisioned_on_demand() {
-        let mut l = Ledger::new(pricing());
+        let mut l = Ledger::single(pricing());
         let err = l.bill_slot(1, 0, 2).unwrap_err();
         assert!(matches!(err, LedgerError::OverOnDemand { .. }));
     }
 
     #[test]
     fn multi_reservation_overlap() {
-        let mut l = Ledger::new(pricing());
+        let mut l = Ledger::single(pricing());
         l.bill_slot(1, 1, 0).unwrap(); // res A t=0..2
         l.bill_slot(3, 2, 0).unwrap(); // res B,C t=1..3, active=3
         assert_eq!(l.active_now(), 3);
@@ -243,7 +316,7 @@ mod tests {
 
     #[test]
     fn zero_demand_slots_are_free_without_actions() {
-        let mut l = Ledger::new(pricing());
+        let mut l = Ledger::single(pricing());
         for _ in 0..5 {
             l.bill_slot(0, 0, 0).unwrap();
         }
@@ -253,7 +326,7 @@ mod tests {
     #[test]
     fn identity_holds_on_mixed_run() {
         let pr = Pricing::normalized(0.07, 0.3, 4);
-        let mut l = Ledger::new(pr);
+        let mut l = Ledger::single(pr);
         let demands = [0u32, 2, 5, 1, 0, 7, 3, 3, 2, 1, 4, 0];
         let mut rng = crate::util::rng::Rng::new(5);
         for &d in &demands {
@@ -266,5 +339,95 @@ mod tests {
             l.bill_slot(d, rnew, od).unwrap();
         }
         assert!(l.report().identity_holds(&pr, 1e-9));
+    }
+
+    fn two_term_market() -> Market {
+        // dear-rate short contract + cheap-rate long contract; both survive
+        // dominance pruning ((p - rate) * term > upfront on each).
+        Market::new(
+            0.1,
+            vec![
+                Contract { upfront: 0.2, rate: 0.03, term: 4 },
+                Contract { upfront: 0.8, rate: 0.01, term: 10 },
+            ],
+        )
+    }
+
+    #[test]
+    fn multi_contract_bills_cheapest_rate_first() {
+        let m = two_term_market();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.rate_order(), &[1, 0]);
+        let mut l = Ledger::new(m);
+        // one reservation of each contract, demand 1: usage must be billed
+        // at the cheap 0.01 rate, not 0.03.
+        let res = [(0usize, 1u32), (1usize, 1u32)];
+        l.bill(1, &Decision { on_demand: 0, reservations: &res }).unwrap();
+        let r = l.report();
+        assert!((r.reservation_fees - 1.0).abs() < 1e-12);
+        assert!((r.reserved_usage_cost - 0.01).abs() < 1e-12, "{r:?}");
+        // demand 2: both reservations used: 0.01 + 0.03 more
+        l.bill(2, &Decision { on_demand: 0, reservations: &[] }).unwrap();
+        assert!((l.report().reserved_usage_cost - (0.01 + 0.04)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_contract_per_term_expiry() {
+        let mut l = Ledger::new(two_term_market());
+        let res = [(0usize, 1u32), (1usize, 1u32)];
+        l.bill(2, &Decision { on_demand: 0, reservations: &res }).unwrap(); // t=0
+        for _ in 1..4 {
+            l.bill(2, &Decision { on_demand: 0, reservations: &[] }).unwrap();
+        }
+        // t=4: the term-4 contract expired, only the term-10 one remains
+        assert_eq!(l.active_now(), 1);
+        let err = l.bill(2, &Decision { on_demand: 0, reservations: &[] }).unwrap_err();
+        assert!(matches!(err, LedgerError::Underprovisioned { t: 4, active: 1, .. }));
+    }
+
+    #[test]
+    fn unknown_contract_is_rejected_without_side_effects() {
+        let mut l = Ledger::new(two_term_market());
+        // valid entry listed first must NOT register before the bad id fails
+        let res = [(0usize, 2u32), (7usize, 1u32)];
+        let err = l.bill(2, &Decision { on_demand: 0, reservations: &res }).unwrap_err();
+        assert!(matches!(err, LedgerError::UnknownContract { t: 0, contract: 7 }));
+        assert_eq!(l.active_now(), 0, "no phantom reservations after a rejected decision");
+        assert_eq!(l.report(), CostReport::default());
+        // the slot can be re-billed cleanly with a corrected decision
+        let fixed = [(0usize, 2u32)];
+        l.bill(2, &Decision { on_demand: 0, reservations: &fixed }).unwrap();
+        assert_eq!(l.report().reservations, 2);
+        assert!((l.report().reservation_fees - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn underprovisioned_is_rejected_without_side_effects() {
+        let mut l = Ledger::new(two_term_market());
+        // 1 new reservation cannot cover reserved_use = 2
+        let res = [(0usize, 1u32)];
+        let err = l.bill(2, &Decision { on_demand: 0, reservations: &res }).unwrap_err();
+        assert!(matches!(err, LedgerError::Underprovisioned { t: 0, active: 1, .. }));
+        assert_eq!(l.active_now(), 0, "no phantom reservations after a rejected decision");
+        assert_eq!(l.report(), CostReport::default());
+        // corrected decision re-bills the same slot cleanly
+        l.bill(2, &Decision { on_demand: 1, reservations: &res }).unwrap();
+        assert_eq!(l.report().reservations, 1);
+    }
+
+    #[test]
+    fn bill_slot_matches_typed_bill_on_single_market() {
+        let pr = Pricing::normalized(0.07, 0.3, 4);
+        let mut a = Ledger::single(pr);
+        let mut b = Ledger::single(pr);
+        let steps: [(u32, u32, u32); 5] = [(2, 1, 1), (3, 0, 1), (1, 0, 0), (0, 0, 0), (2, 1, 1)];
+        for &(d, r, od) in &steps {
+            a.bill_slot(d, r, od).unwrap();
+            let res = [(0usize, r)];
+            b.bill(d, &Decision { on_demand: od, reservations: &res[..usize::from(r > 0)] })
+                .unwrap();
+        }
+        assert_eq!(a.report().total.to_bits(), b.report().total.to_bits());
+        assert_eq!(a.report(), b.report());
     }
 }

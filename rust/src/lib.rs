@@ -37,4 +37,4 @@ pub mod util;
 
 pub use algos::{Decision, Policy};
 pub use ledger::{CostReport, Ledger};
-pub use pricing::Pricing;
+pub use pricing::{Contract, ContractId, Market, Pricing};

@@ -10,6 +10,9 @@
 //!                     periodic PJRT analytics ticks (the L3 service demo).
 //! * `offline`       — exact offline OPT (small instances) for a demand
 //!                     sequence given on the command line.
+//! * `scenario`      — run a declarative JSON scenario (market menu +
+//!                     trace source + policy set) through the engine and
+//!                     emit a comparable normalized-cost report.
 //! * `bench`         — measure the batched fleet engine (suite throughput,
 //!                     offline-DP solve times, per-policy decide latency)
 //!                     and write the tracked `BENCH.json` perf baseline.
@@ -19,8 +22,9 @@ use cloudreserve::analysis::classify::{classify_population, group_counts};
 use cloudreserve::analysis::report::{render_cdf_table, render_fig4_scatter, render_table2, CostSeries};
 use cloudreserve::coordinator::{AnalyticsEngine, Broker, BrokerConfig, DemandEvent, PolicyKind};
 use cloudreserve::pricing::catalog::{ec2_small_compressed, render_table1};
-use cloudreserve::pricing::Pricing;
+use cloudreserve::pricing::{Market, Pricing};
 use cloudreserve::sim::fleet::run_benchmark_suite;
+use cloudreserve::sim::scenario::{self, ScenarioSpec};
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::trace::{io as trace_io, Population};
 use cloudreserve::util::cli::Args;
@@ -34,16 +38,18 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("offline") => cmd_offline(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline|bench> [--options]\n\
+                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline|scenario|bench> [--options]\n\
                  \n\
                  gen-traces --users N --slots N --seed S --out FILE [--csv] [--plot-user U]\n\
                  classify   [--traces FILE | --users N --slots N --seed S]\n\
                  simulate   [--traces FILE | --users N --slots N] --seed S --threads N [--csv-out FILE]\n\
                  serve      --users N --slots N --shards N --tick N [--artifacts DIR]\n\
                  offline    --tau N --p F --alpha F d1 d2 d3 ...\n\
+                 scenario   --spec FILE [--threads N] [--json-out FILE]\n\
                  bench      [--users N --slots N --seed S --threads N --out FILE] [--quick] [--skip-reference]"
             );
             std::process::exit(2);
@@ -143,7 +149,7 @@ fn cmd_classify(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let pop = load_or_generate(args)?;
-    let pricing = ec2_small_compressed();
+    let market = Market::single(ec2_small_compressed());
     let threads = args.usize_or(
         "threads",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
@@ -151,7 +157,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 1);
     eprintln!("running the Sec. VII suite over {} users ({} threads)...", pop.len(), threads);
     let t0 = std::time::Instant::now();
-    let results = run_benchmark_suite(&pop, pricing, seed, threads);
+    let results = run_benchmark_suite(&pop, &market, seed, threads);
     eprintln!("suite done in {:.1}s", t0.elapsed().as_secs_f64());
 
     let rows: Vec<(String, [f64; 4])> =
@@ -263,7 +269,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     eprintln!("bench: generating {users} users x {slots} slots (seed {seed})...");
     let pop = generate(&SynthConfig { users, slots, seed, ..Default::default() });
     let flat = FlatPopulation::from(&pop);
-    let pricing = ec2_small_compressed();
+    let market = Market::single(ec2_small_compressed());
     let user_slots = flat.total_slots() as f64;
     let specs = suite_specs(policy_seed);
 
@@ -274,7 +280,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let mut engine_total_s = 0.0f64;
     for spec in &specs {
         let t0 = Instant::now();
-        let res = run_fleet_flat(&flat, pricing, spec, threads);
+        let res = run_fleet_flat(&flat, &market, spec, threads);
         let dt = t0.elapsed().as_secs_f64();
         engine_total_s += dt;
         println!(
@@ -301,7 +307,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         let mut identical = true;
         for (spec, engine_res) in specs.iter().zip(&engine_results) {
             let t0 = Instant::now();
-            let res = run_fleet_reference(&pop, pricing, spec, threads);
+            let res = run_fleet_reference(&pop, &market, spec, threads);
             let dt = t0.elapsed().as_secs_f64();
             ref_total_s += dt;
             println!(
@@ -391,11 +397,11 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let mut decide_rows = Vec::new();
     for spec in &specs {
         let r = bencher.run(&format!("decide/{}", spec.name()), || {
-            let mut p = FleetPolicy::build(spec, pricing, 1);
+            let mut p = FleetPolicy::build(spec, &market, 1);
             let mut acc = 0u32;
             for &d in &curve {
                 let dec = p.decide(d, &[]);
-                acc = acc.wrapping_add(dec.reserve ^ dec.on_demand);
+                acc = acc.wrapping_add(dec.total_reserved() ^ dec.on_demand);
             }
             acc
         });
@@ -453,6 +459,35 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     ]);
     std::fs::write(&out, doc.dump_pretty())?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// `scenario`: load a declarative JSON spec (market menu, trace source,
+/// policy set — see `sim::scenario` for the schema), run it through the
+/// batched engine, print the normalized-cost report, and optionally write
+/// the machine-readable `cloudreserve-scenario/v1` JSON.
+fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("scenario requires --spec FILE (a JSON scenario spec)"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading spec {path}: {e}"))?;
+    let doc = cloudreserve::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing spec {path}: {e}"))?;
+    let spec = ScenarioSpec::from_json(&doc)?;
+    if let Some(d) = &spec.description {
+        eprintln!("{}: {d}", spec.name);
+    }
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+    let report = scenario::run(&spec, threads)?;
+    print!("{}", report.render());
+    if let Some(out) = args.get("json-out") {
+        std::fs::write(out, report.to_json().dump_pretty())?;
+        eprintln!("wrote {out}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,415 @@
+//! The v2 contract menu: a [`Market`] of typed [`Contract`]s.
+//!
+//! The paper's Table I catalogs many concurrent reserved offerings
+//! (light/medium/heavy utilization, 1-year and 3-year terms), and its
+//! extension discussion (Sec. IX) generalizes the online algorithms beyond
+//! a single reservation option. The v1 API reduced the whole market to one
+//! [`Pricing`] triple; a [`Market`] instead carries a *menu*:
+//!
+//! * a market-wide on-demand rate `p` (per slot, in market currency),
+//! * a validated, **term-sorted** list of [`Contract`]s — each an upfront
+//!   fee, a discounted usage rate, and a term length in slots,
+//! * per-contract derived figures: the discount factor `α_j = rate_j / p`
+//!   and the break-even spend `β_j = upfront_j / (1 − α_j)` (the Eq. 10
+//!   generalization — the on-demand spend within one term at which
+//!   committing to contract `j` pays off),
+//! * cross-contract **dominance pruning**: contracts that can never be the
+//!   cheapest way to serve any usage pattern are dropped at construction
+//!   (see [`Market::new`] for the exact rules).
+//!
+//! Currency: nothing requires the upfront fee to be 1. [`Market::single`]
+//! embeds a normalized [`Pricing`] as the one-contract menu with
+//! `upfront = 1` and reproduces its arithmetic **bit-identically** — the
+//! fast path the batched engine takes for single-contract markets.
+
+use super::Pricing;
+
+/// Identifies a contract within a [`Market`]: the index into the sorted,
+/// pruned menu. Stable for the lifetime of the `Market` value.
+pub type ContractId = usize;
+
+/// One reservation contract: pay `upfront` once, then run instances at the
+/// discounted `rate` per slot for `term` slots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Contract {
+    /// One-time reservation fee, in market currency.
+    pub upfront: f64,
+    /// Discounted usage rate per slot while the reservation is active.
+    pub rate: f64,
+    /// Reservation term in billing slots.
+    pub term: usize,
+}
+
+impl Contract {
+    /// Discount factor relative to an on-demand rate `p` (`α` in the paper).
+    pub fn alpha_at(&self, p: f64) -> f64 {
+        self.rate / p
+    }
+
+    /// Break-even on-demand spend within one term at rate `p`: the Eq. 10
+    /// generalization `β = upfront / (1 − α)`. `+inf` when the contract
+    /// carries no effective discount (`rate ≥ p`).
+    pub fn beta_at(&self, p: f64) -> f64 {
+        let alpha = self.alpha_at(p);
+        if alpha >= 1.0 {
+            f64::INFINITY
+        } else {
+            self.upfront / (1.0 - alpha)
+        }
+    }
+
+    /// Steady-state cost per slot at full utilization: the fee amortized
+    /// over the term plus the discounted rate. The menu policies use this
+    /// to rank contracts that trigger simultaneously.
+    pub fn steady_cost(&self) -> f64 {
+        self.upfront / self.term as f64 + self.rate
+    }
+}
+
+/// A validated menu of reservation contracts sharing one on-demand rate.
+///
+/// Construction sorts contracts by ascending term (ties: ascending upfront,
+/// then rate) and applies dominance pruning; [`ContractId`]s index the
+/// *final* menu. An empty menu (everything pruned) is valid and means
+/// "reserving never helps" — policies degrade to all-on-demand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Market {
+    p: f64,
+    contracts: Vec<Contract>,
+    labels: Vec<String>,
+    /// `α_j` per contract. For [`Market::single`] this is the original
+    /// `Pricing::alpha` verbatim (not recomputed), keeping the fast path
+    /// bit-identical.
+    alphas: Vec<f64>,
+    /// Break-even spend `β_j` per contract (same caveat as `alphas`).
+    betas: Vec<f64>,
+    /// Contract ids sorted by ascending usage rate — the billing order
+    /// (cheapest active reservation serves demand first).
+    rate_order: Vec<ContractId>,
+    /// Contract with the lowest steady-state cost per slot, if any.
+    steady_best: Option<ContractId>,
+}
+
+impl Market {
+    /// Build a menu with auto-generated labels (`c0`, `c1`, … in input
+    /// order). See [`Market::with_labels`] for the validation rules.
+    pub fn new(p: f64, contracts: Vec<Contract>) -> Market {
+        let entries = contracts
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| (format!("c{i}"), c))
+            .collect();
+        Market::with_labels(p, entries)
+    }
+
+    /// Build a labelled menu. Panics (like [`Pricing::normalized`]) unless
+    /// `p > 0` and every contract has `upfront > 0`, `0 ≤ rate ≤ p`, and
+    /// `term ≥ 1`.
+    ///
+    /// Dominance pruning drops a contract `B` when it can never be the
+    /// strictly cheapest option:
+    /// * **on-demand dominance** — `(p − rate_B)·term_B ≤ upfront_B`: even
+    ///   full utilization over the whole term never beats paying on demand;
+    /// * **pairwise dominance** — some `A` has `term_A ≥ term_B`,
+    ///   `upfront_A ≤ upfront_B`, `rate_A ≤ rate_B` (strictly better in at
+    ///   least one, or an exact duplicate appearing earlier in the sorted
+    ///   order): `A` covers every usage `B` could, no costlier.
+    ///
+    /// Both rules preserve the optimal cost of serving any fixed usage
+    /// horizon (`min_horizon_cost`) — property-tested in
+    /// `rust/tests/market_props.rs`.
+    pub fn with_labels(p: f64, entries: Vec<(String, Contract)>) -> Market {
+        assert!(p > 0.0, "on-demand rate must be positive");
+        for (label, c) in &entries {
+            assert!(c.upfront > 0.0, "{label}: upfront fee must be positive");
+            assert!(c.rate >= 0.0, "{label}: discounted rate must be non-negative");
+            assert!(c.rate <= p, "{label}: discounted rate must not exceed the on-demand rate");
+            assert!(c.term >= 1, "{label}: term must be at least one slot");
+        }
+        let mut entries = entries;
+        entries.sort_by(|(_, a), (_, b)| {
+            a.term
+                .cmp(&b.term)
+                .then(a.upfront.total_cmp(&b.upfront))
+                .then(a.rate.total_cmp(&b.rate))
+        });
+        let kept: Vec<(String, Contract)> = entries
+            .iter()
+            .enumerate()
+            .filter(|(i, (_, c))| !Market::dominated(p, &entries, *i, c))
+            .map(|(_, e)| e.clone())
+            .collect();
+        let (labels, contracts): (Vec<String>, Vec<Contract>) = kept.into_iter().unzip();
+        let alphas: Vec<f64> = contracts.iter().map(|c| c.alpha_at(p)).collect();
+        let betas: Vec<f64> = contracts.iter().map(|c| c.beta_at(p)).collect();
+        Market::assemble(p, contracts, labels, alphas, betas)
+    }
+
+    /// Validated + sorted but **unpruned** menu — for analysis and the
+    /// pruning-invariance property tests. Production callers want
+    /// [`Market::new`].
+    pub fn new_unpruned(p: f64, contracts: Vec<Contract>) -> Market {
+        assert!(p > 0.0, "on-demand rate must be positive");
+        for c in &contracts {
+            assert!(c.upfront > 0.0 && c.rate >= 0.0 && c.rate <= p && c.term >= 1);
+        }
+        let mut contracts = contracts;
+        contracts.sort_by(|a, b| {
+            a.term
+                .cmp(&b.term)
+                .then(a.upfront.total_cmp(&b.upfront))
+                .then(a.rate.total_cmp(&b.rate))
+        });
+        let labels = (0..contracts.len()).map(|i| format!("c{i}")).collect();
+        let alphas: Vec<f64> = contracts.iter().map(|c| c.alpha_at(p)).collect();
+        let betas: Vec<f64> = contracts.iter().map(|c| c.beta_at(p)).collect();
+        Market::assemble(p, contracts, labels, alphas, betas)
+    }
+
+    /// Embed a classic normalized [`Pricing`] as a one-contract market:
+    /// `upfront = 1`, `rate = α·p`, `term = τ`. No pruning is applied (an
+    /// `α = 1` pricing stays representable), and the stored `α`/`β` are the
+    /// `Pricing` values verbatim, so every derived quantity — and therefore
+    /// the whole single-contract policy/billing path — is bit-identical to
+    /// the v1 arithmetic.
+    pub fn single(pricing: Pricing) -> Market {
+        let c = Contract { upfront: 1.0, rate: pricing.alpha * pricing.p, term: pricing.tau };
+        Market::assemble(
+            pricing.p,
+            vec![c],
+            vec!["reserved".to_string()],
+            vec![pricing.alpha],
+            vec![pricing.beta()],
+        )
+    }
+
+    fn assemble(
+        p: f64,
+        contracts: Vec<Contract>,
+        labels: Vec<String>,
+        alphas: Vec<f64>,
+        betas: Vec<f64>,
+    ) -> Market {
+        let mut rate_order: Vec<ContractId> = (0..contracts.len()).collect();
+        rate_order.sort_by(|&a, &b| contracts[a].rate.total_cmp(&contracts[b].rate).then(a.cmp(&b)));
+        let steady_best = (0..contracts.len())
+            .min_by(|&a, &b| contracts[a].steady_cost().total_cmp(&contracts[b].steady_cost()).then(a.cmp(&b)));
+        Market { p, contracts, labels, alphas, betas, rate_order, steady_best }
+    }
+
+    fn dominated(p: f64, entries: &[(String, Contract)], i: usize, c: &Contract) -> bool {
+        // on-demand dominance (equality keeps the tie on the on-demand side)
+        if (p - c.rate) * c.term as f64 <= c.upfront {
+            return true;
+        }
+        entries.iter().enumerate().any(|(j, (_, o))| {
+            if j == i {
+                return false;
+            }
+            let weakly = o.term >= c.term && o.upfront <= c.upfront && o.rate <= c.rate;
+            let strictly = o.term > c.term || o.upfront < c.upfront || o.rate < c.rate;
+            // exact duplicates: keep the first in sorted order
+            weakly && (strictly || j < i)
+        })
+    }
+
+    /// Market-wide on-demand rate per slot.
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// Number of contracts on the (pruned) menu.
+    pub fn len(&self) -> usize {
+        self.contracts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.contracts.is_empty()
+    }
+
+    /// One contract on the menu: the batched engine routes these through
+    /// the classic single-contract policies (the bit-identical fast path).
+    pub fn is_single(&self) -> bool {
+        self.contracts.len() == 1
+    }
+
+    pub fn contract(&self, cid: ContractId) -> Contract {
+        self.contracts[cid]
+    }
+
+    pub fn contracts(&self) -> &[Contract] {
+        &self.contracts
+    }
+
+    pub fn label(&self, cid: ContractId) -> &str {
+        &self.labels[cid]
+    }
+
+    /// Discount factor `α_j` of contract `cid`.
+    pub fn alpha(&self, cid: ContractId) -> f64 {
+        self.alphas[cid]
+    }
+
+    /// Break-even spend `β_j` of contract `cid`.
+    pub fn beta(&self, cid: ContractId) -> f64 {
+        self.betas[cid]
+    }
+
+    /// Largest discount factor on the menu (0 when empty). The generalized
+    /// deterministic policy's empirical comparison bound is `2 − α_max`.
+    pub fn alpha_max(&self) -> f64 {
+        self.alphas.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Contract ids in ascending usage-rate order — the order the ledger
+    /// bills reserved usage in (cheapest applicable reservation first).
+    pub fn rate_order(&self) -> &[ContractId] {
+        &self.rate_order
+    }
+
+    /// The contract with the lowest full-utilization cost per slot.
+    pub fn steady_best(&self) -> Option<ContractId> {
+        self.steady_best
+    }
+
+    /// The classic normalized pricing view of contract `cid`: on-demand
+    /// rate and term renormalized to that contract's fee. For
+    /// [`Market::single`] this round-trips the original `Pricing` exactly
+    /// (`p / 1.0 == p`, stored `α`, same `τ`).
+    pub fn contract_pricing(&self, cid: ContractId) -> Pricing {
+        let c = self.contracts[cid];
+        Pricing { p: self.p / c.upfront, alpha: self.alphas[cid], tau: c.term }
+    }
+
+    /// Cheapest way to run one instance for `h` consecutive slots starting
+    /// a fresh commitment: on demand, or any single contract whose term
+    /// covers `h`. The invariant dominance pruning must preserve.
+    pub fn min_horizon_cost(&self, h: u64) -> f64 {
+        let mut best = self.p * h as f64;
+        for c in &self.contracts {
+            if c.term as u64 >= h {
+                best = best.min(c.upfront + c.rate * h as f64);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_round_trips_pricing_bitwise() {
+        let pr = Pricing::normalized(0.08 / 69.0, 0.4875, 8760);
+        let m = Market::single(pr);
+        assert!(m.is_single());
+        let back = m.contract_pricing(0);
+        assert_eq!(back.p.to_bits(), pr.p.to_bits());
+        assert_eq!(back.alpha.to_bits(), pr.alpha.to_bits());
+        assert_eq!(back.tau, pr.tau);
+        assert_eq!(m.beta(0).to_bits(), pr.beta().to_bits());
+        assert_eq!(m.contract(0).rate.to_bits(), (pr.alpha * pr.p).to_bits());
+    }
+
+    #[test]
+    fn single_keeps_alpha_one_contract() {
+        // alpha = 1 would be pruned by Market::new (never beneficial), but
+        // the single embedding must keep it representable.
+        let pr = Pricing::normalized(0.1, 1.0, 10);
+        let m = Market::single(pr);
+        assert_eq!(m.len(), 1);
+        assert!(m.beta(0).is_infinite());
+    }
+
+    #[test]
+    fn sorts_by_term_and_prunes_on_demand_dominated() {
+        let m = Market::new(
+            0.1,
+            vec![
+                Contract { upfront: 2.0, rate: 0.05, term: 50 },
+                Contract { upfront: 1.0, rate: 0.05, term: 10 },
+                // never beats on-demand: (0.1 - 0.09) * 20 = 0.2 < 5
+                Contract { upfront: 5.0, rate: 0.09, term: 20 },
+            ],
+        );
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.contract(0).term, 10);
+        assert_eq!(m.contract(1).term, 50);
+    }
+
+    #[test]
+    fn prunes_pairwise_dominated() {
+        let m = Market::new(
+            0.1,
+            vec![
+                Contract { upfront: 1.0, rate: 0.02, term: 50 },
+                // same upfront, worse rate, shorter term -> dominated
+                Contract { upfront: 1.0, rate: 0.03, term: 40 },
+            ],
+        );
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.contract(0).term, 50);
+    }
+
+    #[test]
+    fn keeps_one_of_exact_duplicates() {
+        let c = Contract { upfront: 1.0, rate: 0.02, term: 50 };
+        let m = Market::new(0.1, vec![c, c]);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn everything_pruned_is_a_valid_empty_menu() {
+        let m = Market::new(0.1, vec![Contract { upfront: 10.0, rate: 0.05, term: 3 }]);
+        assert!(m.is_empty());
+        assert!(!m.is_single());
+        assert_eq!(m.alpha_max(), 0.0);
+        assert_eq!(m.steady_best(), None);
+        // min cost degrades to pure on-demand
+        assert!((m.min_horizon_cost(7) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derived_figures_match_definitions() {
+        let m = Market::new(
+            0.08,
+            vec![
+                Contract { upfront: 0.2, rate: 0.039, term: 6 },
+                Contract { upfront: 0.45, rate: 0.031, term: 18 },
+            ],
+        );
+        assert_eq!(m.len(), 2);
+        assert!((m.alpha(0) - 0.4875).abs() < 1e-12);
+        assert!((m.alpha(1) - 0.3875).abs() < 1e-12);
+        assert!((m.beta(0) - 0.2 / (1.0 - 0.4875)).abs() < 1e-12);
+        assert!((m.beta(1) - 0.45 / (1.0 - 0.3875)).abs() < 1e-12);
+        assert!((m.alpha_max() - 0.4875).abs() < 1e-12);
+        // c1 is cheaper both in rate and steady-state
+        assert_eq!(m.rate_order(), &[1, 0]);
+        assert_eq!(m.steady_best(), Some(1));
+    }
+
+    #[test]
+    fn min_horizon_cost_picks_cheapest_applicable() {
+        let m = Market::new(
+            0.1,
+            vec![
+                Contract { upfront: 0.3, rate: 0.02, term: 5 },
+                Contract { upfront: 0.8, rate: 0.01, term: 20 },
+            ],
+        );
+        // h=1: on demand (0.1) beats 0.32 and 0.81
+        assert!((m.min_horizon_cost(1) - 0.1).abs() < 1e-12);
+        // h=5: short contract 0.3 + 0.1 = 0.4 < 0.5 on demand
+        assert!((m.min_horizon_cost(5) - 0.4).abs() < 1e-12);
+        // h=20: only the long contract applies: 0.8 + 0.2 = 1.0 < 2.0
+        assert!((m.min_horizon_cost(20) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_rate_above_on_demand() {
+        Market::new(0.05, vec![Contract { upfront: 1.0, rate: 0.06, term: 10 }]);
+    }
+}

@@ -1,16 +1,32 @@
-//! Instance pricing: the paper's normalized model (Sec. II-A) and a catalog
-//! of real offerings (Table I).
+//! Instance pricing, v2: the paper's normalized single-contract model
+//! (Sec. II-A), a catalog of real offerings (Table I), and the [`market`]
+//! menu API the rest of the stack is built on.
 //!
-//! A pricing option is reduced to three parameters:
-//! * `p`     — on-demand rate per billing slot, **normalized to a reservation
-//!             fee of 1** (`p = hourly_rate / upfront_fee`),
-//! * `alpha` — discount factor entitled after reservation (`discounted/od`),
-//! * `tau`   — reservation period counted in billing slots.
+//! Two levels of abstraction:
 //!
-//! Running one instance on demand for `h` slots costs `p·h`; a reserved
-//! instance running `h` slots within its period costs `1 + α·p·h`.
+//! * [`Pricing`] — the paper's three-parameter reduction of **one**
+//!   reservation option, normalized to a fee of 1: `p` (on-demand rate per
+//!   slot), `alpha` (discount after reservation), `tau` (term in slots).
+//!   Running one instance on demand for `h` slots costs `p·h`; reserved,
+//!   `1 + α·p·h`. This remains the analysis vocabulary (break-even `β`,
+//!   competitive ratios) and the fast-path currency of the engine.
+//! * [`market::Market`] — the v2 menu: a shared on-demand rate plus any
+//!   number of typed [`market::Contract`]s (`upfront`, `rate`, `term`) in
+//!   raw market currency, validated, term-sorted, dominance-pruned, with
+//!   per-contract break-evens. [`market::Market::single`] embeds a
+//!   `Pricing` bit-identically; every billing and policy layer consumes
+//!   `Market`, and single-contract menus take the classic code path.
+//!
+//! Migration (v1 → v2): `Ledger::new(pricing)` → `Ledger::single(pricing)`
+//! or `Ledger::new(Market::single(pricing))`; fleet/engine entry points now
+//! take `&Market`; `Policy::decide` returns a typed
+//! [`Decision`](crate::algos::Decision) carrying per-contract reservation
+//! counts. See PERF.md § "Market API v2 migration".
 
 pub mod catalog;
+pub mod market;
+
+pub use market::{Contract, ContractId, Market};
 
 /// Normalized pricing parameters (reservation fee == 1).
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,80 +1,129 @@
 //! The batched fleet replay engine: zero-allocation per slot, monomorphic
-//! policy dispatch, contiguous-memory traversal.
+//! policy dispatch, contiguous-memory traversal — now over a [`Market`]
+//! menu.
 //!
 //! The seed fleet runner walked 933 heap-scattered `Vec<u32>` curves
 //! through `Box<dyn Policy>` with a per-slot `to_vec()` of the future
 //! window, sharded by striding (`idx += threads`) over an `mpsc` channel.
 //! This engine replaces all three costs:
 //!
-//! * **dispatch** — [`FleetPolicy`] is an enum over the five Sec. VII
-//!   policies; the per-slot `decide` is a direct `match`, so each arm
-//!   monomorphizes and inlines ([`crate::algos::Policy`] stays as the
-//!   extensibility trait — anything exotic still runs through the boxed
-//!   reference path in [`super::fleet::run_fleet_reference`]);
+//! * **dispatch** — [`FleetPolicy`] is an enum over the Sec. VII policies
+//!   plus their menu generalizations; the per-slot `decide` is a direct
+//!   `match`, so each arm monomorphizes and inlines
+//!   ([`crate::algos::Policy`] stays as the extensibility trait — anything
+//!   exotic still runs through the boxed reference path in
+//!   [`super::fleet::run_fleet_reference`]);
 //! * **allocation** — future windows are borrowed sub-slices of the demand
-//!   curve (see [`crate::sim::OracleFuture`] for the single-user form);
+//!   curve (see [`crate::sim::OracleFuture`] for the single-user form) and
+//!   typed decisions borrow each policy's reusable reservation buffer;
 //!   nothing allocates inside the slot loop;
 //! * **locality** — shards replay contiguous *chunks* of the columnar
 //!   [`FlatPopulation`] store, streaming one flat buffer front to back
 //!   instead of pointer-chasing per-user vectors, and results come back in
 //!   order without a channel.
 //!
-//! Numerical contract: for every policy the engine performs the exact same
-//! arithmetic in the exact same order as [`crate::sim::run_policy`], so
-//! results are **bit-identical** to the reference path — enforced by
-//! `rust/tests/engine_parity.rs`.
+//! Market routing: a **single-contract** market takes the classic policy
+//! fast path through [`Market::contract_pricing`] — for markets built with
+//! [`Market::single`] that path performs the exact same arithmetic in the
+//! exact same order as the v1 `Pricing` code, so results are
+//! **bit-identical** to the reference path — enforced by
+//! `rust/tests/engine_parity.rs`. Multi-contract markets dispatch to the
+//! menu policies ([`crate::algos::market`]), identically in both the
+//! engine and the reference runner.
 
 use crate::algos::baselines::{AllOnDemand, AllReserved, Separate};
 use crate::algos::deterministic::Deterministic;
+use crate::algos::market::{MarketDeterministic, MarketRandomized, PinnedSingle};
 use crate::algos::randomized::Randomized;
 use crate::algos::{Decision, Policy};
 use crate::analysis::classify::classify;
 use crate::ledger::Ledger;
-use crate::pricing::Pricing;
+use crate::pricing::Market;
 use crate::sim::all_on_demand_cost;
 use crate::sim::fleet::{FleetResult, PolicySpec, UserResult};
 use crate::trace::FlatPopulation;
 use crate::util::stats::summarize_u32;
 
 /// Statically dispatched per-user policy state for the fleet hot path.
-/// One variant per Sec. VII policy; construction mirrors
-/// [`PolicySpec::build`] exactly (including the per-user randomized seed)
-/// so both paths replay identical decision sequences.
+/// Construction mirrors [`PolicySpec::build`] exactly (including the
+/// per-user randomized seed and the single-vs-menu market routing) so both
+/// paths replay identical decision sequences.
 pub enum FleetPolicy {
     AllOnDemand(AllOnDemand),
     AllReserved(AllReserved),
     Separate(Separate),
     Deterministic(Deterministic),
     Randomized(Randomized),
+    MarketDeterministic(MarketDeterministic),
+    MarketRandomized(MarketRandomized),
+    PinnedAllReserved(PinnedSingle<AllReserved>),
+    PinnedSeparate(PinnedSingle<Separate>),
 }
 
 impl FleetPolicy {
     /// Instantiate for one user (the monomorphic mirror of
     /// [`PolicySpec::build`]).
-    pub fn build(spec: &PolicySpec, pricing: Pricing, user_id: u32) -> FleetPolicy {
+    pub fn build(spec: &PolicySpec, market: &Market, user_id: u32) -> FleetPolicy {
+        if market.is_single() {
+            let pricing = market.contract_pricing(0);
+            return match *spec {
+                PolicySpec::AllOnDemand => FleetPolicy::AllOnDemand(AllOnDemand::new()),
+                PolicySpec::AllReserved => FleetPolicy::AllReserved(AllReserved::new(pricing)),
+                PolicySpec::Separate => FleetPolicy::Separate(Separate::new(pricing)),
+                PolicySpec::Deterministic { z, window } => {
+                    let z = z.unwrap_or_else(|| pricing.beta());
+                    FleetPolicy::Deterministic(Deterministic::new(pricing, z, window))
+                }
+                PolicySpec::Randomized { window, seed } => FleetPolicy::Randomized(
+                    Randomized::with_window(pricing, window, seed ^ ((user_id as u64) << 17)),
+                ),
+            };
+        }
+        if market.is_empty() {
+            // reserving never helps: every policy degrades to on-demand
+            return FleetPolicy::AllOnDemand(AllOnDemand::new());
+        }
+        let pin = market.steady_best().expect("non-empty market has a steady-best contract");
         match *spec {
             PolicySpec::AllOnDemand => FleetPolicy::AllOnDemand(AllOnDemand::new()),
-            PolicySpec::AllReserved => FleetPolicy::AllReserved(AllReserved::new(pricing)),
-            PolicySpec::Separate => FleetPolicy::Separate(Separate::new(pricing)),
-            PolicySpec::Deterministic { z, window } => {
-                let z = z.unwrap_or_else(|| pricing.beta());
-                FleetPolicy::Deterministic(Deterministic::new(pricing, z, window))
+            PolicySpec::AllReserved => FleetPolicy::PinnedAllReserved(PinnedSingle::new(
+                AllReserved::new(market.contract_pricing(pin)),
+                pin,
+            )),
+            PolicySpec::Separate => FleetPolicy::PinnedSeparate(PinnedSingle::new(
+                Separate::new(market.contract_pricing(pin)),
+                pin,
+            )),
+            PolicySpec::Deterministic { z: None, window: 0 } => {
+                FleetPolicy::MarketDeterministic(MarketDeterministic::new(market.clone()))
             }
-            PolicySpec::Randomized { window, seed } => FleetPolicy::Randomized(
-                Randomized::with_window(pricing, window, seed ^ ((user_id as u64) << 17)),
+            PolicySpec::Deterministic { .. } => panic!(
+                "custom thresholds / prediction windows are single-contract only (menu of {})",
+                market.len()
+            ),
+            PolicySpec::Randomized { window: 0, seed } => FleetPolicy::MarketRandomized(
+                MarketRandomized::new(market.clone(), seed ^ ((user_id as u64) << 17)),
+            ),
+            PolicySpec::Randomized { .. } => panic!(
+                "prediction windows are single-contract only (menu of {})",
+                market.len()
             ),
         }
     }
 
     /// Per-slot decision — a direct match, no vtable.
     #[inline]
-    pub fn decide(&mut self, demand: u32, future: &[u32]) -> Decision {
+    pub fn decide(&mut self, demand: u32, future: &[u32]) -> Decision<'_> {
         match self {
             FleetPolicy::AllOnDemand(p) => p.decide(demand, future),
             FleetPolicy::AllReserved(p) => p.decide(demand, future),
             FleetPolicy::Separate(p) => p.decide(demand, future),
             FleetPolicy::Deterministic(p) => p.decide(demand, future),
             FleetPolicy::Randomized(p) => p.decide(demand, future),
+            FleetPolicy::MarketDeterministic(p) => p.decide(demand, future),
+            FleetPolicy::MarketRandomized(p) => p.decide(demand, future),
+            FleetPolicy::PinnedAllReserved(p) => p.decide(demand, future),
+            FleetPolicy::PinnedSeparate(p) => p.decide(demand, future),
         }
     }
 
@@ -86,17 +135,21 @@ impl FleetPolicy {
             FleetPolicy::Separate(p) => p.window(),
             FleetPolicy::Deterministic(p) => p.window(),
             FleetPolicy::Randomized(p) => p.window(),
+            FleetPolicy::MarketDeterministic(p) => p.window(),
+            FleetPolicy::MarketRandomized(p) => p.window(),
+            FleetPolicy::PinnedAllReserved(p) => p.window(),
+            FleetPolicy::PinnedSeparate(p) => p.window(),
         }
     }
 }
 
 /// Replay one user's demand curve through one policy: the allocation-free
 /// inner loop of the batched engine.
-pub fn replay_user(demand: &[u32], user_id: u32, pricing: Pricing, spec: &PolicySpec) -> UserResult {
-    let mut policy = FleetPolicy::build(spec, pricing, user_id);
+pub fn replay_user(demand: &[u32], user_id: u32, market: &Market, spec: &PolicySpec) -> UserResult {
+    let mut policy = FleetPolicy::build(spec, market, user_id);
     let w = policy.window();
     let len = demand.len();
-    let mut ledger = Ledger::new(pricing);
+    let mut ledger = Ledger::new(market.clone());
     for (t, &d) in demand.iter().enumerate() {
         let fut: &[u32] = if w == 0 {
             &[]
@@ -106,11 +159,11 @@ pub fn replay_user(demand: &[u32], user_id: u32, pricing: Pricing, spec: &Policy
         };
         let dec = policy.decide(d, fut);
         ledger
-            .bill_slot(d, dec.reserve, dec.on_demand)
+            .bill(d, &dec)
             .unwrap_or_else(|e| panic!("user {user_id}: infeasible decision: {e}"));
     }
     let report = ledger.report();
-    let denom = all_on_demand_cost(demand, &pricing);
+    let denom = all_on_demand_cost(demand, market.p());
     let normalized = if denom > 0.0 { report.total / denom } else { 1.0 };
     UserResult {
         user_id,
@@ -126,7 +179,7 @@ pub fn replay_user(demand: &[u32], user_id: u32, pricing: Pricing, spec: &Policy
 /// independent of the thread count.
 pub fn run_fleet_flat(
     flat: &FlatPopulation,
-    pricing: Pricing,
+    market: &Market,
     spec: &PolicySpec,
     threads: usize,
 ) -> FleetResult {
@@ -144,7 +197,7 @@ pub fn run_fleet_flat(
             }
             handles.push(scope.spawn(move || {
                 (lo..hi)
-                    .map(|i| replay_user(flat.demand(i), flat.user_id(i), pricing, spec))
+                    .map(|i| replay_user(flat.demand(i), flat.user_id(i), market, spec))
                     .collect::<Vec<UserResult>>()
             }));
         }
@@ -161,10 +214,26 @@ pub fn run_fleet_flat(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pricing::{Contract, Pricing};
     use crate::trace::synth::{generate, SynthConfig};
 
-    fn pricing() -> Pricing {
-        Pricing::normalized(0.08 / 69.0, 0.4875, 1000)
+    fn market() -> Market {
+        Market::single(Pricing::normalized(0.08 / 69.0, 0.4875, 1000))
+    }
+
+    fn menu_market() -> Market {
+        // break-evens (167 / 188 violation-slots) fit the short test traces
+        // so the menu policies actually commit; both contracts survive
+        // dominance pruning.
+        let m = Market::new(
+            0.01,
+            vec![
+                Contract { upfront: 1.0, rate: 0.004, term: 600 },
+                Contract { upfront: 1.5, rate: 0.002, term: 1800 },
+            ],
+        );
+        assert_eq!(m.len(), 2);
+        m
     }
 
     fn specs() -> Vec<PolicySpec> {
@@ -178,27 +247,42 @@ mod tests {
         ]
     }
 
+    /// Specs valid for multi-contract menus (no custom z / windows).
+    fn menu_specs() -> Vec<PolicySpec> {
+        vec![
+            PolicySpec::AllOnDemand,
+            PolicySpec::AllReserved,
+            PolicySpec::Separate,
+            PolicySpec::Deterministic { z: None, window: 0 },
+            PolicySpec::Randomized { window: 0, seed: 11 },
+        ]
+    }
+
     #[test]
     fn fleet_policy_matches_boxed_dispatch() {
-        // The enum's decide must reproduce the trait-object path exactly.
+        // The enum's decide must reproduce the trait-object path exactly —
+        // on both the single-contract fast path and the menu path.
         let pop = generate(&SynthConfig { users: 6, slots: 1200, seed: 3, ..Default::default() });
-        for spec in specs() {
-            for u in &pop.users {
-                let mut fast = FleetPolicy::build(&spec, pricing(), u.user_id);
-                let mut slow = spec.build(pricing(), u.user_id);
-                assert_eq!(fast.window(), slow.window());
-                let w = fast.window();
-                for (t, &d) in u.demand.iter().enumerate() {
-                    let hi = (t + 1 + w).min(u.demand.len());
-                    let fut = &u.demand[t + 1..hi];
-                    let fut = if w == 0 { &[] as &[u32] } else { fut };
-                    assert_eq!(
-                        fast.decide(d, fut),
-                        slow.decide(d, fut),
-                        "{} user {} slot {t}",
-                        spec.name(),
-                        u.user_id
-                    );
+        for (mkt, specs) in [(market(), specs()), (menu_market(), menu_specs())] {
+            for spec in specs {
+                for u in &pop.users {
+                    let mut fast = FleetPolicy::build(&spec, &mkt, u.user_id);
+                    let mut slow = spec.build(&mkt, u.user_id);
+                    assert_eq!(fast.window(), slow.window());
+                    let w = fast.window();
+                    for (t, &d) in u.demand.iter().enumerate() {
+                        let hi = (t + 1 + w).min(u.demand.len());
+                        let fut = &u.demand[t + 1..hi];
+                        let fut = if w == 0 { &[] as &[u32] } else { fut };
+                        assert_eq!(
+                            fast.decide(d, fut),
+                            slow.decide(d, fut),
+                            "{} user {} slot {t} (menu k={})",
+                            spec.name(),
+                            u.user_id,
+                            mkt.len()
+                        );
+                    }
                 }
             }
         }
@@ -209,15 +293,17 @@ mod tests {
         let pop = generate(&SynthConfig { users: 17, slots: 1500, seed: 9, ..Default::default() });
         let flat = pop.flatten();
         let spec = PolicySpec::Deterministic { z: None, window: 0 };
-        let one = run_fleet_flat(&flat, pricing(), &spec, 1);
-        for threads in [2usize, 3, 8, 64] {
-            let many = run_fleet_flat(&flat, pricing(), &spec, threads);
-            assert_eq!(one.per_user.len(), many.per_user.len());
-            for (a, b) in one.per_user.iter().zip(&many.per_user) {
-                assert_eq!(a.user_id, b.user_id);
-                assert_eq!(a.normalized_cost.to_bits(), b.normalized_cost.to_bits());
-                assert_eq!(a.absolute_cost.to_bits(), b.absolute_cost.to_bits());
-                assert_eq!(a.reservations, b.reservations);
+        for mkt in [market(), menu_market()] {
+            let one = run_fleet_flat(&flat, &mkt, &spec, 1);
+            for threads in [2usize, 3, 8, 64] {
+                let many = run_fleet_flat(&flat, &mkt, &spec, threads);
+                assert_eq!(one.per_user.len(), many.per_user.len());
+                for (a, b) in one.per_user.iter().zip(&many.per_user) {
+                    assert_eq!(a.user_id, b.user_id);
+                    assert_eq!(a.normalized_cost.to_bits(), b.normalized_cost.to_bits());
+                    assert_eq!(a.absolute_cost.to_bits(), b.absolute_cost.to_bits());
+                    assert_eq!(a.reservations, b.reservations);
+                }
             }
         }
     }
@@ -225,7 +311,17 @@ mod tests {
     #[test]
     fn empty_population_yields_empty_result() {
         let flat = FlatPopulation::default();
-        let r = run_fleet_flat(&flat, pricing(), &PolicySpec::AllOnDemand, 4);
+        let r = run_fleet_flat(&flat, &market(), &PolicySpec::AllOnDemand, 4);
         assert!(r.per_user.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "single-contract only")]
+    fn menu_rejects_prediction_windows() {
+        FleetPolicy::build(
+            &PolicySpec::Deterministic { z: None, window: 10 },
+            &menu_market(),
+            0,
+        );
     }
 }

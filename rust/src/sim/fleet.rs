@@ -7,16 +7,19 @@
 //! implementation (strided `mpsc` sharding over `Box<dyn Policy>`) is kept
 //! verbatim as [`run_fleet_reference`] — it is the golden model for the
 //! engine-parity tests and the baseline the `bench` CLI measures speedups
-//! against.
+//! against. Both paths take a [`Market`]; single-contract markets run the
+//! classic policies (bit-identical to v1 for [`Market::single`]), menus
+//! run the generalized policies of [`crate::algos::market`].
 
 use std::sync::mpsc;
 use std::thread;
 
+use crate::algos::market::{MarketDeterministic, MarketRandomized, PinnedSingle};
 use crate::algos::{baselines, deterministic::Deterministic, randomized::Randomized, Policy};
 use crate::analysis::classify::{classify, Group};
-use crate::pricing::Pricing;
+use crate::pricing::Market;
 use crate::sim::engine::run_fleet_flat;
-use crate::sim::{all_on_demand_cost, run_policy};
+use crate::sim::{all_on_demand_cost, run_policy_market};
 use crate::trace::{FlatPopulation, Population};
 
 /// Which policy to instantiate per user (policies carry per-user state, so
@@ -27,8 +30,10 @@ pub enum PolicySpec {
     AllReserved,
     Separate,
     /// `A_z` with optional prediction window; `z = None` means `z = β`.
+    /// Custom `z` / windows require a single-contract market.
     Deterministic { z: Option<f64>, window: usize },
     /// Algorithm 2/4; the per-user draw is seeded from `seed ^ user_id`.
+    /// Windows require a single-contract market.
     Randomized { window: usize, seed: u64 },
 }
 
@@ -49,18 +54,53 @@ impl PolicySpec {
         }
     }
 
-    /// Instantiate for one user.
-    pub fn build(&self, pricing: Pricing, user_id: u32) -> Box<dyn Policy> {
+    /// Instantiate for one user. Single-contract markets build the classic
+    /// policies against [`Market::contract_pricing`]; menus build the
+    /// generalized policies (baselines pinned to the steady-best contract).
+    /// Mirrored monomorphically by
+    /// [`FleetPolicy::build`](crate::sim::engine::FleetPolicy::build).
+    pub fn build(&self, market: &Market, user_id: u32) -> Box<dyn Policy> {
+        if market.is_single() {
+            let pricing = market.contract_pricing(0);
+            return match *self {
+                PolicySpec::AllOnDemand => Box::new(baselines::AllOnDemand::new()),
+                PolicySpec::AllReserved => Box::new(baselines::AllReserved::new(pricing)),
+                PolicySpec::Separate => Box::new(baselines::Separate::new(pricing)),
+                PolicySpec::Deterministic { z, window } => {
+                    let z = z.unwrap_or_else(|| pricing.beta());
+                    Box::new(Deterministic::new(pricing, z, window))
+                }
+                PolicySpec::Randomized { window, seed } => {
+                    Box::new(Randomized::with_window(pricing, window, seed ^ (user_id as u64) << 17))
+                }
+            };
+        }
+        if market.is_empty() {
+            return Box::new(baselines::AllOnDemand::new());
+        }
+        let pin = market.steady_best().expect("non-empty market has a steady-best contract");
         match *self {
             PolicySpec::AllOnDemand => Box::new(baselines::AllOnDemand::new()),
-            PolicySpec::AllReserved => Box::new(baselines::AllReserved::new(pricing)),
-            PolicySpec::Separate => Box::new(baselines::Separate::new(pricing)),
-            PolicySpec::Deterministic { z, window } => {
-                let z = z.unwrap_or_else(|| pricing.beta());
-                Box::new(Deterministic::new(pricing, z, window))
+            PolicySpec::AllReserved => Box::new(PinnedSingle::new(
+                baselines::AllReserved::new(market.contract_pricing(pin)),
+                pin,
+            )),
+            PolicySpec::Separate => Box::new(PinnedSingle::new(
+                baselines::Separate::new(market.contract_pricing(pin)),
+                pin,
+            )),
+            PolicySpec::Deterministic { z: None, window: 0 } => {
+                Box::new(MarketDeterministic::new(market.clone()))
             }
-            PolicySpec::Randomized { window, seed } => {
-                Box::new(Randomized::with_window(pricing, window, seed ^ (user_id as u64) << 17))
+            PolicySpec::Deterministic { .. } => panic!(
+                "custom thresholds / prediction windows are single-contract only (menu of {})",
+                market.len()
+            ),
+            PolicySpec::Randomized { window: 0, seed } => {
+                Box::new(MarketRandomized::new(market.clone(), seed ^ (user_id as u64) << 17))
+            }
+            PolicySpec::Randomized { .. } => {
+                panic!("prediction windows are single-contract only (menu of {})", market.len())
             }
         }
     }
@@ -105,6 +145,16 @@ impl FleetResult {
         }
     }
 
+    /// Total absolute cost across the fleet (market currency).
+    pub fn total_cost(&self) -> f64 {
+        self.per_user.iter().map(|u| u.absolute_cost).sum()
+    }
+
+    /// Total reservations across the fleet.
+    pub fn total_reservations(&self) -> u64 {
+        self.per_user.iter().map(|u| u.reservations).sum()
+    }
+
     /// Table II row: [all, g1, g2, g3].
     pub fn table2_row(&self) -> [f64; 4] {
         [
@@ -122,18 +172,17 @@ impl FleetResult {
 /// several specs over the same population, flatten once and call
 /// [`run_fleet_flat`] (or [`run_benchmark_suite`], which does) to avoid
 /// rebuilding the columnar store per policy.
-pub fn run_fleet(pop: &Population, pricing: Pricing, spec: &PolicySpec, threads: usize) -> FleetResult {
-    run_fleet_flat(&pop.flatten(), pricing, spec, threads)
+pub fn run_fleet(pop: &Population, market: &Market, spec: &PolicySpec, threads: usize) -> FleetResult {
+    run_fleet_flat(&pop.flatten(), market, spec, threads)
 }
 
 /// The seed fleet runner, kept as the golden reference for the batched
 /// engine: strided sharding over an `mpsc` channel with `Box<dyn Policy>`
-/// dispatch and a freshly allocated future window per slot. Slower by
-/// design — use [`run_fleet`] everywhere except parity tests and the
-/// `bench` baseline measurement.
+/// dispatch. Slower by design — use [`run_fleet`] everywhere except parity
+/// tests and the `bench` baseline measurement.
 pub fn run_fleet_reference(
     pop: &Population,
-    pricing: Pricing,
+    market: &Market,
     spec: &PolicySpec,
     threads: usize,
 ) -> FleetResult {
@@ -149,10 +198,10 @@ pub fn run_fleet_reference(
                 let mut idx = shard;
                 while idx < users.len() {
                     let u = &users[idx];
-                    let mut policy = spec.build(pricing, u.user_id);
-                    let report = run_policy(policy.as_mut(), &u.demand, pricing)
+                    let mut policy = spec.build(market, u.user_id);
+                    let report = run_policy_market(policy.as_mut(), &u.demand, market)
                         .unwrap_or_else(|e| panic!("user {}: infeasible decision: {e}", u.user_id));
-                    let denom = all_on_demand_cost(&u.demand, &pricing);
+                    let denom = all_on_demand_cost(&u.demand, market.p());
                     let normalized = if denom > 0.0 { report.total / denom } else { 1.0 };
                     out.push(UserResult {
                         user_id: u.user_id,
@@ -186,32 +235,38 @@ pub fn suite_specs(seed: u64) -> [PolicySpec; 5] {
 
 /// Run the full Sec. VII suite (5 policies) across the population,
 /// flattening to the columnar store once.
-pub fn run_benchmark_suite(pop: &Population, pricing: Pricing, seed: u64, threads: usize) -> Vec<FleetResult> {
+pub fn run_benchmark_suite(
+    pop: &Population,
+    market: &Market,
+    seed: u64,
+    threads: usize,
+) -> Vec<FleetResult> {
     let flat = FlatPopulation::from(pop);
     suite_specs(seed)
         .iter()
-        .map(|spec| run_fleet_flat(&flat, pricing, spec, threads))
+        .map(|spec| run_fleet_flat(&flat, market, spec, threads))
         .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pricing::Pricing;
     use crate::trace::synth::{generate, SynthConfig};
 
     fn small_pop() -> Population {
         generate(&SynthConfig { users: 24, slots: 3000, seed: 5, ..Default::default() })
     }
 
-    fn pricing() -> Pricing {
+    fn market() -> Market {
         // compressed EC2 small but with tau that fits the short test trace
-        Pricing::normalized(0.08 / 69.0, 0.4875, 1000)
+        Market::single(Pricing::normalized(0.08 / 69.0, 0.4875, 1000))
     }
 
     #[test]
     fn all_on_demand_normalizes_to_one() {
         let pop = small_pop();
-        let r = run_fleet(&pop, pricing(), &PolicySpec::AllOnDemand, 4);
+        let r = run_fleet(&pop, &market(), &PolicySpec::AllOnDemand, 4);
         for u in &r.per_user {
             assert!((u.normalized_cost - 1.0).abs() < 1e-9);
         }
@@ -221,8 +276,8 @@ mod tests {
     fn sharding_is_deterministic() {
         let pop = small_pop();
         let spec = PolicySpec::Deterministic { z: None, window: 0 };
-        let a = run_fleet(&pop, pricing(), &spec, 1);
-        let b = run_fleet(&pop, pricing(), &spec, 7);
+        let a = run_fleet(&pop, &market(), &spec, 1);
+        let b = run_fleet(&pop, &market(), &spec, 7);
         for (x, y) in a.per_user.iter().zip(&b.per_user) {
             assert_eq!(x.user_id, y.user_id);
             assert!((x.normalized_cost - y.normalized_cost).abs() < 1e-12);
@@ -232,7 +287,7 @@ mod tests {
     #[test]
     fn deterministic_beats_all_on_demand_overall() {
         let pop = small_pop();
-        let det = run_fleet(&pop, pricing(), &PolicySpec::Deterministic { z: None, window: 0 }, 4);
+        let det = run_fleet(&pop, &market(), &PolicySpec::Deterministic { z: None, window: 0 }, 4);
         // mean normalized cost must be <= 1 + epsilon: A_beta never pays
         // more than (2-alpha) OPT <= (2-alpha) * AllOnDemand, and on mixed
         // populations it should actually save.
@@ -244,8 +299,8 @@ mod tests {
     fn randomized_seed_gives_reproducible_fleet() {
         let pop = small_pop();
         let spec = PolicySpec::Randomized { window: 0, seed: 99 };
-        let a = run_fleet(&pop, pricing(), &spec, 3);
-        let b = run_fleet(&pop, pricing(), &spec, 5);
+        let a = run_fleet(&pop, &market(), &spec, 3);
+        let b = run_fleet(&pop, &market(), &spec, 5);
         for (x, y) in a.per_user.iter().zip(&b.per_user) {
             assert!((x.normalized_cost - y.normalized_cost).abs() < 1e-12);
         }
@@ -254,7 +309,7 @@ mod tests {
     #[test]
     fn suite_runs_all_five() {
         let pop = small_pop();
-        let results = run_benchmark_suite(&pop, pricing(), 1, 4);
+        let results = run_benchmark_suite(&pop, &market(), 1, 4);
         assert_eq!(results.len(), 5);
         for r in &results {
             assert_eq!(r.per_user.len(), pop.users.len());
@@ -267,8 +322,8 @@ mod tests {
         // fast in-tree smoke check.
         let pop = small_pop();
         let spec = PolicySpec::Deterministic { z: None, window: 0 };
-        let new = run_fleet(&pop, pricing(), &spec, 4);
-        let old = run_fleet_reference(&pop, pricing(), &spec, 4);
+        let new = run_fleet(&pop, &market(), &spec, 4);
+        let old = run_fleet_reference(&pop, &market(), &spec, 4);
         assert_eq!(new.per_user.len(), old.per_user.len());
         for (a, b) in new.per_user.iter().zip(&old.per_user) {
             assert_eq!(a.user_id, b.user_id);
@@ -280,7 +335,7 @@ mod tests {
     #[test]
     fn table2_row_shape() {
         let pop = small_pop();
-        let r = run_fleet(&pop, pricing(), &PolicySpec::AllOnDemand, 2);
+        let r = run_fleet(&pop, &market(), &PolicySpec::AllOnDemand, 2);
         let row = r.table2_row();
         assert!((row[0] - 1.0).abs() < 1e-9);
     }

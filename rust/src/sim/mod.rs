@@ -1,13 +1,31 @@
-//! Simulation engine: replay demand traces through policies, bill through
-//! the [`Ledger`](crate::ledger::Ledger), and aggregate fleet-wide results
-//! (the machinery behind Fig. 5-7 and Table II).
+//! Simulation engine, v2: replay demand traces through policies over a
+//! [`Market`] menu, bill through the [`Ledger`](crate::ledger::Ledger),
+//! and aggregate fleet-wide results (the machinery behind Fig. 5-7,
+//! Table II, and the declarative [`scenario`] runner).
+//!
+//! Layers, bottom up:
+//!
+//! * [`run_policy_market`] / [`run_policy_src`] — one policy, one demand
+//!   curve, one `&Market`; decisions are typed
+//!   [`Decision`](crate::algos::Decision)s billed per contract.
+//!   [`run_policy`] is the single-contract convenience taking a classic
+//!   [`Pricing`] through the bit-identical [`Market::single`] embedding.
+//! * [`engine`] — the batched zero-allocation fleet engine (monomorphic
+//!   dispatch, columnar traces, contiguous shards). Single-contract
+//!   markets take the classic policy fast path; multi-contract markets run
+//!   the menu policies ([`crate::algos::market`]).
+//! * [`fleet`] — policy specs, per-user results, the Sec. VII suite, and
+//!   the seed reference runner kept as the parity oracle.
+//! * [`scenario`] — declarative JSON scenarios: market menu + trace source
+//!   + policy set in a config file, normalized-cost reports out.
 
 pub mod engine;
 pub mod fleet;
+pub mod scenario;
 
 use crate::algos::Policy;
 use crate::ledger::{CostReport, Ledger, LedgerError};
-use crate::pricing::Pricing;
+use crate::pricing::{Market, Pricing};
 
 /// A per-slot future-demand provider: `future(t)` yields the predicted
 /// demands `d̂_{t+1}, …, d̂_{t+w}` (possibly shorter near the trace tail)
@@ -43,48 +61,63 @@ impl FutureSource for OracleFuture<'_> {
     }
 }
 
-/// Closure-backed provider (the pre-engine API): owns the closure's output
-/// so the borrowed-slice contract holds. Allocates whatever the closure
-/// allocates — use [`OracleFuture`] or a buffer-reusing source on hot paths.
-pub struct BufferedFuture<F: FnMut(usize) -> Vec<u32>> {
+/// Closure-backed provider: the closure **fills a reusable buffer**
+/// (cleared before every call), so the compatibility path is also
+/// allocation-free in the slot loop once the buffer has grown to the
+/// window size — `clear()` keeps capacity.
+pub struct BufferedFuture<F: FnMut(usize, &mut Vec<u32>)> {
     f: F,
     buf: Vec<u32>,
 }
 
-impl<F: FnMut(usize) -> Vec<u32>> BufferedFuture<F> {
+impl<F: FnMut(usize, &mut Vec<u32>)> BufferedFuture<F> {
     pub fn new(f: F) -> BufferedFuture<F> {
         BufferedFuture { f, buf: Vec::new() }
     }
 }
 
-impl<F: FnMut(usize) -> Vec<u32>> FutureSource for BufferedFuture<F> {
+impl<F: FnMut(usize, &mut Vec<u32>)> FutureSource for BufferedFuture<F> {
     fn future(&mut self, t: usize) -> &[u32] {
-        self.buf = (self.f)(t);
+        self.buf.clear();
+        (self.f)(t, &mut self.buf);
         &self.buf
     }
 }
 
-/// Run one policy over one demand curve, billing every slot.
+/// Run one policy over one demand curve against a classic single-contract
+/// [`Pricing`] — the [`Market::single`] fast path, bit-identical to the v1
+/// arithmetic. See [`run_policy_market`] for menus.
+pub fn run_policy(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> Result<CostReport, LedgerError> {
+    run_policy_market(policy, demands, &Market::single(pricing))
+}
+
+/// Run one policy over one demand curve against a [`Market`], billing
+/// every slot through a menu ledger.
 ///
 /// `future` slices are borrowed from the *actual* demand (the paper's
 /// assumption that short-term predictions are reliable, Sec. VI); pass a
 /// forecaster-backed provider through [`run_policy_with`] (or any
 /// [`FutureSource`] through [`run_policy_src`]) to study imperfect
 /// predictions.
-pub fn run_policy(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> Result<CostReport, LedgerError> {
+pub fn run_policy_market(
+    policy: &mut dyn Policy,
+    demands: &[u32],
+    market: &Market,
+) -> Result<CostReport, LedgerError> {
     let w = policy.window();
-    run_policy_src(policy, demands, pricing, &mut OracleFuture::new(demands, w))
+    run_policy_src(policy, demands, market, &mut OracleFuture::new(demands, w))
 }
 
-/// Run one policy with a custom future-demand closure (`t -> predicted
-/// demands for t+1..=t+w`). Compatibility wrapper over [`run_policy_src`].
+/// Run one policy with a custom future-demand closure that fills the
+/// provided buffer with the predicted demands for `t+1..=t+w`.
+/// Compatibility wrapper over [`run_policy_src`].
 pub fn run_policy_with(
     policy: &mut dyn Policy,
     demands: &[u32],
     pricing: Pricing,
-    future: impl FnMut(usize) -> Vec<u32>,
+    future: impl FnMut(usize, &mut Vec<u32>),
 ) -> Result<CostReport, LedgerError> {
-    run_policy_src(policy, demands, pricing, &mut BufferedFuture::new(future))
+    run_policy_src(policy, demands, &Market::single(pricing), &mut BufferedFuture::new(future))
 }
 
 /// Core replay loop over any [`FutureSource`]. The provider is only
@@ -92,23 +125,24 @@ pub fn run_policy_with(
 pub fn run_policy_src(
     policy: &mut dyn Policy,
     demands: &[u32],
-    pricing: Pricing,
+    market: &Market,
     future: &mut dyn FutureSource,
 ) -> Result<CostReport, LedgerError> {
-    let mut ledger = Ledger::new(pricing);
+    let mut ledger = Ledger::new(market.clone());
     let w = policy.window();
     for (t, &d) in demands.iter().enumerate() {
         let fut: &[u32] = if w == 0 { &[] } else { future.future(t) };
         let dec = policy.decide(d, fut);
-        ledger.bill_slot(d, dec.reserve, dec.on_demand)?;
+        ledger.bill(d, &dec)?;
     }
     Ok(ledger.report())
 }
 
-/// Cost of serving a demand curve entirely on demand (`S = p·Σd_t`) — the
-/// normalization denominator used throughout Sec. VII.
-pub fn all_on_demand_cost(demands: &[u32], pricing: &Pricing) -> f64 {
-    pricing.p * demands.iter().map(|&d| d as u64).sum::<u64>() as f64
+/// Cost of serving a demand curve entirely on demand (`S = p·Σd_t`) at
+/// on-demand rate `p` — the normalization denominator used throughout
+/// Sec. VII (pass `pricing.p` or `market.p()`).
+pub fn all_on_demand_cost(demands: &[u32], p: f64) -> f64 {
+    p * demands.iter().map(|&d| d as u64).sum::<u64>() as f64
 }
 
 #[cfg(test)]
@@ -116,6 +150,7 @@ mod tests {
     use super::*;
     use crate::algos::baselines::AllOnDemand;
     use crate::algos::deterministic::Deterministic;
+    use crate::algos::market::MarketDeterministic;
 
     #[test]
     fn run_policy_matches_manual_bill() {
@@ -123,7 +158,7 @@ mod tests {
         let demands = [1u32, 2, 0, 3];
         let r = run_policy(&mut AllOnDemand::new(), &demands, pricing).unwrap();
         assert!((r.total - 0.1 * 6.0).abs() < 1e-12);
-        assert!((r.total - all_on_demand_cost(&demands, &pricing)).abs() < 1e-12);
+        assert!((r.total - all_on_demand_cost(&demands, pricing.p)).abs() < 1e-12);
     }
 
     #[test]
@@ -135,30 +170,47 @@ mod tests {
         let mut with_oracle = Deterministic::with_window(pricing, 10);
         let mut with_zeros = Deterministic::with_window(pricing, 10);
         let r_oracle = run_policy(&mut with_oracle, &demands, pricing).unwrap();
-        let r_zeros =
-            run_policy_with(&mut with_zeros, &demands, pricing, |_| vec![0; 10]).unwrap();
+        let r_zeros = run_policy_with(&mut with_zeros, &demands, pricing, |_, buf| {
+            buf.resize(10, 0);
+        })
+        .unwrap();
         // oracle foresees break-even sooner -> fewer on-demand slots
         assert!(r_oracle.on_demand_slots <= r_zeros.on_demand_slots);
     }
 
     #[test]
     fn oracle_future_matches_closure_provider_bitwise() {
-        // The borrowed-slice oracle must reproduce the old to_vec() path
-        // exactly (bit-identical costs) for a window policy.
+        // The borrowed-slice oracle must reproduce the buffered closure
+        // path exactly (bit-identical costs) for a window policy.
         let pricing = Pricing::normalized(0.1, 0.0, 50);
         let demands: Vec<u32> = (0..200).map(|i| ((i / 13) % 3) as u32).collect();
         let w = 10;
         let mut a = Deterministic::with_window(pricing, w);
         let mut b = Deterministic::with_window(pricing, w);
         let r_oracle = run_policy(&mut a, &demands, pricing).unwrap();
-        let r_closure = run_policy_with(&mut b, &demands, pricing, |t| {
+        let r_closure = run_policy_with(&mut b, &demands, pricing, |t, buf| {
             let hi = (t + 1 + w).min(demands.len());
-            demands[t + 1..hi].to_vec()
+            buf.extend_from_slice(&demands[t + 1..hi]);
         })
         .unwrap();
         assert_eq!(r_oracle.total.to_bits(), r_closure.total.to_bits());
         assert_eq!(r_oracle.reservations, r_closure.reservations);
         assert_eq!(r_oracle.on_demand_slots, r_closure.on_demand_slots);
+    }
+
+    #[test]
+    fn buffered_future_reuses_its_buffer() {
+        // the closure sees a cleared buffer each slot and fills it in place
+        let mut calls = 0usize;
+        let mut src = BufferedFuture::new(|t, buf: &mut Vec<u32>| {
+            calls += 1;
+            assert!(buf.is_empty());
+            buf.extend((0..3).map(|i| (t + i) as u32));
+        });
+        assert_eq!(src.future(5), &[5, 6, 7]);
+        assert_eq!(src.future(9), &[9, 10, 11]);
+        drop(src);
+        assert_eq!(calls, 2);
     }
 
     #[test]
@@ -177,5 +229,21 @@ mod tests {
         let mut det = Deterministic::online(pricing);
         let r = run_policy(&mut det, &demands, pricing).unwrap();
         assert!(r.identity_holds(&pricing, 1e-9));
+    }
+
+    #[test]
+    fn run_policy_market_accepts_menu_policies() {
+        let market = crate::pricing::Market::new(
+            0.1,
+            vec![
+                crate::pricing::Contract { upfront: 0.3, rate: 0.02, term: 8 },
+                crate::pricing::Contract { upfront: 0.9, rate: 0.01, term: 30 },
+            ],
+        );
+        let demands: Vec<u32> = (0..120).map(|i| ((i / 9) % 3) as u32).collect();
+        let mut p = MarketDeterministic::new(market.clone());
+        let r = run_policy_market(&mut p, &demands, &market).unwrap();
+        assert!(r.total.is_finite());
+        assert_eq!(r.demand_slots, demands.iter().map(|&d| d as u64).sum::<u64>());
     }
 }

@@ -1,0 +1,583 @@
+//! Declarative scenario runner: a JSON spec in, a comparable
+//! normalized-cost report out — new workloads become a config file rather
+//! than a code change (ROADMAP scenario-diversity north star).
+//!
+//! # Spec schema (`cloudreserve-scenario` spec, parsed via [`crate::util::json`])
+//!
+//! ```json
+//! {
+//!   "name": "table1-two-term-compressed",
+//!   "description": "optional free text",
+//!   "market": {
+//!     "on_demand": 0.08,
+//!     "contracts": [
+//!       {"label": "1yr-light", "upfront": 0.2,  "rate": 0.039, "term": 6},
+//!       {"label": "3yr-light", "upfront": 0.45, "rate": 0.031, "term": 18}
+//!     ]
+//!   },
+//!   "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 120},
+//!   "policies": ["all-on-demand", "all-reserved", "separate",
+//!                "deterministic", "randomized"],
+//!   "window": 0,
+//!   "seed": 1,
+//!   "offline": true
+//! }
+//! ```
+//!
+//! * `market.on_demand` — on-demand rate per slot (market currency);
+//!   `contracts[*]` — upfront fee, discounted per-slot rate, term in
+//!   slots. The menu is validated, sorted, and dominance-pruned by
+//!   [`Market::with_labels`]; the report records how many contracts the
+//!   pruning removed.
+//! * `trace.kind` — `"constant"` (`users`, `level`, `slots`),
+//!   `"synthetic"` (`users`, `slots`, `seed` — the Google-like generator),
+//!   `"inline"` (`demands`: array of per-user demand arrays), or `"file"`
+//!   (`path` to a `gen-traces` CSV/BIN, optional `slots` for CSV).
+//! * `policies` — strings as above, or objects
+//!   `{"policy": "deterministic", "z": 0.4, "window": 60}` (custom `z` /
+//!   windows are single-contract-market only).
+//! * `window` — default prediction window applied to deterministic /
+//!   randomized entries (single-contract markets only).
+//! * `offline` — when true and the trace has exactly one user, also solve
+//!   the per-contract exact DP ([`offline::optimal_market`]) and report
+//!   the deterministic policy's cost ratio against it, next to the
+//!   `2 − α_max` comparison bound.
+//!
+//! Reports render as text ([`ScenarioReport::render`]) and serialize as
+//! `cloudreserve-scenario/v1` JSON ([`ScenarioReport::to_json`]) for CI
+//! trajectory tracking.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::algos::offline;
+use crate::pricing::{Contract, Market};
+use crate::sim::engine::run_fleet_flat;
+use crate::sim::fleet::{FleetResult, PolicySpec};
+use crate::trace::{FlatPopulation, Population, UserTrace};
+use crate::util::json::Json;
+
+/// Where the demand trace comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSpec {
+    /// The Google-like synthetic population generator.
+    Synthetic { users: usize, slots: usize, seed: u64 },
+    /// Every user at a constant demand level.
+    Constant { users: usize, level: u32, slots: usize },
+    /// Demands spelled out in the spec (one array per user).
+    Inline { demands: Vec<Vec<u32>> },
+    /// A `gen-traces` CSV/BIN file; `slots` bounds CSV parsing.
+    File { path: String, slots: usize },
+}
+
+impl TraceSpec {
+    fn build(&self) -> Result<Population> {
+        match self {
+            TraceSpec::Synthetic { users, slots, seed } => {
+                Ok(crate::trace::synth::generate(&crate::trace::synth::SynthConfig {
+                    users: *users,
+                    slots: *slots,
+                    seed: *seed,
+                    ..Default::default()
+                }))
+            }
+            TraceSpec::Constant { users, level, slots } => Ok(Population {
+                users: (0..*users)
+                    .map(|u| UserTrace::new(u as u32, vec![*level; *slots]))
+                    .collect(),
+            }),
+            TraceSpec::Inline { demands } => Ok(Population {
+                users: demands
+                    .iter()
+                    .enumerate()
+                    .map(|(u, d)| UserTrace::new(u as u32, d.clone()))
+                    .collect(),
+            }),
+            TraceSpec::File { path, slots } => {
+                let p = std::path::Path::new(path);
+                if p.extension().map(|e| e == "csv").unwrap_or(false) {
+                    crate::trace::io::read_csv(p, *slots)
+                } else {
+                    crate::trace::io::read_bin(p)
+                }
+            }
+        }
+    }
+}
+
+/// A parsed, validated scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: Option<String>,
+    pub market: Market,
+    /// Contracts removed by dominance pruning at parse time.
+    pub pruned_contracts: usize,
+    pub trace: TraceSpec,
+    pub policies: Vec<PolicySpec>,
+    pub offline: bool,
+}
+
+impl ScenarioSpec {
+    /// Parse and validate a spec document (see the module docs for the
+    /// schema). Errors are actionable (`field: problem`).
+    pub fn from_json(doc: &Json) -> Result<ScenarioSpec> {
+        let name = doc
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("spec: missing string field 'name'"))?
+            .to_string();
+        let description = doc.get("description").as_str().map(|s| s.to_string());
+
+        // --- market ---
+        let mj = doc.get("market");
+        let p = mj
+            .get("on_demand")
+            .as_f64()
+            .ok_or_else(|| anyhow!("market: missing number 'on_demand'"))?;
+        ensure!(p > 0.0, "market.on_demand must be positive");
+        let cj = mj
+            .get("contracts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("market: missing array 'contracts'"))?;
+        let mut entries = Vec::with_capacity(cj.len());
+        for (i, c) in cj.iter().enumerate() {
+            let label = c
+                .get("label")
+                .as_str()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("c{i}"));
+            let upfront = c
+                .get("upfront")
+                .as_f64()
+                .ok_or_else(|| anyhow!("contract '{label}': missing number 'upfront'"))?;
+            let rate = c
+                .get("rate")
+                .as_f64()
+                .ok_or_else(|| anyhow!("contract '{label}': missing number 'rate'"))?;
+            let term = c
+                .get("term")
+                .as_usize()
+                .filter(|&t| t >= 1)
+                .ok_or_else(|| anyhow!("contract '{label}': missing positive integer 'term'"))?;
+            ensure!(upfront > 0.0, "contract '{label}': upfront must be positive");
+            ensure!(rate >= 0.0, "contract '{label}': rate must be non-negative");
+            ensure!(rate <= p, "contract '{label}': rate {rate} exceeds on-demand rate {p}");
+            entries.push((label, Contract { upfront, rate, term }));
+        }
+        let n_input = entries.len();
+        let market = Market::with_labels(p, entries);
+        let pruned_contracts = n_input - market.len();
+
+        // --- trace ---
+        let tj = doc.get("trace");
+        let kind = tj.get("kind").as_str().unwrap_or("synthetic");
+        let trace = match kind {
+            "synthetic" => TraceSpec::Synthetic {
+                users: tj.get("users").as_usize().unwrap_or(50),
+                slots: tj.get("slots").as_usize().unwrap_or(5000),
+                seed: tj.get("seed").as_f64().unwrap_or(2013.0) as u64,
+            },
+            "constant" => TraceSpec::Constant {
+                users: tj.get("users").as_usize().unwrap_or(1),
+                level: tj.get("level").as_usize().unwrap_or(1) as u32,
+                slots: tj
+                    .get("slots")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("trace(constant): missing integer 'slots'"))?,
+            },
+            "inline" => {
+                let rows = tj
+                    .get("demands")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("trace(inline): missing array 'demands'"))?;
+                let mut demands = Vec::with_capacity(rows.len());
+                for (u, row) in rows.iter().enumerate() {
+                    let row = row
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("trace(inline): demands[{u}] is not an array"))?;
+                    demands.push(
+                        row.iter()
+                            .map(|d| {
+                                d.as_f64()
+                                    .filter(|x| *x >= 0.0)
+                                    .map(|x| x as u32)
+                                    .ok_or_else(|| anyhow!("trace(inline): bad demand in row {u}"))
+                            })
+                            .collect::<Result<Vec<u32>>>()?,
+                    );
+                }
+                ensure!(!demands.is_empty(), "trace(inline): at least one user row required");
+                TraceSpec::Inline { demands }
+            }
+            "file" => TraceSpec::File {
+                path: tj
+                    .get("path")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("trace(file): missing string 'path'"))?
+                    .to_string(),
+                slots: tj.get("slots").as_usize().unwrap_or(crate::trace::TRACE_SLOTS),
+            },
+            other => bail!("trace: unknown kind '{other}' (synthetic|constant|inline|file)"),
+        };
+
+        // --- policies ---
+        let seed = doc.get("seed").as_f64().unwrap_or(1.0) as u64;
+        let window = doc.get("window").as_usize().unwrap_or(0);
+        let pj = doc.get("policies");
+        let mut policies = Vec::new();
+        match pj.as_arr() {
+            None => {
+                for spec in crate::sim::fleet::suite_specs(seed) {
+                    policies.push(spec);
+                }
+            }
+            Some(items) => {
+                for item in items {
+                    let (kind, z, w) = match (item.as_str(), item.as_obj()) {
+                        (Some(s), _) => (s.to_string(), None, None),
+                        (None, Some(_)) => (
+                            item.get("policy")
+                                .as_str()
+                                .ok_or_else(|| anyhow!("policies: object needs 'policy'"))?
+                                .to_string(),
+                            item.get("z").as_f64(),
+                            item.get("window").as_usize(),
+                        ),
+                        _ => bail!("policies: entries must be strings or objects"),
+                    };
+                    let spec = match kind.as_str() {
+                        "all-on-demand" => PolicySpec::AllOnDemand,
+                        "all-reserved" => PolicySpec::AllReserved,
+                        "separate" => PolicySpec::Separate,
+                        "deterministic" => {
+                            PolicySpec::Deterministic { z, window: w.unwrap_or(window) }
+                        }
+                        "randomized" => {
+                            PolicySpec::Randomized { window: w.unwrap_or(window), seed }
+                        }
+                        other => bail!(
+                            "policies: unknown policy '{other}' \
+                             (all-on-demand|all-reserved|separate|deterministic|randomized)"
+                        ),
+                    };
+                    policies.push(spec);
+                }
+            }
+        }
+        ensure!(!policies.is_empty(), "policies: at least one policy required");
+        if !market.is_single() {
+            for spec in &policies {
+                let bad = matches!(
+                    spec,
+                    PolicySpec::Deterministic { z: Some(_), .. }
+                        | PolicySpec::Deterministic { window: 1.., .. }
+                        | PolicySpec::Randomized { window: 1.., .. }
+                );
+                ensure!(
+                    !bad,
+                    "policy '{}': custom z / prediction windows need a single-contract market",
+                    spec.name()
+                );
+            }
+        }
+
+        let offline = matches!(*doc.get("offline"), Json::Bool(true));
+        Ok(ScenarioSpec {
+            name,
+            description,
+            market,
+            pruned_contracts,
+            trace,
+            policies,
+            offline,
+        })
+    }
+}
+
+/// One policy's scenario-level outcome.
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub name: String,
+    pub mean_normalized: f64,
+    pub total_cost: f64,
+    pub reservations: u64,
+}
+
+/// Offline comparator (single-user traces only).
+#[derive(Debug, Clone)]
+pub struct OfflineOutcome {
+    /// Best restricted offline cost (per-contract exact DP ∪ on-demand).
+    pub cost: f64,
+    pub reservations: u64,
+    /// Which contract the best schedule commits to (`None` = on-demand).
+    pub contract: Option<usize>,
+    /// Contracts skipped as DP-intractable.
+    pub skipped: usize,
+}
+
+/// The complete scenario result.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub users: usize,
+    pub slots: usize,
+    pub market_contracts: usize,
+    pub pruned_contracts: usize,
+    pub alpha_max: f64,
+    /// `2 − α_max`: the empirical comparison bound reported next to the
+    /// deterministic ratio.
+    pub ratio_bound: f64,
+    pub policies: Vec<PolicyOutcome>,
+    pub offline: Option<OfflineOutcome>,
+    /// Deterministic-policy cost / offline cost, when both are present.
+    pub deterministic_ratio: Option<f64>,
+}
+
+impl ScenarioReport {
+    /// Machine-readable report (`cloudreserve-scenario/v1`).
+    pub fn to_json(&self) -> Json {
+        let policies = self
+            .policies
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::Str(p.name.clone())),
+                    ("mean_normalized", Json::Num(p.mean_normalized)),
+                    ("total_cost", Json::Num(p.total_cost)),
+                    ("reservations", Json::Num(p.reservations as f64)),
+                ])
+            })
+            .collect();
+        let offline = match &self.offline {
+            None => Json::Null,
+            Some(o) => Json::obj(vec![
+                ("cost", Json::Num(o.cost)),
+                ("reservations", Json::Num(o.reservations as f64)),
+                (
+                    "contract",
+                    o.contract.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null),
+                ),
+                ("skipped", Json::Num(o.skipped as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("schema", Json::Str("cloudreserve-scenario/v1".into())),
+            ("name", Json::Str(self.name.clone())),
+            ("users", Json::Num(self.users as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("market_contracts", Json::Num(self.market_contracts as f64)),
+            ("pruned_contracts", Json::Num(self.pruned_contracts as f64)),
+            ("alpha_max", Json::Num(self.alpha_max)),
+            ("ratio_bound", Json::Num(self.ratio_bound)),
+            ("policies", Json::Arr(policies)),
+            ("offline", offline),
+            (
+                "deterministic_ratio",
+                self.deterministic_ratio.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "scenario '{}': {} users x {} slots, menu of {} contract(s) ({} pruned), alpha_max {:.4}\n",
+            self.name,
+            self.users,
+            self.slots,
+            self.market_contracts,
+            self.pruned_contracts,
+            self.alpha_max
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>16} {:>14} {:>14}\n",
+            "policy", "mean normalized", "total cost", "reservations"
+        ));
+        for p in &self.policies {
+            out.push_str(&format!(
+                "{:<28} {:>16.4} {:>14.4} {:>14}\n",
+                p.name, p.mean_normalized, p.total_cost, p.reservations
+            ));
+        }
+        if let Some(o) = &self.offline {
+            out.push_str(&format!(
+                "offline (best single contract): cost {:.4}, {} reservations{}{}\n",
+                o.cost,
+                o.reservations,
+                match o.contract {
+                    Some(c) => format!(", commits to contract {c}"),
+                    None => ", pure on-demand".to_string(),
+                },
+                if o.skipped > 0 {
+                    format!(" ({} contract(s) DP-intractable, skipped)", o.skipped)
+                } else {
+                    String::new()
+                }
+            ));
+        }
+        if let Some(r) = self.deterministic_ratio {
+            out.push_str(&format!(
+                "deterministic / offline ratio: {:.4} (comparison bound 2 - alpha_max = {:.4})\n",
+                r, self.ratio_bound
+            ));
+        }
+        out
+    }
+}
+
+/// Run a scenario: build the trace, replay every policy through the
+/// batched engine, optionally solve the offline comparator.
+pub fn run(spec: &ScenarioSpec, threads: usize) -> Result<ScenarioReport> {
+    let pop = spec.trace.build().context("building scenario trace")?;
+    ensure!(!pop.users.is_empty(), "scenario trace has no users");
+    let slots = pop.users.iter().map(|u| u.demand.len()).max().unwrap_or(0);
+    let flat = FlatPopulation::from(&pop);
+
+    let mut outcomes = Vec::with_capacity(spec.policies.len());
+    let mut det_total: Option<f64> = None;
+    for pspec in &spec.policies {
+        let res: FleetResult = run_fleet_flat(&flat, &spec.market, pspec, threads);
+        if det_total.is_none()
+            && matches!(pspec, PolicySpec::Deterministic { z: None, window: 0 })
+        {
+            det_total = Some(res.total_cost());
+        }
+        outcomes.push(PolicyOutcome {
+            name: res.policy.clone(),
+            mean_normalized: res.mean_normalized(None),
+            total_cost: res.total_cost(),
+            reservations: res.total_reservations(),
+        });
+    }
+
+    let offline_outcome = if spec.offline && pop.users.len() == 1 {
+        let sol = offline::optimal_market(&pop.users[0].demand, &spec.market);
+        sol.best.map(|(contract, s)| OfflineOutcome {
+            cost: s.cost,
+            reservations: s.reservations,
+            contract,
+            skipped: sol.skipped.len(),
+        })
+    } else {
+        None
+    };
+
+    let deterministic_ratio = match (&offline_outcome, det_total) {
+        (Some(o), Some(det)) if o.cost > 0.0 => Some(det / o.cost),
+        _ => None,
+    };
+
+    let alpha_max = spec.market.alpha_max();
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        users: pop.users.len(),
+        slots,
+        market_contracts: spec.market.len(),
+        pruned_contracts: spec.pruned_contracts,
+        alpha_max,
+        ratio_bound: 2.0 - alpha_max,
+        policies: outcomes,
+        offline: offline_outcome,
+        deterministic_ratio,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn two_term_spec_text() -> &'static str {
+        r#"{
+          "name": "unit-two-term",
+          "market": {
+            "on_demand": 0.08,
+            "contracts": [
+              {"label": "1yr", "upfront": 0.2, "rate": 0.039, "term": 6},
+              {"label": "3yr", "upfront": 0.45, "rate": 0.031, "term": 18}
+            ]
+          },
+          "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 120},
+          "policies": ["all-on-demand", "deterministic", "randomized"],
+          "seed": 1,
+          "offline": true
+        }"#
+    }
+
+    #[test]
+    fn parses_and_runs_two_term_scenario() {
+        let spec = ScenarioSpec::from_json(&parse(two_term_spec_text()).unwrap()).unwrap();
+        assert_eq!(spec.market.len(), 2);
+        assert_eq!(spec.pruned_contracts, 0);
+        assert!((spec.market.alpha_max() - 0.4875).abs() < 1e-12);
+        let report = run(&spec, 2).unwrap();
+        assert_eq!(report.users, 1);
+        assert_eq!(report.slots, 120);
+        assert_eq!(report.policies.len(), 3);
+        // all-on-demand normalizes to exactly 1
+        assert!((report.policies[0].mean_normalized - 1.0).abs() < 1e-9);
+        // offline solved, deterministic committed at least once, and the
+        // ratio respects the 2 - alpha_max comparison bound
+        let off = report.offline.as_ref().expect("offline DP ran");
+        assert!(off.cost > 0.0);
+        assert!(report.policies[1].reservations >= 1);
+        let ratio = report.deterministic_ratio.expect("ratio computed");
+        assert!(
+            ratio <= report.ratio_bound + 1e-9,
+            "ratio {ratio} exceeds bound {}",
+            report.ratio_bound
+        );
+        // JSON report round-trips through the parser
+        let text = report.to_json().dump_pretty();
+        let back = parse(&text).unwrap();
+        assert_eq!(back.get("schema").as_str(), Some("cloudreserve-scenario/v1"));
+        assert_eq!(back.get("policies").as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn rejects_windows_on_multi_contract_markets() {
+        let text = r#"{
+          "name": "bad",
+          "market": {"on_demand": 0.08, "contracts": [
+            {"upfront": 0.2, "rate": 0.039, "term": 6},
+            {"upfront": 0.45, "rate": 0.031, "term": 18}
+          ]},
+          "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 10},
+          "policies": ["deterministic"],
+          "window": 4
+        }"#;
+        let err = ScenarioSpec::from_json(&parse(text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("single-contract"));
+    }
+
+    #[test]
+    fn rejects_unknown_policy() {
+        let text = r#"{
+          "name": "bad",
+          "market": {"on_demand": 0.1, "contracts": [
+            {"upfront": 0.5, "rate": 0.01, "term": 10}
+          ]},
+          "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 10},
+          "policies": ["magic"]
+        }"#;
+        assert!(ScenarioSpec::from_json(&parse(text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn inline_trace_and_default_policies() {
+        let text = r#"{
+          "name": "inline",
+          "market": {"on_demand": 0.1, "contracts": [
+            {"upfront": 0.4, "rate": 0.02, "term": 8}
+          ]},
+          "trace": {"kind": "inline", "demands": [[1, 2, 0, 1], [0, 0, 1, 1]]}
+        }"#;
+        let spec = ScenarioSpec::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(spec.policies.len(), 5);
+        let report = run(&spec, 1).unwrap();
+        assert_eq!(report.users, 2);
+        assert_eq!(report.slots, 4);
+        assert!(report.offline.is_none());
+    }
+}

@@ -1,23 +1,43 @@
 //! Golden-parity property test: the batched zero-allocation fleet engine
 //! must produce **bit-identical** `CostReport`-derived results to the seed
 //! per-user `run_policy` path — across random populations, seeds, thread
-//! counts, and every Sec. VII policy (plus prediction-window variants).
+//! counts, and every Sec. VII policy (plus prediction-window variants and
+//! multi-contract menus).
 //!
 //! Three independent oracles are compared:
 //! 1. `run_fleet` — the batched engine over the columnar store,
 //! 2. `run_fleet_reference` — the seed strided `mpsc` + `Box<dyn Policy>`
 //!    runner, kept verbatim,
-//! 3. a direct single-user `run_policy` replay (no fleet machinery at all).
+//! 3. a direct single-user `run_policy_market` replay (no fleet machinery
+//!    at all).
+//!
+//! The single-contract market here is `Market::single(...)` — the v2 fast
+//! path whose arithmetic must stay bit-identical to the pre-redesign
+//! `Pricing` path (same ops, same order; pinned by the exact-constant
+//! ledger/policy unit tests).
 
-use cloudreserve::pricing::Pricing;
+use cloudreserve::pricing::{Contract, Market, Pricing};
 use cloudreserve::sim::fleet::{run_fleet, run_fleet_reference, suite_specs, FleetResult, PolicySpec};
-use cloudreserve::sim::run_policy;
+use cloudreserve::sim::run_policy_market;
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::trace::Population;
 
-fn pricing() -> Pricing {
+fn market() -> Market {
     // compressed EC2 small, tau sized to the short test traces
-    Pricing::normalized(0.08 / 69.0, 0.4875, 1000)
+    Market::single(Pricing::normalized(0.08 / 69.0, 0.4875, 1000))
+}
+
+fn menu_market() -> Market {
+    // two-term menu with break-evens that fire inside the short traces
+    let m = Market::new(
+        0.01,
+        vec![
+            Contract { upfront: 1.0, rate: 0.004, term: 600 },
+            Contract { upfront: 1.5, rate: 0.002, term: 1800 },
+        ],
+    );
+    assert_eq!(m.len(), 2);
+    m
 }
 
 fn assert_bit_identical(a: &FleetResult, b: &FleetResult, what: &str) {
@@ -60,10 +80,10 @@ fn engine_matches_reference_across_populations_seeds_and_threads() {
     for (pop_seed, users, slots) in [(1u64, 10usize, 1500usize), (2013, 14, 1000)] {
         let pop = generate(&SynthConfig { users, slots, seed: pop_seed, ..Default::default() });
         for spec in specs_under_test(pop_seed ^ 0xA5) {
-            let engine_1t = run_fleet(&pop, pricing(), &spec, 1);
+            let engine_1t = run_fleet(&pop, &market(), &spec, 1);
             for threads in [4usize, 11] {
-                let engine = run_fleet(&pop, pricing(), &spec, threads);
-                let reference = run_fleet_reference(&pop, pricing(), &spec, threads);
+                let engine = run_fleet(&pop, &market(), &spec, threads);
+                let reference = run_fleet_reference(&pop, &market(), &spec, threads);
                 let what = format!("{} pop_seed={pop_seed} threads={threads}", spec.name());
                 assert_bit_identical(&engine, &reference, &what);
                 assert_bit_identical(&engine, &engine_1t, &format!("{what} vs 1-thread"));
@@ -73,22 +93,54 @@ fn engine_matches_reference_across_populations_seeds_and_threads() {
 }
 
 #[test]
+fn engine_matches_reference_on_multi_contract_menus() {
+    // The menu policies (MarketDeterministic / MarketRandomized / pinned
+    // baselines) must replay identically through the monomorphic engine
+    // and the boxed reference path, across thread counts.
+    let mkt = menu_market();
+    let pop = generate(&SynthConfig { users: 12, slots: 1500, seed: 7, ..Default::default() });
+    for spec in suite_specs(0x51) {
+        let engine_1t = run_fleet(&pop, &mkt, &spec, 1);
+        for threads in [3usize, 9] {
+            let engine = run_fleet(&pop, &mkt, &spec, threads);
+            let reference = run_fleet_reference(&pop, &mkt, &spec, threads);
+            let what = format!("menu {} threads={threads}", spec.name());
+            assert_bit_identical(&engine, &reference, &what);
+            assert_bit_identical(&engine, &engine_1t, &format!("{what} vs 1-thread"));
+        }
+    }
+    // sanity: the menu deterministic policy actually commits on these
+    // traces (the parity above is not vacuously about zero reservations)
+    let det = run_fleet(&pop, &mkt, &PolicySpec::Deterministic { z: None, window: 0 }, 4);
+    assert!(
+        det.per_user.iter().any(|u| u.reservations > 0),
+        "expected at least one menu reservation across the population"
+    );
+}
+
+#[test]
 fn engine_matches_direct_run_policy_per_user() {
     let pop = generate(&SynthConfig { users: 12, slots: 2000, seed: 5, ..Default::default() });
-    for spec in specs_under_test(9) {
-        let fleet = run_fleet(&pop, pricing(), &spec, 4);
-        for (u, got) in pop.users.iter().zip(&fleet.per_user) {
-            let mut policy = spec.build(pricing(), u.user_id);
-            let want = run_policy(policy.as_mut(), &u.demand, pricing()).unwrap();
-            assert_eq!(got.user_id, u.user_id);
-            assert_eq!(
-                got.absolute_cost.to_bits(),
-                want.total.to_bits(),
-                "{}: user {}",
-                spec.name(),
-                u.user_id
-            );
-            assert_eq!(got.reservations, want.reservations);
+    for (mkt, specs) in [
+        (market(), specs_under_test(9)),
+        (menu_market(), suite_specs(9).to_vec()),
+    ] {
+        for spec in specs {
+            let fleet = run_fleet(&pop, &mkt, &spec, 4);
+            for (u, got) in pop.users.iter().zip(&fleet.per_user) {
+                let mut policy = spec.build(&mkt, u.user_id);
+                let want = run_policy_market(policy.as_mut(), &u.demand, &mkt).unwrap();
+                assert_eq!(got.user_id, u.user_id);
+                assert_eq!(
+                    got.absolute_cost.to_bits(),
+                    want.total.to_bits(),
+                    "{}: user {} (menu k={})",
+                    spec.name(),
+                    u.user_id,
+                    mkt.len()
+                );
+                assert_eq!(got.reservations, want.reservations);
+            }
         }
     }
 }
@@ -97,7 +149,7 @@ fn engine_matches_direct_run_policy_per_user() {
 fn engine_handles_degenerate_populations() {
     // zero users, zero-demand users, and single-slot traces
     let empty = Population::default();
-    let r = run_fleet(&empty, pricing(), &PolicySpec::AllOnDemand, 8);
+    let r = run_fleet(&empty, &market(), &PolicySpec::AllOnDemand, 8);
     assert!(r.per_user.is_empty());
 
     let degenerate = Population {
@@ -107,12 +159,14 @@ fn engine_handles_degenerate_populations() {
             cloudreserve::trace::UserTrace::new(2, vec![]),
         ],
     };
-    for spec in suite_specs(3) {
-        let engine = run_fleet(&degenerate, pricing(), &spec, 2);
-        let reference = run_fleet_reference(&degenerate, pricing(), &spec, 2);
-        assert_bit_identical(&engine, &reference, &spec.name());
-        // zero-demand users normalize to exactly 1.0 on both paths
-        assert_eq!(engine.per_user[0].normalized_cost, 1.0, "{}", spec.name());
-        assert_eq!(engine.per_user[2].normalized_cost, 1.0, "{}", spec.name());
+    for mkt in [market(), menu_market()] {
+        for spec in suite_specs(3) {
+            let engine = run_fleet(&degenerate, &mkt, &spec, 2);
+            let reference = run_fleet_reference(&degenerate, &mkt, &spec, 2);
+            assert_bit_identical(&engine, &reference, &spec.name());
+            // zero-demand users normalize to exactly 1.0 on both paths
+            assert_eq!(engine.per_user[0].normalized_cost, 1.0, "{}", spec.name());
+            assert_eq!(engine.per_user[2].normalized_cost, 1.0, "{}", spec.name());
+        }
     }
 }

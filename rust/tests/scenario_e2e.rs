@@ -1,0 +1,78 @@
+//! End-to-end test of the committed multi-contract scenario spec
+//! (`examples/scenarios/table1_two_term.json`): parse → run through the
+//! batched engine → verify the acceptance contract — two Table I terms on
+//! the menu, every policy feasible, and the deterministic menu policy's
+//! cost within `2 − α_max` of the restricted offline DP on the same trace.
+
+use cloudreserve::sim::scenario::{self, ScenarioSpec};
+use cloudreserve::util::json::parse;
+
+fn load_spec() -> ScenarioSpec {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/scenarios/table1_two_term.json"
+    );
+    let text = std::fs::read_to_string(path).expect("committed scenario spec readable");
+    ScenarioSpec::from_json(&parse(&text).expect("spec is valid JSON")).expect("spec parses")
+}
+
+#[test]
+fn committed_two_term_scenario_meets_the_ratio_bound() {
+    let spec = load_spec();
+    assert_eq!(spec.market.len(), 2, "two Table I terms on the menu");
+    assert_eq!(spec.pruned_contracts, 0);
+    assert!((spec.market.alpha_max() - 0.4875).abs() < 1e-12);
+    assert!(spec.offline);
+
+    let report = scenario::run(&spec, 2).expect("scenario runs end-to-end");
+    assert_eq!(report.users, 1);
+    assert_eq!(report.slots, 120);
+    assert_eq!(report.policies.len(), 5);
+
+    // All-on-demand is the normalization anchor.
+    let od = &report.policies[0];
+    assert!(od.name.contains("on-demand"));
+    assert!((od.mean_normalized - 1.0).abs() < 1e-9);
+
+    // The deterministic menu policy must commit and save versus on-demand.
+    let det = report
+        .policies
+        .iter()
+        .find(|p| p.name.starts_with("Deterministic"))
+        .expect("deterministic policy in the suite");
+    assert!(det.reservations >= 1, "stable demand must trigger reservations");
+    assert!(det.mean_normalized < 1.0, "deterministic saves vs on-demand: {}", det.mean_normalized);
+
+    // Acceptance: deterministic cost <= (2 - alpha_max) * offline DP cost.
+    let offline = report.offline.as_ref().expect("single-user trace solves the offline DP");
+    assert!(offline.cost > 0.0);
+    assert_eq!(offline.skipped, 0, "both compressed terms are DP-tractable");
+    let ratio = report.deterministic_ratio.expect("ratio computed");
+    assert!((report.ratio_bound - (2.0 - 0.4875)).abs() < 1e-12);
+    assert!(
+        ratio <= report.ratio_bound + 1e-9,
+        "deterministic/offline ratio {ratio} exceeds 2 - alpha_max = {}",
+        report.ratio_bound
+    );
+
+    // On stable unit demand the offline optimum commits to the deeper
+    // (better steady-state) 3-year contract.
+    assert_eq!(offline.contract, Some(1));
+}
+
+#[test]
+fn scenario_json_report_shape_is_stable() {
+    let spec = load_spec();
+    let report = scenario::run(&spec, 1).expect("scenario runs");
+    let doc = report.to_json();
+    assert_eq!(doc.get("schema").as_str(), Some("cloudreserve-scenario/v1"));
+    assert_eq!(doc.get("market_contracts").as_usize(), Some(2));
+    assert_eq!(doc.get("policies").as_arr().map(|a| a.len()), Some(5));
+    assert!(doc.get("deterministic_ratio").as_f64().is_some());
+    assert!(doc.get("ratio_bound").as_f64().is_some());
+    assert!(doc.get("offline").get("cost").as_f64().is_some());
+    // serialized text re-parses
+    let text = doc.dump_pretty();
+    let back = parse(&text).unwrap();
+    assert_eq!(&back, &doc);
+}
