@@ -87,7 +87,9 @@ fn main() -> anyhow::Result<()> {
             counts[gi] += 1;
         }
         let row: [f64; 4] =
-            std::array::from_fn(|j| if counts[j] > 0 { sums[j] / counts[j] as f64 } else { f64::NAN });
+            std::array::from_fn(
+                |j| if counts[j] > 0 { sums[j] / counts[j] as f64 } else { f64::NAN },
+            );
         println!(
             "{z:>8.3} {:>9.2} {:>10.4} {:>10.4} {:>10.4} {:>10.4}",
             z / beta,

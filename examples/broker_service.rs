@@ -33,7 +33,9 @@ fn main() -> anyhow::Result<()> {
     let engine = {
         let dir = args.str_or("artifacts", "artifacts");
         if std::path::Path::new(&dir).join("manifest.json").exists() {
-            let rt = cloudreserve::runtime::Runtime::load_filtered(&dir, |n| n.starts_with("fleet_step"))?;
+            let rt = cloudreserve::runtime::Runtime::load_filtered(&dir, |n| {
+                n.starts_with("fleet_step")
+            })?;
             eprintln!("analytics on PJRT {} ({:?})", rt.platform(), rt.names());
             Some(AnalyticsEngine::new(rt, pricing, 16, 128))
         } else {
@@ -42,7 +44,8 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    let pop = generate(&SynthConfig { users, slots, seed: args.u64_or("seed", 77), ..Default::default() });
+    let seed = args.u64_or("seed", 77);
+    let pop = generate(&SynthConfig { users, slots, seed, ..Default::default() });
     let t0 = std::time::Instant::now();
     for t in 0..slots {
         for u in &pop.users {

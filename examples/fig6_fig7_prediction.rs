@@ -43,7 +43,8 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    for (fig, randomized) in [("Fig. 6 (deterministic A^w_beta)", false), ("Fig. 7 (randomized A^w_z)", true)] {
+    let figs = [("Fig. 6 (deterministic A^w_beta)", false), ("Fig. 7 (randomized A^w_z)", true)];
+    for (fig, randomized) in figs {
         eprintln!("computing {fig}...");
         // per window: per-user cost normalized to the online counterpart
         let mut series: Vec<CostSeries> = Vec::new();
@@ -66,7 +67,9 @@ fn main() -> anyhow::Result<()> {
                 sums[gi] += v;
                 counts[gi] += 1;
             }
-            let means = std::array::from_fn(|i| if counts[i] > 0 { sums[i] / counts[i] as f64 } else { f64::NAN });
+            let means = std::array::from_fn(
+                |i| if counts[i] > 0 { sums[i] / counts[i] as f64 } else { f64::NAN },
+            );
             group_means.push((format!("w={w} slots (~{} months)", w / month.max(1)), means));
             series.push(CostSeries {
                 name: format!("w={w}"),

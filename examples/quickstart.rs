@@ -79,12 +79,15 @@ fn main() -> anyhow::Result<()> {
     // The L1/L2 layers: one fleet-analytics batch through the AOT artifact.
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.json").exists() {
-        let rt = cloudreserve::runtime::Runtime::load_filtered(dir, |n| n.starts_with("fleet_step_b8"))?;
+        let rt = cloudreserve::runtime::Runtime::load_filtered(dir, |n| {
+            n.starts_with("fleet_step_b8")
+        })?;
         // 1 user, last-64-slot window, never-covered demand
         let window = 64;
         let tail: Vec<f32> = demand[..window].iter().map(|&d| d as f32).collect();
         let coverage = vec![0.0f32; window];
-        let out = rt.fleet_step(pricing.p, &tail, &coverage, 1, window, &[0.0, pricing.beta() as f32])?;
+        let z_probe = [0.0, pricing.beta() as f32];
+        let out = rt.fleet_step(pricing.p, &tail, &coverage, 1, window, &z_probe)?;
         println!(
             "\nPJRT analytics (platform {}): window violations = {}, A_0 would reserve: {}, A_beta would reserve: {}",
             rt.platform(),

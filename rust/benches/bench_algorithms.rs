@@ -33,7 +33,10 @@ fn main() {
         ("all_reserved", Box::new(move || Box::new(AllReserved::new(pricing)))),
         ("separate", Box::new(move || Box::new(Separate::new(pricing)))),
         ("deterministic_beta", Box::new(move || Box::new(Deterministic::online(pricing)))),
-        ("deterministic_w720", Box::new(move || Box::new(Deterministic::with_window(pricing, 720)))),
+        (
+            "deterministic_w720",
+            Box::new(move || Box::new(Deterministic::with_window(pricing, 720))),
+        ),
         ("randomized", Box::new(move || Box::new(Randomized::online(pricing, 7)))),
     ];
     println!("== policy step throughput (tau=8760, {slots} slots, group-2 demand) ==");

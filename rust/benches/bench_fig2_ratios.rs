@@ -14,7 +14,10 @@ fn main() {
     let p = 0.004;
     let samples = 800u64;
     println!("== Fig. 2 series: competitive ratio vs alpha ==");
-    println!("{:>6} {:>10} {:>12} {:>12} {:>12}", "alpha", "2-a", "det(meas)", "e/(e-1+a)", "rand(meas@beta)");
+    println!(
+        "{:>6} {:>10} {:>12} {:>12} {:>12}",
+        "alpha", "2-a", "det(meas)", "e/(e-1+a)", "rand(meas@beta)"
+    );
     let t0 = std::time::Instant::now();
     for i in 0..10 {
         let alpha = i as f64 / 10.0;

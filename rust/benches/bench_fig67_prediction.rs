@@ -31,7 +31,13 @@ fn main() {
             "{:<16} {:>12} {:>12} {:>12}",
             "window", "mean(norm)", "wall", "vs w=0 wall"
         );
-        println!("{:<16} {:>12.4} {:>12} {:>12}", "w=0", 1.0, fmt_ns(base_dt.as_nanos() as f64), "1.00x");
+        println!(
+            "{:<16} {:>12.4} {:>12} {:>12}",
+            "w=0",
+            1.0,
+            fmt_ns(base_dt.as_nanos() as f64),
+            "1.00x"
+        );
         for m in 1..=3usize {
             let w = m * month;
             let spec = if randomized {

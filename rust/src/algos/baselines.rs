@@ -75,7 +75,11 @@ struct Level {
 
 impl Level {
     fn new() -> Level {
-        Level { scan: WindowScan::new(), cover: ResQueue::default(), scan_res: std::collections::VecDeque::new() }
+        Level {
+            scan: WindowScan::new(),
+            cover: ResQueue::default(),
+            scan_res: std::collections::VecDeque::new(),
+        }
     }
 }
 
@@ -157,7 +161,11 @@ mod tests {
     use super::*;
     use crate::ledger::Ledger;
 
-    fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> crate::ledger::CostReport {
+    fn run(
+        policy: &mut dyn Policy,
+        demands: &[u32],
+        pricing: Pricing,
+    ) -> crate::ledger::CostReport {
         let mut ledger = Ledger::single(pricing);
         for &d in demands {
             let dec = policy.decide(d, &[]);

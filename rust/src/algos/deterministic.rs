@@ -96,7 +96,11 @@ impl Deterministic {
 impl Policy for Deterministic {
     fn name(&self) -> String {
         let beta = self.pricing.beta();
-        let kind = if (self.z - beta).abs() < 1e-12 { "beta".to_string() } else { format!("z={:.3}", self.z) };
+        let kind = if (self.z - beta).abs() < 1e-12 {
+            "beta".to_string()
+        } else {
+            format!("z={:.3}", self.z)
+        };
         if self.w == 0 {
             format!("Deterministic({kind})")
         } else {
@@ -166,7 +170,11 @@ mod tests {
     }
 
     /// Run a policy over demands, bill through the ledger, return report.
-    fn run(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> crate::ledger::CostReport {
+    fn run(
+        policy: &mut dyn Policy,
+        demands: &[u32],
+        pricing: Pricing,
+    ) -> crate::ledger::CostReport {
         let w = policy.window();
         let mut ledger = Ledger::single(pricing);
         for t in 0..demands.len() {

@@ -6,10 +6,7 @@
 //!   contract `j` keeps its own break-even window scan (window `term_j`,
 //!   threshold `β_j`); when some contract's window shows unjustified
 //!   on-demand spend past its break-even, the policy commits to the
-//!   triggered contract with the best steady-state cost per slot. A
-//!   reservation of *any* contract compensates *every* scan (the uniform-
-//!   increment phantom bookkeeping of [`WindowScan`]), so cross-contract
-//!   double-charging of the same usage is impossible.
+//!   triggered contract with the best steady-state cost per slot.
 //! * [`MarketRandomized`] — the same machinery with per-contract
 //!   thresholds `z_j` drawn from the Eq. 24 density (scaled by each
 //!   contract's fee), generalizing Algorithm 2.
@@ -17,24 +14,45 @@
 //!   one designated contract of a multi-contract market (used for the
 //!   All-reserved / Separate baselines in scenario reports).
 //!
-//! With a single-contract menu, [`MarketDeterministic`] *is* Algorithm 1:
-//! same scan updates, same trigger condition, same coverage accounting —
-//! asserted bit-identically against [`Deterministic`](super::deterministic::Deterministic)
-//! in the tests below and in `rust/tests/market_props.rs`. Competitive
-//! guarantees for true multi-contract menus are open (the paper leaves the
-//! theory to future work); reports compare against `2 − α_max` empirically.
+//! # Cross-tier spend accounting
 //!
-//! **Known limitation (inherited from the `multislope` sketch):** because
-//! every purchase compensates *every* scan, a deeper contract whose
-//! break-even sits above a shallower one's can never accumulate enough
-//! violations to trigger — each shallow purchase resets it. On menus where
-//! the shallow contract fires first (e.g. the committed
-//! `table1_two_term` scenario), the policy therefore behaves like the
-//! shallow-only Algorithm 1 even when the offline optimum commits deep; it
-//! still satisfies the `2 − α_max` comparison, but leaves the deep
-//! contract's savings on the table. Fixing this needs spend-accounting
-//! across tiers (count shallow fees as spend inside deeper windows) — a
-//! ROADMAP open item, not attempted here.
+//! Each contract's [`WindowScan`] tracks its *own* uncompensated on-demand
+//! spend: a purchase of contract `c` compensates only the scans whose
+//! break-even its fee actually covers (`β_i ≤ β_c`). A deeper contract
+//! (higher break-even) therefore keeps accumulating the spend that cheaper
+//! purchases left unjustified, and eventually triggers under sustained
+//! demand — the former implementation compensated *every* scan on *every*
+//! purchase, which let a shallow contract permanently shadow a deeper one
+//! (the `table1_two_term` scenario used to commit shallow-only). A slot
+//! already covered by an active reservation of *any* contract **at
+//! insertion time** enters every scan as compensated (no on-demand spend
+//! can happen there), so served usage is never double-charged. Coverage
+//! that arrives *after* insertion is credited only through compensation:
+//! with a prediction window, up to `w` already-inserted future slots that
+//! a cheaper purchase later covers stay counted in deeper scans — by
+//! design, the cheaper contract's spending (fee + discounted usage) keeps
+//! accumulating toward break-evens its own fee does not justify, at most
+//! `w` slots of lookahead early. The no-permanent-shadowing and (windowless)
+//! spend-conservation properties are pinned in
+//! `rust/tests/market_props.rs`; the cost sandwich against the joint
+//! offline DP in `rust/tests/differential.rs`.
+//!
+//! # Prediction windows over menus (Sec. VI)
+//!
+//! [`MarketDeterministic::with_window`] / [`MarketRandomized::with_window`]
+//! run every contract's scan over the shifted window `[t+w−τ_j+1, t+w]`
+//! (Algorithm 3 semantics per contract) and add Algorithm 3's guard: with a
+//! window, the policy only commits while current demand exceeds current
+//! coverage. `w` must be shorter than every term on the menu (`w < min τ`).
+//!
+//! With a single-contract menu, [`MarketDeterministic`] *is* Algorithm 1
+//! (and Algorithm 3 when `w > 0`): same scan updates, same trigger
+//! condition, same coverage accounting — asserted bit-identically against
+//! [`Deterministic`](super::deterministic::Deterministic) in the tests
+//! below, in `rust/tests/market_props.rs`, and in
+//! `rust/tests/differential.rs`. Competitive guarantees for true
+//! multi-contract menus are open (the paper leaves the theory to future
+//! work); reports compare against `2 − α_max` empirically.
 
 use std::collections::VecDeque;
 
@@ -45,16 +63,21 @@ use crate::pricing::{ContractId, Market};
 use crate::util::rng::Rng;
 
 /// Deterministic menu policy: per-contract break-even scans over a shared
-/// reservation pool. Purely online (`window() == 0`).
+/// reservation pool, with cross-tier spend accounting and an optional
+/// prediction window (`window() == w`).
 pub struct MarketDeterministic {
     market: Market,
     /// Per-contract reservation threshold (default: `β_j`). `+inf`-like
     /// sentinels mean "never commit to this contract".
     thresholds: Vec<f64>,
+    /// Prediction window `w < min τ`; 0 = purely online.
+    w: usize,
     /// One break-even scan per contract, window length `term_j`.
     scans: Vec<WindowScan>,
-    /// Times of ALL reservations (any contract) still inside contract j's
-    /// scan window — the per-scan `x` bookkeeping at insertion.
+    /// Times of the reservations that *compensated* contract j's scan and
+    /// are still inside its window — the per-scan `x` bookkeeping at
+    /// insertion. A purchase of contract `c` lands here only for scans
+    /// with `β_j ≤ β_c` (cross-tier accounting).
     res_times: Vec<VecDeque<usize>>,
     /// Actual coverage: expiry slots (exclusive) per contract, FIFO.
     cover: Vec<VecDeque<usize>>,
@@ -63,31 +86,54 @@ pub struct MarketDeterministic {
     /// Reusable typed-decision buffer.
     out: Vec<(ContractId, u32)>,
     t: usize,
+    /// Next window slot index to insert into the scans (`t + w` ahead).
+    next_scan_slot: usize,
     label: &'static str,
 }
 
 impl MarketDeterministic {
-    /// Generalized Algorithm 1: threshold `β_j` per contract.
+    /// Generalized Algorithm 1: threshold `β_j` per contract, no window.
     pub fn new(market: Market) -> MarketDeterministic {
+        MarketDeterministic::with_window(market, 0)
+    }
+
+    /// Generalized Algorithm 3: threshold `β_j` per contract, prediction
+    /// window `w` (must satisfy `w < term_j` for every menu contract).
+    pub fn with_window(market: Market, w: usize) -> MarketDeterministic {
         let thresholds = (0..market.len()).map(|j| market.beta(j)).collect();
-        MarketDeterministic::with_thresholds(market, thresholds)
+        MarketDeterministic::with_thresholds_window(market, thresholds, w)
     }
 
     /// Generalized `A_z` family: explicit per-contract thresholds, in
     /// market currency (a threshold of `β_j` reproduces `new`).
     pub fn with_thresholds(market: Market, thresholds: Vec<f64>) -> MarketDeterministic {
+        MarketDeterministic::with_thresholds_window(market, thresholds, 0)
+    }
+
+    /// Fully general `A^w_z` over a menu.
+    pub fn with_thresholds_window(
+        market: Market,
+        thresholds: Vec<f64>,
+        w: usize,
+    ) -> MarketDeterministic {
         assert_eq!(thresholds.len(), market.len(), "one threshold per contract");
         assert!(thresholds.iter().all(|z| *z >= 0.0), "thresholds must be non-negative");
+        assert!(
+            w == 0 || market.contracts().iter().all(|c| w < c.term),
+            "prediction window must be shorter than every term on the menu"
+        );
         let k = market.len();
         MarketDeterministic {
             market,
             thresholds,
+            w,
             scans: (0..k).map(|_| WindowScan::new()).collect(),
             res_times: (0..k).map(|_| VecDeque::new()).collect(),
             cover: (0..k).map(|_| VecDeque::new()).collect(),
             counts: vec![0; k],
             out: Vec::with_capacity(k),
             t: 0,
+            next_scan_slot: 0,
             label: "Deterministic",
         }
     }
@@ -100,7 +146,15 @@ impl MarketDeterministic {
         &self.thresholds
     }
 
-    /// Active reservations (all contracts) covering slot `t`.
+    /// Current violation count of contract `j`'s break-even scan — the
+    /// uncompensated spend is `p ·` this. Diagnostics for the
+    /// spend-conservation property tests.
+    pub fn scan_violations(&self, j: ContractId) -> u32 {
+        self.scans[j].violations()
+    }
+
+    /// Active reservations (all contracts) covering slot `t`, dropping
+    /// entries expired at the current time.
     fn covered(&mut self, t: usize) -> u32 {
         let mut total = 0u32;
         for q in self.cover.iter_mut() {
@@ -111,47 +165,81 @@ impl MarketDeterministic {
         }
         total
     }
+
+    /// Reservations (all contracts) whose term still covers the *future*
+    /// slot `s` — no popping: entries expired relative to `s` may still
+    /// cover earlier slots.
+    fn covered_at(&self, s: usize) -> u32 {
+        self.cover.iter().map(|q| q.iter().filter(|&&e| e > s).count() as u32).sum()
+    }
 }
 
 impl Policy for MarketDeterministic {
     fn name(&self) -> String {
-        format!("{}(menu k={})", self.label, self.market.len())
+        if self.w == 0 {
+            format!("{}(menu k={})", self.label, self.market.len())
+        } else {
+            format!("{}(menu k={},w={})", self.label, self.market.len(), self.w)
+        }
     }
 
-    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision<'_> {
+    fn window(&self) -> usize {
+        self.w
+    }
+
+    fn decide(&mut self, demand: u32, future: &[u32]) -> Decision<'_> {
         let t = self.t;
         self.t += 1;
         let k = self.market.len();
         let p = self.market.p();
 
-        // Update every contract's scan with this slot. A slot actually
-        // covered by active reservations (of ANY term) must not count as a
-        // violation in any scan — otherwise a short-term scan accumulates
-        // stale violations while a long reservation covers the demand and
-        // fires spuriously at its expiry. `x_ins` therefore takes the max
-        // of the scan's own phantom bookkeeping and the real coverage.
-        // (For a single-contract menu both quantities coincide and this is
-        // exactly Algorithm 1's bookkeeping.)
+        // Slide every contract's check window to [t+w−τ_j+1, t+w], then
+        // insert the newly visible slots (at t=0 this is 0..=w in one go,
+        // afterwards one slot per step unless the horizon shrinks at the
+        // trace tail). A slot actually covered by active reservations (of
+        // ANY term) must not count as a violation in any scan — otherwise
+        // a short-term scan accumulates stale violations while a long
+        // reservation covers the demand and fires spuriously at its
+        // expiry. `x_ins` therefore takes the max of the scan's own
+        // compensation bookkeeping and the real coverage. (For a
+        // single-contract menu both quantities coincide and this is
+        // exactly Algorithm 1's — resp. Algorithm 3's — bookkeeping.)
         let covered_now = self.covered(t);
+        let right = t + self.w;
         for j in 0..k {
             let term = self.market.contract(j).term;
-            self.scans[j].expire_before((t + 1).saturating_sub(term));
-            let times = &mut self.res_times[j];
-            while matches!(times.front(), Some(&rt) if rt + term <= t) {
-                times.pop_front();
+            self.scans[j].expire_before((right + 1).saturating_sub(term));
+        }
+        let visible_end = t + self.w.min(future.len());
+        while self.next_scan_slot <= visible_end {
+            let s = self.next_scan_slot;
+            let d_s = if s == t { demand } else { future[s - t - 1] };
+            let cov_s = if s == t { covered_now } else { self.covered_at(s) };
+            for j in 0..k {
+                let term = self.market.contract(j).term;
+                let times = &mut self.res_times[j];
+                while matches!(times.front(), Some(&rt) if rt + term <= s) {
+                    times.pop_front();
+                }
+                let x_ins = (times.len() as u32).max(cov_s);
+                self.scans[j].insert(s, d_s, x_ins);
             }
-            let x_ins = (times.len() as u32).max(covered_now);
-            self.scans[j].insert(t, demand, x_ins);
+            self.next_scan_slot += 1;
         }
 
         // Commit while any contract's window shows unjustified on-demand
         // spend past its break-even; among simultaneously triggered
         // contracts, take the best steady-state cost per slot (ties: the
-        // shortest term). Every reservation compensates every scan, so the
-        // loop strictly shrinks the violation excess and terminates.
+        // shortest term). Cross-tier accounting: a purchase of contract j
+        // compensates exactly the scans whose break-even its fee covers
+        // (β_i ≤ β_j) — deeper scans keep their violations and keep
+        // accumulating across cheaper purchases. Each iteration buys from
+        // a triggered scan, whose total violation excess strictly shrinks
+        // on compensation, so the loop terminates.
         for c in self.counts.iter_mut() {
             *c = 0;
         }
+        let mut cov = covered_now;
         loop {
             let mut pick: Option<ContractId> = None;
             for j in 0..k {
@@ -168,11 +256,20 @@ impl Policy for MarketDeterministic {
                 }
             }
             let Some(j) = pick else { break };
+            // Algorithm 3's extra guard (Sec. VI): with a prediction
+            // window, only commit while current demand exceeds coverage.
+            if self.w > 0 && cov >= demand {
+                break;
+            }
             self.cover[j].push_back(t + self.market.contract(j).term);
+            cov += 1;
             self.counts[j] += 1;
+            let cap = self.market.beta(j);
             for i in 0..k {
-                self.scans[i].reserve();
-                self.res_times[i].push_back(t);
+                if self.market.beta(i) <= cap {
+                    self.scans[i].reserve();
+                    self.res_times[i].push_back(t);
+                }
             }
         }
 
@@ -182,8 +279,7 @@ impl Policy for MarketDeterministic {
                 self.out.push((j, self.counts[j]));
             }
         }
-        let covered = self.covered(t);
-        Decision { on_demand: demand.saturating_sub(covered), reservations: &self.out }
+        Decision { on_demand: demand.saturating_sub(cov), reservations: &self.out }
     }
 }
 
@@ -201,6 +297,12 @@ impl MarketRandomized {
     /// fee). Contract 0 consumes `Rng::new(seed)` exactly like the classic
     /// single-contract [`Randomized`](super::randomized::Randomized).
     pub fn new(market: Market, seed: u64) -> MarketRandomized {
+        MarketRandomized::with_window(market, 0, seed)
+    }
+
+    /// Generalized Algorithm 4: the same threshold draws driving the
+    /// windowed deterministic machinery (`w < min τ`, Sec. VI).
+    pub fn with_window(market: Market, w: usize, seed: u64) -> MarketRandomized {
         let mut thresholds = Vec::with_capacity(market.len());
         for cid in 0..market.len() {
             let mut rng = Rng::new(seed ^ (cid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
@@ -214,7 +316,7 @@ impl MarketRandomized {
             };
             thresholds.push(z_abs);
         }
-        let mut inner = MarketDeterministic::with_thresholds(market, thresholds);
+        let mut inner = MarketDeterministic::with_thresholds_window(market, thresholds, w);
         inner.label = "Randomized";
         MarketRandomized { inner, seed }
     }
@@ -232,6 +334,10 @@ impl MarketRandomized {
 impl Policy for MarketRandomized {
     fn name(&self) -> String {
         self.inner.name()
+    }
+
+    fn window(&self) -> usize {
+        self.inner.window()
     }
 
     fn decide(&mut self, demand: u32, future: &[u32]) -> Decision<'_> {
@@ -288,9 +394,12 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn run(policy: &mut dyn Policy, demands: &[u32], market: &Market) -> CostReport {
+        let w = policy.window();
         let mut ledger = Ledger::new(market.clone());
-        for &d in demands {
-            let dec = policy.decide(d, &[]);
+        for (t, &d) in demands.iter().enumerate() {
+            let hi = (t + 1 + w).min(demands.len());
+            let fut = if w == 0 { &[] } else { &demands[t + 1..hi] };
+            let dec = policy.decide(d, fut);
             ledger.bill(d, &dec).unwrap();
         }
         ledger.report()
@@ -366,6 +475,112 @@ mod tests {
             rs.total,
             rd.total
         );
+    }
+
+    #[test]
+    fn cross_tier_accounting_unshadows_the_deep_contract() {
+        // p = 0.1; shallow {0.3, rate 0, term 5} has β = 0.3 (4 violating
+        // slots trigger it); deep {0.9, rate 0, term 30} has β = 0.9 (10
+        // violating slots). Shallow fires first and its purchases do NOT
+        // compensate the deep scan (β_deep > β_shallow), so the deep scan
+        // keeps accumulating 4 violations per shallow cycle and must fire
+        // by the third cycle. The former every-purchase-compensates-all
+        // accounting reset the deep scan each cycle and never committed
+        // deep.
+        let market = Market::new(
+            0.1,
+            vec![
+                Contract { upfront: 0.3, rate: 0.0, term: 5 },
+                Contract { upfront: 0.9, rate: 0.0, term: 30 },
+            ],
+        );
+        assert_eq!(market.len(), 2);
+        let demands = vec![1u32; 47];
+        let mut policy = MarketDeterministic::new(market.clone());
+        let mut per_contract = [0u32; 2];
+        let mut ledger = Ledger::new(market.clone());
+        for &d in &demands {
+            let dec = policy.decide(d, &[]);
+            for &(cid, n) in dec.reservations {
+                per_contract[cid] += n;
+            }
+            ledger.bill(d, &dec).unwrap();
+        }
+        assert!(per_contract[0] >= 1, "shallow fires first: {per_contract:?}");
+        assert!(per_contract[1] >= 1, "deep must eventually fire: {per_contract:?}");
+    }
+
+    #[test]
+    fn single_menu_windowed_matches_algorithm3_bitwise() {
+        let pricing = Pricing::normalized(0.05, 0.4, 60);
+        let market = Market::single(pricing);
+        let mut rng = Rng::new(31);
+        for case in 0..15 {
+            let w = 1 + rng.below(40) as usize;
+            let demands: Vec<u32> = (0..300)
+                .map(|_| if rng.chance(0.5) { rng.below(4) as u32 } else { 0 })
+                .collect();
+            let menu = run(
+                &mut MarketDeterministic::with_window(market.clone(), w),
+                &demands,
+                &market,
+            );
+            let classic = run(&mut Deterministic::with_window(pricing, w), &demands, &market);
+            assert_eq!(
+                menu.total.to_bits(),
+                classic.total.to_bits(),
+                "case {case} w={w}: menu {} vs classic {}",
+                menu.total,
+                classic.total
+            );
+            assert_eq!(menu.reservations, classic.reservations);
+            assert_eq!(menu.on_demand_slots, classic.on_demand_slots);
+            // randomized windowed pair on the same seed
+            let seed = 1000 + case as u64;
+            let mr = run(
+                &mut MarketRandomized::with_window(market.clone(), w, seed),
+                &demands,
+                &market,
+            );
+            let rc = run(&mut Randomized::with_window(pricing, w, seed), &demands, &market);
+            assert_eq!(mr.total.to_bits(), rc.total.to_bits(), "case {case} w={w} randomized");
+        }
+    }
+
+    #[test]
+    fn menu_window_never_reserves_while_covered() {
+        // Sec. VI guard on a menu: with a window, commitments only happen
+        // while current demand exceeds coverage — so total active
+        // reservations never exceed the peak demand level.
+        let market = two_tier();
+        let demands = vec![1u32; 400];
+        let mut policy = MarketDeterministic::with_window(market.clone(), 20);
+        let r = run(&mut policy, &demands, &market);
+        assert!(r.reservations >= 1);
+        assert!(r.peak_active <= 1, "guard violated: peak {}", r.peak_active);
+    }
+
+    #[test]
+    fn menu_window_cuts_on_demand_slots_on_stable_demand() {
+        let market = two_tier();
+        let demands = vec![1u32; 900];
+        let online = run(&mut MarketDeterministic::new(market.clone()), &demands, &market);
+        let windowed =
+            run(&mut MarketDeterministic::with_window(market.clone(), 30), &demands, &market);
+        assert!(
+            windowed.on_demand_slots < online.on_demand_slots,
+            "windowed od={} online od={}",
+            windowed.on_demand_slots,
+            online.on_demand_slots
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter than every term")]
+    fn menu_window_must_undercut_every_term() {
+        let market = two_tier();
+        // min term is 100: a window of 100 must be rejected
+        MarketDeterministic::with_window(market, 100);
     }
 
     #[test]

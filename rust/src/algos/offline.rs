@@ -258,6 +258,155 @@ pub fn optimal_market(demands: &[u32], market: &Market) -> MarketOffline {
     MarketOffline { best, per_contract, skipped }
 }
 
+/// Whether the **joint** multi-contract DP can solve an instance: the
+/// product state space `Π_j (D+1)^(τ_j−1)` must fit a tighter envelope
+/// than the per-contract guard (the joint frontier explores the full
+/// product space and pays a `(D+1)^k` purchase branching per state), the
+/// concatenated history tuple must pack into a `u64` key, and the per-slot
+/// branching itself must stay small. Mirrors [`optimal_market_joint`]'s
+/// guard exactly.
+pub fn dp_joint_tractable(d_max: u32, terms: &[usize]) -> bool {
+    let bits = (64 - (d_max as u64).leading_zeros()).max(1) as u64;
+    let hist_bits: u64 = terms.iter().map(|&t| (t as u64 - 1) * bits).sum();
+    let mut states = 1.0f64;
+    for &t in terms {
+        states *= ((d_max as u64 + 1) as f64).powi(t as i32 - 1);
+    }
+    let branch = ((d_max as u64 + 1) as f64).powi(terms.len() as i32);
+    states <= 1.1e6 && hist_bits <= 64 && branch <= 64.0
+}
+
+/// Exact offline optimum over a whole [`Market`] menu: a dynamic program
+/// whose state spans **concurrent reservations across all menu contracts**
+/// — the per-contract reservation histories `(r_{j,t−τ_j+2}, …, r_{j,t})`
+/// concatenated into one packed `u64` key. Returns `None` when the
+/// instance fails [`dp_joint_tractable`].
+///
+/// Unlike the restricted DP, purchases are *not* capped at the amount
+/// needed to cover current demand: with heterogeneous usage rates it can
+/// pay to commit to a cheaper-rate contract while still covered by a
+/// dearer one (the usage re-bills cheapest-first, exactly like
+/// [`Ledger::bill`](crate::ledger::Ledger::bill)). Per-slot purchases of
+/// each contract are capped at `D = max_t d_t`, which loses nothing: an
+/// optimal schedule never holds more than `D` active instances of one
+/// contract (usage per slot never exceeds `D`, billing uses the cheapest
+/// `D` actives, and dropping the excess only removes fees).
+///
+/// Because the searched space is a superset of every restricted schedule
+/// and of every feasible online decision sequence (billed the same way),
+/// the result is a true lower bound for both — the anchor of the
+/// `joint ≤ restricted ≤ …` / `joint ≤ online` cost sandwich pinned in
+/// `rust/tests/differential.rs`.
+pub fn optimal_market_joint(demands: &[u32], market: &Market) -> Option<OfflineSolution> {
+    let d_max = demands.iter().copied().max().unwrap_or(0);
+    let terms: Vec<usize> = market.contracts().iter().map(|c| c.term).collect();
+    if !dp_joint_tractable(d_max, &terms) {
+        return None;
+    }
+    let p = market.p();
+    let k = market.len();
+    if k == 0 || d_max == 0 {
+        let od: f64 = p * demands.iter().map(|&d| d as u64).sum::<u64>() as f64;
+        return Some(OfflineSolution { cost: od, reservations: 0 });
+    }
+
+    let bits = (64 - (d_max as u64).leading_zeros()).max(1) as u64;
+    let entry_mask = (1u64 << bits) - 1; // bits <= 32 for a u32 demand
+    let mask_of = |n: u64| if n >= 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let hist_len: Vec<u64> = terms.iter().map(|&t| t as u64 - 1).collect();
+    let mut offsets = Vec::with_capacity(k);
+    let mut acc = 0u64;
+    for &h in &hist_len {
+        offsets.push(acc);
+        acc += h * bits;
+    }
+    let seg_masks: Vec<u64> = hist_len.iter().map(|&h| mask_of(h * bits)).collect();
+    let keep_masks: Vec<u64> =
+        hist_len.iter().map(|&h| mask_of(h.saturating_sub(1) * bits)).collect();
+    let upfronts: Vec<f64> = market.contracts().iter().map(|c| c.upfront).collect();
+    let rates: Vec<f64> = market.contracts().iter().map(|c| c.rate).collect();
+    let rate_order: Vec<ContractId> = market.rate_order().to_vec();
+    let base = d_max as u64 + 1;
+    let branch = base.pow(k as u32); // <= 64 by the guard
+
+    let mut cur = FlatFrontier::with_capacity_pow2(1 << 10);
+    let mut next = FlatFrontier::with_capacity_pow2(1 << 10);
+    cur.offer(0, 0.0, 0);
+    let mut active = vec![0u32; k];
+    let mut avail = vec![0u32; k];
+    for &d in demands {
+        next.clear();
+        for (key, cost, nres) in cur.iter() {
+            // Per state: active coverage per contract (sum of its history
+            // entries) and the combo-invariant part of the successor key
+            // (each segment's newest hist−1 entries, already shifted into
+            // place — only the appended `r` digit varies per combo).
+            // (Term-1 contracts carry no history: sorted first, offset 0.)
+            let mut base_key2 = 0u64;
+            for j in 0..k {
+                if hist_len[j] == 0 {
+                    active[j] = 0;
+                    continue;
+                }
+                let seg = (key >> offsets[j]) & seg_masks[j];
+                base_key2 |= ((seg & keep_masks[j]) << bits) << offsets[j];
+                let mut rest = seg;
+                let mut a = 0u32;
+                for _ in 0..hist_len[j] {
+                    a += (rest & entry_mask) as u32;
+                    rest >>= bits;
+                }
+                active[j] = a;
+            }
+            for combo in 0..branch {
+                let mut digits = combo;
+                let mut fees = 0.0f64;
+                let mut bought = 0u64;
+                let mut total_active = 0u32;
+                let mut key2 = base_key2;
+                for j in 0..k {
+                    let r = (digits % base) as u32;
+                    digits /= base;
+                    avail[j] = active[j] + r;
+                    total_active += avail[j];
+                    fees += r as f64 * upfronts[j];
+                    bought += r as u64;
+                    if hist_len[j] > 0 {
+                        key2 |= (r as u64) << offsets[j];
+                    }
+                }
+                // Serve min(d, active) on reservations (rates never exceed
+                // p), billed against the cheapest active contract first —
+                // the Ledger's exact convention.
+                let usage = d.min(total_active);
+                let on_dem = d - usage;
+                let mut step = fees + p * on_dem as f64;
+                let mut rem = usage;
+                for &cid in &rate_order {
+                    if rem == 0 {
+                        break;
+                    }
+                    let take = rem.min(avail[cid]);
+                    step += rates[cid] * take as f64;
+                    rem -= take;
+                }
+                next.offer(key2, cost + step, nres + bought);
+            }
+        }
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    let mut best: Option<(f64, u64)> = None;
+    for (_key, cost, nres) in cur.iter() {
+        match best {
+            Some((c, _)) if c <= cost => {}
+            _ => best = Some((cost, nres)),
+        }
+    }
+    let (cost, reservations) = best.expect("non-empty joint DP frontier");
+    Some(OfflineSolution { cost, reservations })
+}
+
 /// Result of [`optimal_market`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct MarketOffline {
@@ -536,7 +685,8 @@ mod tests {
 
     #[test]
     fn optimal_market_empty_menu_is_on_demand() {
-        let m = Market::new(0.1, vec![crate::pricing::Contract { upfront: 9.0, rate: 0.05, term: 3 }]);
+        let m =
+            Market::new(0.1, vec![crate::pricing::Contract { upfront: 9.0, rate: 0.05, term: 3 }]);
         assert!(m.is_empty());
         let demands = [2u32, 0, 1];
         let res = optimal_market(&demands, &m);
@@ -572,6 +722,210 @@ mod tests {
         let res = optimal_market(&demands, &m);
         assert_eq!(res.skipped, vec![0]);
         assert!(res.best.is_none());
+    }
+
+    /// Brute force over all joint purchase schedules (per-slot purchases of
+    /// each contract in `0..=d_max`), billed exactly like the ledger:
+    /// min(d, active) served on reservations, cheapest rate first.
+    fn brute_force_market(demands: &[u32], market: &Market) -> f64 {
+        fn rec(
+            t: usize,
+            demands: &[u32],
+            hist: &mut [Vec<u32>],
+            market: &Market,
+            d_max: u32,
+        ) -> f64 {
+            if t == demands.len() {
+                return 0.0;
+            }
+            let k = market.len();
+            let d = demands[t];
+            let p = market.p();
+            let base = d_max as usize + 1;
+            let combos = base.pow(k as u32);
+            let mut best = f64::INFINITY;
+            for combo in 0..combos {
+                let mut digits = combo;
+                let mut fees = 0.0;
+                for h in hist.iter_mut() {
+                    h.push((digits % base) as u32);
+                    digits /= base;
+                }
+                let avail: Vec<u32> = (0..k)
+                    .map(|j| {
+                        let lo = hist[j].len().saturating_sub(market.contract(j).term);
+                        hist[j][lo..].iter().sum::<u32>()
+                    })
+                    .collect();
+                for j in 0..k {
+                    fees += *hist[j].last().unwrap() as f64 * market.contract(j).upfront;
+                }
+                let total: u32 = avail.iter().sum();
+                let usage = d.min(total);
+                let mut step = fees + p * (d - usage) as f64;
+                let mut rem = usage;
+                for &cid in market.rate_order() {
+                    let take = rem.min(avail[cid]);
+                    step += market.contract(cid).rate * take as f64;
+                    rem -= take;
+                }
+                let cand = step + rec(t + 1, demands, hist, market, d_max);
+                best = best.min(cand);
+                for h in hist.iter_mut() {
+                    h.pop();
+                }
+            }
+            best
+        }
+        let d_max = demands.iter().copied().max().unwrap_or(0);
+        let mut hist: Vec<Vec<u32>> = vec![Vec::new(); market.len()];
+        rec(0, demands, &mut hist, market, d_max)
+    }
+
+    fn joint_test_market() -> Market {
+        Market::new(
+            0.1,
+            vec![
+                crate::pricing::Contract { upfront: 0.3, rate: 0.02, term: 4 },
+                crate::pricing::Contract { upfront: 0.8, rate: 0.01, term: 10 },
+            ],
+        )
+    }
+
+    #[test]
+    fn joint_matches_brute_force_on_tiny_menus() {
+        let mut rng = Rng::new(909);
+        for case in 0..20 {
+            let p = 0.1 + rng.f64() * 0.3;
+            let m = Market::new(
+                p,
+                vec![
+                    crate::pricing::Contract {
+                        upfront: 0.1 + rng.f64() * 0.5,
+                        rate: rng.f64() * 0.5 * p,
+                        term: 2 + rng.below(2) as usize,
+                    },
+                    crate::pricing::Contract {
+                        upfront: 0.4 + rng.f64() * 0.8,
+                        rate: rng.f64() * 0.3 * p,
+                        term: 4 + rng.below(2) as usize,
+                    },
+                ],
+            );
+            let demands: Vec<u32> = (0..7).map(|_| rng.below(2) as u32).collect();
+            let joint = optimal_market_joint(&demands, &m).expect("tiny instance is tractable");
+            let bf = brute_force_market(&demands, &m);
+            assert!(
+                (joint.cost - bf).abs() < 1e-9,
+                "case {case}: joint {} vs brute force {bf} (menu k={})",
+                joint.cost,
+                m.len()
+            );
+        }
+    }
+
+    #[test]
+    fn joint_mixes_contracts_when_mixing_is_cheaper() {
+        // 14 slots of unit demand: the long contract covers 10, the short
+        // one the 4-slot tail — strictly cheaper than any single-contract
+        // schedule (B-only 1.30 with an on-demand tail, A-only 1.34).
+        let m = joint_test_market();
+        assert_eq!(m.len(), 2);
+        let demands = vec![1u32; 14];
+        let joint = optimal_market_joint(&demands, &m).unwrap();
+        assert!((joint.cost - 1.28).abs() < 1e-9, "joint {}", joint.cost);
+        assert_eq!(joint.reservations, 2);
+        let restricted = optimal_market(&demands, &m);
+        let (_, best) = restricted.best.unwrap();
+        assert!(joint.cost < best.cost - 1e-9, "joint {} restricted {}", joint.cost, best.cost);
+    }
+
+    #[test]
+    fn joint_never_exceeds_restricted() {
+        let mut rng = Rng::new(4242);
+        let short = Market::new(
+            0.2,
+            vec![
+                crate::pricing::Contract { upfront: 0.3, rate: 0.04, term: 3 },
+                crate::pricing::Contract { upfront: 0.6, rate: 0.02, term: 5 },
+            ],
+        );
+        for case in 0..15 {
+            // alternate 0/1 demand on the 4+10 menu with 0..=2 on a short
+            // menu (keeps the joint product space small in debug builds)
+            let (m, demands): (Market, Vec<u32>) = if case % 2 == 0 {
+                (joint_test_market(), (0..20).map(|_| rng.below(2) as u32).collect())
+            } else {
+                (short.clone(), (0..20).map(|_| rng.below(3) as u32).collect())
+            };
+            let joint = optimal_market_joint(&demands, &m).unwrap();
+            let restricted = optimal_market(&demands, &m);
+            let (_, best) = restricted.best.unwrap();
+            assert!(
+                joint.cost <= best.cost + 1e-9 * (1.0 + best.cost),
+                "joint {} > restricted {}",
+                joint.cost,
+                best.cost
+            );
+        }
+    }
+
+    #[test]
+    fn joint_single_contract_matches_restricted_dp() {
+        let pricing = pr(0.3, 0.2, 5);
+        let demands = [1u32; 10];
+        let m = Market::single(pricing);
+        let joint = optimal_market_joint(&demands, &m).unwrap();
+        let classic = optimal(&demands, &pricing);
+        assert!((joint.cost - classic.cost).abs() < 1e-9);
+        assert_eq!(joint.reservations, classic.reservations);
+    }
+
+    #[test]
+    fn joint_empty_menu_is_on_demand() {
+        let m =
+            Market::new(0.1, vec![crate::pricing::Contract { upfront: 9.0, rate: 0.05, term: 3 }]);
+        assert!(m.is_empty());
+        let joint = optimal_market_joint(&[2, 0, 1], &m).unwrap();
+        assert!((joint.cost - 0.3).abs() < 1e-12);
+        assert_eq!(joint.reservations, 0);
+    }
+
+    #[test]
+    fn joint_guard_rejects_wide_menus() {
+        // terms 6 + 18 at D = 3 blow the product envelope: 4^22 states
+        let m = Market::new(
+            0.08,
+            vec![
+                crate::pricing::Contract { upfront: 0.2, rate: 0.039, term: 6 },
+                crate::pricing::Contract { upfront: 0.45, rate: 0.031, term: 18 },
+            ],
+        );
+        let demands = vec![3u32; 40];
+        assert!(!dp_joint_tractable(3, &[6, 18]));
+        assert!(optimal_market_joint(&demands, &m).is_none());
+        // even unit demand overflows here (2^22 states); the committed
+        // scenarios compress to terms 4 + 12 (2^14) to stay solvable
+        assert!(!dp_joint_tractable(1, &[6, 18]));
+        assert!(dp_joint_tractable(1, &[4, 12]));
+    }
+
+    #[test]
+    fn joint_tractable_handles_term_one_contracts() {
+        // a term-1 contract carries no history; the packed key must stay
+        // well-formed next to a long-term contract
+        let m = Market::new(
+            0.5,
+            vec![
+                crate::pricing::Contract { upfront: 0.2, rate: 0.1, term: 1 },
+                crate::pricing::Contract { upfront: 0.9, rate: 0.05, term: 6 },
+            ],
+        );
+        assert_eq!(m.len(), 2);
+        let demands = [1u32, 1, 0, 1, 1, 1, 0, 1];
+        let joint = optimal_market_joint(&demands, &m).unwrap();
+        let bf = brute_force_market(&demands, &m);
+        assert!((joint.cost - bf).abs() < 1e-9, "joint {} bf {bf}", joint.cost);
     }
 
     #[test]

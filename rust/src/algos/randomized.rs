@@ -93,7 +93,10 @@ mod tests {
     fn different_seeds_give_different_thresholds() {
         let pricing = Pricing::normalized(0.05, 0.4875, 20);
         let zs: Vec<f64> = (0..10).map(|s| Randomized::online(pricing, s).threshold()).collect();
-        let distinct = zs.iter().filter(|a| zs.iter().filter(|b| (**a - **b).abs() < 1e-12).count() == 1).count();
+        let distinct = zs
+            .iter()
+            .filter(|a| zs.iter().filter(|b| (**a - **b).abs() < 1e-12).count() == 1)
+            .count();
         assert!(distinct >= 5, "{zs:?}");
     }
 

@@ -25,7 +25,13 @@ impl CostSeries {
 
 /// Render a CDF table like Fig. 5: one row per grid point, one column per
 /// algorithm.
-pub fn render_cdf_table(title: &str, series: &[CostSeries], lo: f64, hi: f64, points: usize) -> String {
+pub fn render_cdf_table(
+    title: &str,
+    series: &[CostSeries],
+    lo: f64,
+    hi: f64,
+    points: usize,
+) -> String {
     let grid = linspace(lo, hi, points);
     let mut out = String::new();
     let _ = writeln!(out, "{title}");

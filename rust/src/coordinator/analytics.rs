@@ -63,9 +63,15 @@ pub struct AnalyticsEngine {
 
 impl AnalyticsEngine {
     /// `grid_len` thresholds spanning `[0, β]`.
-    pub fn new(runtime: Runtime, pricing: Pricing, grid_len: usize, batch: usize) -> AnalyticsEngine {
+    pub fn new(
+        runtime: Runtime,
+        pricing: Pricing,
+        grid_len: usize,
+        batch: usize,
+    ) -> AnalyticsEngine {
         let beta = pricing.beta().min(1e6);
-        let z_grid: Vec<f32> = linspace(0.0, beta, grid_len.max(2)).iter().map(|&z| z as f32).collect();
+        let z_grid: Vec<f32> =
+            linspace(0.0, beta, grid_len.max(2)).iter().map(|&z| z as f32).collect();
         AnalyticsEngine { runtime, pricing, z_grid, batch }
     }
 

@@ -126,7 +126,11 @@ pub fn fit_ar(history: &[u32], k: usize) -> Vec<f64> {
     let n = history.len();
     if n <= k + 1 {
         // not enough data: fall back to predicting the mean
-        let mean = if n == 0 { 0.0 } else { history.iter().map(|&x| x as f64).sum::<f64>() / n as f64 };
+        let mean = if n == 0 {
+            0.0
+        } else {
+            history.iter().map(|&x| x as f64).sum::<f64>() / n as f64
+        };
         let mut c = vec![0.0; k + 1];
         c[0] = mean;
         return c;

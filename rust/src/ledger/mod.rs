@@ -93,7 +93,9 @@ impl CostReport {
     /// Meaningful for single-contract normalized markets.
     pub fn identity_holds(&self, pricing: &Pricing, tol: f64) -> bool {
         let s = self.all_on_demand_cost(pricing);
-        let rhs = self.reservations as f64 + (1.0 - pricing.alpha) * self.on_demand_cost + pricing.alpha * s;
+        let rhs = self.reservations as f64
+            + (1.0 - pricing.alpha) * self.on_demand_cost
+            + pricing.alpha * s;
         (self.total - rhs).abs() <= tol * (1.0 + self.total.abs())
     }
 }

@@ -19,7 +19,9 @@
 
 use cloudreserve::algos::offline;
 use cloudreserve::analysis::classify::{classify_population, group_counts};
-use cloudreserve::analysis::report::{render_cdf_table, render_fig4_scatter, render_table2, CostSeries};
+use cloudreserve::analysis::report::{
+    render_cdf_table, render_fig4_scatter, render_table2, CostSeries,
+};
 use cloudreserve::coordinator::{AnalyticsEngine, Broker, BrokerConfig, DemandEvent, PolicyKind};
 use cloudreserve::pricing::catalog::{ec2_small_compressed, render_table1};
 use cloudreserve::pricing::{Market, Pricing};
@@ -201,7 +203,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         None
     };
 
-    let pop = generate(&SynthConfig { users, slots, seed: args.u64_or("seed", 7), ..Default::default() });
+    let seed = args.u64_or("seed", 7);
+    let pop = generate(&SynthConfig { users, slots, seed, ..Default::default() });
     let broker = Broker::start(cfg, PolicyKind::Deterministic { z: None });
     let t0 = std::time::Instant::now();
     for t in 0..slots {
@@ -237,9 +240,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// `bench`: the tracked perf baseline. Measures (a) Sec. VII suite
 /// throughput through the batched engine and — unless `--skip-reference` —
 /// the seed per-user path, verifying bit-identical results and recording
-/// the speedup; (b) offline-DP solve times over a (D, τ) grid; (c)
-/// per-policy decide latency. Writes everything to `--out` (default
-/// `BENCH.json`) so every future PR has a trajectory to beat.
+/// the speedup; (b) offline-DP solve times over a (D, τ) grid, plus the
+/// joint multi-contract DP over a (D, terms) grid; (c) per-policy decide
+/// latency. Writes everything to `--out` (default `BENCH.json`) so every
+/// future PR has a trajectory to beat.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use cloudreserve::sim::engine::{run_fleet_flat, FleetPolicy};
     use cloudreserve::sim::fleet::{run_fleet_reference, suite_specs};
@@ -383,6 +387,53 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ]));
     }
 
+    // (b') joint multi-contract DP solve times (the scenario comparator).
+    eprintln!("bench: joint offline DP grid...");
+    let joint_cases: &[(u32, &[usize], usize)] = if quick {
+        &[(1, &[4, 12], 120), (2, &[4, 8], 120)]
+    } else {
+        &[(1, &[4, 12], 120), (2, &[4, 8], 120), (1, &[5, 15], 120), (3, &[3, 6], 100)]
+    };
+    let mut joint_rows = Vec::new();
+    for &(d_max, terms, t_len) in joint_cases {
+        let mut rng = Rng::new(seed ^ ((d_max as u64) << 12) ^ terms.len() as u64);
+        let demands: Vec<u32> = (0..t_len).map(|_| rng.below(d_max as u64 + 1) as u32).collect();
+        let market = Market::new(
+            0.1,
+            terms
+                .iter()
+                .map(|&tau| cloudreserve::pricing::Contract {
+                    upfront: 0.02 * tau as f64,
+                    rate: 0.04,
+                    term: tau,
+                })
+                .collect(),
+        );
+        assert!(
+            cloudreserve::algos::offline::dp_joint_tractable(d_max, terms),
+            "bench joint case must be tractable"
+        );
+        let t0 = Instant::now();
+        let sol = cloudreserve::algos::offline::optimal_market_joint(&demands, &market)
+            .expect("tractable joint case");
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "dp-joint  D={d_max} terms={terms:?} T={t_len} {:>9.2} ms  (cost {:.4}, {} reservations)",
+            wall_ms, sol.cost, sol.reservations
+        );
+        joint_rows.push(Json::obj(vec![
+            ("d_max", Json::Num(d_max as f64)),
+            (
+                "terms",
+                Json::Arr(terms.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("slots", Json::Num(t_len as f64)),
+            ("wall_ms", Json::Num(wall_ms)),
+            ("cost", Json::Num(sol.cost)),
+            ("reservations", Json::Num(sol.reservations as f64)),
+        ]));
+    }
+
     // (c) per-policy decide latency on the engine's monomorphic dispatch.
     eprintln!("bench: per-policy decide latency...");
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
@@ -455,6 +506,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             ]),
         ),
         ("offline_dp", Json::Arr(dp_rows)),
+        ("offline_dp_joint", Json::Arr(joint_rows)),
         ("decide_ns", Json::Arr(decide_rows)),
     ]);
     std::fs::write(&out, doc.dump_pretty())?;
@@ -465,7 +517,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 /// `scenario`: load a declarative JSON spec (market menu, trace source,
 /// policy set — see `sim::scenario` for the schema), run it through the
 /// batched engine, print the normalized-cost report, and optionally write
-/// the machine-readable `cloudreserve-scenario/v1` JSON.
+/// the machine-readable `cloudreserve-scenario/v2` JSON.
 fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     let path = args
         .get("spec")

@@ -23,7 +23,12 @@ pub struct Offering {
 
 impl Offering {
     pub fn pricing(&self) -> Pricing {
-        Pricing::from_rates(self.on_demand_hourly, self.upfront, self.reserved_hourly, self.period_hours)
+        Pricing::from_rates(
+            self.on_demand_hourly,
+            self.upfront,
+            self.reserved_hourly,
+            self.period_hours,
+        )
     }
 }
 
@@ -238,9 +243,10 @@ mod tests {
         ];
         for (o, p, alpha, beta) in golden {
             let pr = o.pricing();
-            assert!((pr.p - p).abs() < 1e-12, "{} {}: p={} want {p}", o.instance_type, o.plan, pr.p);
-            assert!((pr.alpha - alpha).abs() < 1e-12, "{} {}: alpha={}", o.instance_type, o.plan, pr.alpha);
-            assert!((pr.beta() - beta).abs() < 1e-9, "{} {}: beta={}", o.instance_type, o.plan, pr.beta());
+            let what = format!("{} {}", o.instance_type, o.plan);
+            assert!((pr.p - p).abs() < 1e-12, "{what}: p={} want {p}", pr.p);
+            assert!((pr.alpha - alpha).abs() < 1e-12, "{what}: alpha={}", pr.alpha);
+            assert!((pr.beta() - beta).abs() < 1e-9, "{what}: beta={}", pr.beta());
         }
         // the paper's compressed variant keeps the same normalized figures
         let c = ec2_small_compressed();

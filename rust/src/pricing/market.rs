@@ -191,9 +191,11 @@ impl Market {
         betas: Vec<f64>,
     ) -> Market {
         let mut rate_order: Vec<ContractId> = (0..contracts.len()).collect();
-        rate_order.sort_by(|&a, &b| contracts[a].rate.total_cmp(&contracts[b].rate).then(a.cmp(&b)));
-        let steady_best = (0..contracts.len())
-            .min_by(|&a, &b| contracts[a].steady_cost().total_cmp(&contracts[b].steady_cost()).then(a.cmp(&b)));
+        rate_order
+            .sort_by(|&a, &b| contracts[a].rate.total_cmp(&contracts[b].rate).then(a.cmp(&b)));
+        let steady_best = (0..contracts.len()).min_by(|&a, &b| {
+            contracts[a].steady_cost().total_cmp(&contracts[b].steady_cost()).then(a.cmp(&b))
+        });
         Market { p, contracts, labels, alphas, betas, rate_order, steady_best }
     }
 

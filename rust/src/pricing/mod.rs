@@ -139,7 +139,8 @@ mod tests {
     fn ratio_extremes() {
         let a0 = Pricing::normalized(0.01, 0.0, 10);
         assert!((a0.deterministic_ratio() - 2.0).abs() < 1e-12);
-        assert!((a0.randomized_ratio() - std::f64::consts::E / (std::f64::consts::E - 1.0)).abs() < 1e-12);
+        let ski_rental = std::f64::consts::E / (std::f64::consts::E - 1.0);
+        assert!((a0.randomized_ratio() - ski_rental).abs() < 1e-12);
         let a1 = Pricing::normalized(0.01, 1.0, 10);
         assert!((a1.deterministic_ratio() - 1.0).abs() < 1e-12);
         assert!((a1.randomized_ratio() - 1.0).abs() < 1e-12);

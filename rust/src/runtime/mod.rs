@@ -240,10 +240,14 @@ impl Runtime {
             .values()
             .filter(|a| a.meta.kind == "ar_forecast")
             .filter(|a| {
-                a.meta.param("B") >= users && a.meta.param("L") >= len && a.meta.param("k") >= k_user
+                a.meta.param("B") >= users
+                    && a.meta.param("L") >= len
+                    && a.meta.param("k") >= k_user
             })
             .min_by_key(|a| a.meta.param("B") * a.meta.param("L"))
-            .ok_or_else(|| anyhow!("no ar_forecast artifact fits B>={users} L>={len} k>={k_user}"))?;
+            .ok_or_else(|| {
+                anyhow!("no ar_forecast artifact fits B>={users} L>={len} k>={k_user}")
+            })?;
         let b = artifact.meta.param("B");
         let l = artifact.meta.param("L");
         let ka = artifact.meta.param("k");

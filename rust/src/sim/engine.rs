@@ -94,20 +94,21 @@ impl FleetPolicy {
                 Separate::new(market.contract_pricing(pin)),
                 pin,
             )),
-            PolicySpec::Deterministic { z: None, window: 0 } => {
-                FleetPolicy::MarketDeterministic(MarketDeterministic::new(market.clone()))
+            PolicySpec::Deterministic { z: None, window } => FleetPolicy::MarketDeterministic(
+                MarketDeterministic::with_window(market.clone(), window),
+            ),
+            PolicySpec::Deterministic { z: Some(_), .. } => panic!(
+                "custom thresholds are single-contract only (menu of {})",
+                market.len()
+            ),
+            PolicySpec::Randomized { window, seed } => {
+                let seed = seed ^ ((user_id as u64) << 17);
+                FleetPolicy::MarketRandomized(MarketRandomized::with_window(
+                    market.clone(),
+                    window,
+                    seed,
+                ))
             }
-            PolicySpec::Deterministic { .. } => panic!(
-                "custom thresholds / prediction windows are single-contract only (menu of {})",
-                market.len()
-            ),
-            PolicySpec::Randomized { window: 0, seed } => FleetPolicy::MarketRandomized(
-                MarketRandomized::new(market.clone(), seed ^ ((user_id as u64) << 17)),
-            ),
-            PolicySpec::Randomized { .. } => panic!(
-                "prediction windows are single-contract only (menu of {})",
-                market.len()
-            ),
         }
     }
 
@@ -247,14 +248,17 @@ mod tests {
         ]
     }
 
-    /// Specs valid for multi-contract menus (no custom z / windows).
+    /// Specs valid for multi-contract menus (no custom z; windows are a
+    /// feature path now, `w < min τ`).
     fn menu_specs() -> Vec<PolicySpec> {
         vec![
             PolicySpec::AllOnDemand,
             PolicySpec::AllReserved,
             PolicySpec::Separate,
             PolicySpec::Deterministic { z: None, window: 0 },
+            PolicySpec::Deterministic { z: None, window: 40 },
             PolicySpec::Randomized { window: 0, seed: 11 },
+            PolicySpec::Randomized { window: 25, seed: 11 },
         ]
     }
 
@@ -317,11 +321,35 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "single-contract only")]
-    fn menu_rejects_prediction_windows() {
+    fn menu_rejects_custom_thresholds() {
         FleetPolicy::build(
+            &PolicySpec::Deterministic { z: Some(0.4), window: 0 },
+            &menu_market(),
+            0,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter than every term")]
+    fn menu_rejects_windows_at_least_min_term() {
+        // min term on the menu is 600
+        FleetPolicy::build(
+            &PolicySpec::Deterministic { z: None, window: 600 },
+            &menu_market(),
+            0,
+        );
+    }
+
+    #[test]
+    fn menu_windows_take_the_market_policy_path() {
+        let mut p = FleetPolicy::build(
             &PolicySpec::Deterministic { z: None, window: 10 },
             &menu_market(),
             0,
         );
+        assert_eq!(p.window(), 10);
+        let fut = [1u32; 10];
+        let dec = p.decide(1, &fut);
+        assert!(dec.on_demand <= 1);
     }
 }

@@ -30,10 +30,11 @@ pub enum PolicySpec {
     AllReserved,
     Separate,
     /// `A_z` with optional prediction window; `z = None` means `z = β`.
-    /// Custom `z` / windows require a single-contract market.
+    /// Custom `z` requires a single-contract market; windows generalize to
+    /// menus (`w < min τ`, Sec. VI semantics per contract).
     Deterministic { z: Option<f64>, window: usize },
     /// Algorithm 2/4; the per-user draw is seeded from `seed ^ user_id`.
-    /// Windows require a single-contract market.
+    /// Windows generalize to menus (`w < min τ`).
     Randomized { window: usize, seed: u64 },
 }
 
@@ -71,7 +72,8 @@ impl PolicySpec {
                     Box::new(Deterministic::new(pricing, z, window))
                 }
                 PolicySpec::Randomized { window, seed } => {
-                    Box::new(Randomized::with_window(pricing, window, seed ^ (user_id as u64) << 17))
+                    let seed = seed ^ (user_id as u64) << 17;
+                    Box::new(Randomized::with_window(pricing, window, seed))
                 }
             };
         }
@@ -89,19 +91,18 @@ impl PolicySpec {
                 baselines::Separate::new(market.contract_pricing(pin)),
                 pin,
             )),
-            PolicySpec::Deterministic { z: None, window: 0 } => {
-                Box::new(MarketDeterministic::new(market.clone()))
+            PolicySpec::Deterministic { z: None, window } => {
+                Box::new(MarketDeterministic::with_window(market.clone(), window))
             }
-            PolicySpec::Deterministic { .. } => panic!(
-                "custom thresholds / prediction windows are single-contract only (menu of {})",
+            PolicySpec::Deterministic { z: Some(_), .. } => panic!(
+                "custom thresholds are single-contract only (menu of {})",
                 market.len()
             ),
-            PolicySpec::Randomized { window: 0, seed } => {
-                Box::new(MarketRandomized::new(market.clone(), seed ^ (user_id as u64) << 17))
-            }
-            PolicySpec::Randomized { .. } => {
-                panic!("prediction windows are single-contract only (menu of {})", market.len())
-            }
+            PolicySpec::Randomized { window, seed } => Box::new(MarketRandomized::with_window(
+                market.clone(),
+                window,
+                seed ^ (user_id as u64) << 17,
+            )),
         }
     }
 }
@@ -172,7 +173,12 @@ impl FleetResult {
 /// several specs over the same population, flatten once and call
 /// [`run_fleet_flat`] (or [`run_benchmark_suite`], which does) to avoid
 /// rebuilding the columnar store per policy.
-pub fn run_fleet(pop: &Population, market: &Market, spec: &PolicySpec, threads: usize) -> FleetResult {
+pub fn run_fleet(
+    pop: &Population,
+    market: &Market,
+    spec: &PolicySpec,
+    threads: usize,
+) -> FleetResult {
     run_fleet_flat(&pop.flatten(), market, spec, threads)
 }
 

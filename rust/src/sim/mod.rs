@@ -87,7 +87,11 @@ impl<F: FnMut(usize, &mut Vec<u32>)> FutureSource for BufferedFuture<F> {
 /// Run one policy over one demand curve against a classic single-contract
 /// [`Pricing`] — the [`Market::single`] fast path, bit-identical to the v1
 /// arithmetic. See [`run_policy_market`] for menus.
-pub fn run_policy(policy: &mut dyn Policy, demands: &[u32], pricing: Pricing) -> Result<CostReport, LedgerError> {
+pub fn run_policy(
+    policy: &mut dyn Policy,
+    demands: &[u32],
+    pricing: Pricing,
+) -> Result<CostReport, LedgerError> {
     run_policy_market(policy, demands, &Market::single(pricing))
 }
 

@@ -11,8 +11,8 @@
 //!   "market": {
 //!     "on_demand": 0.08,
 //!     "contracts": [
-//!       {"label": "1yr-light", "upfront": 0.2,  "rate": 0.039, "term": 6},
-//!       {"label": "3yr-light", "upfront": 0.45, "rate": 0.031, "term": 18}
+//!       {"label": "1yr-light", "upfront": 0.1333, "rate": 0.039, "term": 4},
+//!       {"label": "3yr-light", "upfront": 0.3,    "rate": 0.031, "term": 12}
 //!     ]
 //!   },
 //!   "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 120},
@@ -34,18 +34,22 @@
 //!   `"inline"` (`demands`: array of per-user demand arrays), or `"file"`
 //!   (`path` to a `gen-traces` CSV/BIN, optional `slots` for CSV).
 //! * `policies` — strings as above, or objects
-//!   `{"policy": "deterministic", "z": 0.4, "window": 60}` (custom `z` /
-//!   windows are single-contract-market only).
+//!   `{"policy": "deterministic", "z": 0.4, "window": 60}`. Custom `z` is
+//!   single-contract-market only; prediction windows work on any menu as
+//!   long as `w < min τ` (Sec. VI semantics per contract).
 //! * `window` — default prediction window applied to deterministic /
-//!   randomized entries (single-contract markets only).
-//! * `offline` — when true and the trace has exactly one user, also solve
-//!   the per-contract exact DP ([`offline::optimal_market`]) and report
-//!   the deterministic policy's cost ratio against it, next to the
-//!   `2 − α_max` comparison bound.
+//!   randomized entries.
+//! * `offline` — when true and the trace has exactly one user, solve the
+//!   offline comparator: the joint multi-contract DP
+//!   ([`offline::optimal_market_joint`]) when tractable, with the
+//!   per-contract restricted DP ([`offline::optimal_market`]) as the
+//!   upper-bound cross-check; the deterministic policies' cost ratios are
+//!   reported against it, next to the `2 − α_max` comparison bound.
 //!
 //! Reports render as text ([`ScenarioReport::render`]) and serialize as
-//! `cloudreserve-scenario/v1` JSON ([`ScenarioReport::to_json`]) for CI
-//! trajectory tracking.
+//! `cloudreserve-scenario/v2` JSON ([`ScenarioReport::to_json`]) for CI
+//! trajectory tracking (v2 adds `offline.joint`, `offline.restricted_cost`
+//! and `deterministic_window_ratio` to v1).
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -265,19 +269,33 @@ impl ScenarioSpec {
             }
         }
         ensure!(!policies.is_empty(), "policies: at least one policy required");
-        if !market.is_single() {
-            for spec in &policies {
-                let bad = matches!(
-                    spec,
-                    PolicySpec::Deterministic { z: Some(_), .. }
-                        | PolicySpec::Deterministic { window: 1.., .. }
-                        | PolicySpec::Randomized { window: 1.., .. }
-                );
+        // Prediction windows are a feature path on any menu (Sec. VI
+        // semantics per contract); only `w ≥ min τ` is rejected, since no
+        // contract's check window could hold it. Custom thresholds remain
+        // single-contract (one `z` does not map onto a menu).
+        let min_term = market.contracts().iter().map(|c| c.term).min();
+        for spec in &policies {
+            if !market.is_single() {
                 ensure!(
-                    !bad,
-                    "policy '{}': custom z / prediction windows need a single-contract market",
+                    !matches!(spec, PolicySpec::Deterministic { z: Some(_), .. }),
+                    "policy '{}': custom z needs a single-contract market",
                     spec.name()
                 );
+            }
+            let w = match spec {
+                PolicySpec::Deterministic { window, .. } => *window,
+                PolicySpec::Randomized { window, .. } => *window,
+                _ => 0,
+            };
+            if w > 0 {
+                if let Some(tau) = min_term {
+                    ensure!(
+                        w < tau,
+                        "policy '{}': prediction window {w} must be shorter than the shortest \
+                         term on the menu ({tau})",
+                        spec.name()
+                    );
+                }
             }
         }
 
@@ -306,12 +324,20 @@ pub struct PolicyOutcome {
 /// Offline comparator (single-user traces only).
 #[derive(Debug, Clone)]
 pub struct OfflineOutcome {
-    /// Best restricted offline cost (per-contract exact DP ∪ on-demand).
+    /// Tightest available offline cost: the joint multi-contract DP
+    /// ([`offline::optimal_market_joint`]) when tractable, otherwise the
+    /// best restricted single-contract schedule.
     pub cost: f64,
     pub reservations: u64,
-    /// Which contract the best schedule commits to (`None` = on-demand).
+    /// Whether `cost` comes from the joint DP.
+    pub joint: bool,
+    /// Best restricted (single-contract ∪ on-demand) cost — the
+    /// upper-bound cross-check on the joint DP.
+    pub restricted_cost: f64,
+    /// Which contract the best restricted schedule commits to
+    /// (`None` = pure on-demand).
     pub contract: Option<usize>,
-    /// Contracts skipped as DP-intractable.
+    /// Contracts skipped by the restricted DP as intractable.
     pub skipped: usize,
 }
 
@@ -329,12 +355,16 @@ pub struct ScenarioReport {
     pub ratio_bound: f64,
     pub policies: Vec<PolicyOutcome>,
     pub offline: Option<OfflineOutcome>,
-    /// Deterministic-policy cost / offline cost, when both are present.
+    /// Deterministic-policy cost / offline cost, when both are present
+    /// (the windowless `z = β` entry).
     pub deterministic_ratio: Option<f64>,
+    /// Same ratio for the first prediction-window deterministic entry
+    /// (Sec. VI), when the suite has one.
+    pub deterministic_window_ratio: Option<f64>,
 }
 
 impl ScenarioReport {
-    /// Machine-readable report (`cloudreserve-scenario/v1`).
+    /// Machine-readable report (`cloudreserve-scenario/v2`).
     pub fn to_json(&self) -> Json {
         let policies = self
             .policies
@@ -353,6 +383,8 @@ impl ScenarioReport {
             Some(o) => Json::obj(vec![
                 ("cost", Json::Num(o.cost)),
                 ("reservations", Json::Num(o.reservations as f64)),
+                ("joint", Json::Bool(o.joint)),
+                ("restricted_cost", Json::Num(o.restricted_cost)),
                 (
                     "contract",
                     o.contract.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null),
@@ -361,7 +393,7 @@ impl ScenarioReport {
             ]),
         };
         Json::obj(vec![
-            ("schema", Json::Str("cloudreserve-scenario/v1".into())),
+            ("schema", Json::Str("cloudreserve-scenario/v2".into())),
             ("name", Json::Str(self.name.clone())),
             ("users", Json::Num(self.users as f64)),
             ("slots", Json::Num(self.slots as f64)),
@@ -374,6 +406,10 @@ impl ScenarioReport {
             (
                 "deterministic_ratio",
                 self.deterministic_ratio.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "deterministic_window_ratio",
+                self.deterministic_window_ratio.map(Json::Num).unwrap_or(Json::Null),
             ),
         ])
     }
@@ -402,12 +438,17 @@ impl ScenarioReport {
         }
         if let Some(o) = &self.offline {
             out.push_str(&format!(
-                "offline (best single contract): cost {:.4}, {} reservations{}{}\n",
+                "offline ({}): cost {:.4}, {} reservations{}{}\n",
+                if o.joint { "joint multi-contract DP" } else { "best single contract" },
                 o.cost,
                 o.reservations,
                 match o.contract {
-                    Some(c) => format!(", commits to contract {c}"),
-                    None => ", pure on-demand".to_string(),
+                    Some(c) => {
+                        format!(", restricted best: contract {c} ({:.4})", o.restricted_cost)
+                    }
+                    None => {
+                        format!(", restricted best: pure on-demand ({:.4})", o.restricted_cost)
+                    }
                 },
                 if o.skipped > 0 {
                     format!(" ({} contract(s) DP-intractable, skipped)", o.skipped)
@@ -419,6 +460,12 @@ impl ScenarioReport {
         if let Some(r) = self.deterministic_ratio {
             out.push_str(&format!(
                 "deterministic / offline ratio: {:.4} (comparison bound 2 - alpha_max = {:.4})\n",
+                r, self.ratio_bound
+            ));
+        }
+        if let Some(r) = self.deterministic_window_ratio {
+            out.push_str(&format!(
+                "deterministic(window) / offline ratio: {:.4} (comparison bound {:.4})\n",
                 r, self.ratio_bound
             ));
         }
@@ -436,12 +483,17 @@ pub fn run(spec: &ScenarioSpec, threads: usize) -> Result<ScenarioReport> {
 
     let mut outcomes = Vec::with_capacity(spec.policies.len());
     let mut det_total: Option<f64> = None;
+    let mut det_window_total: Option<f64> = None;
     for pspec in &spec.policies {
         let res: FleetResult = run_fleet_flat(&flat, &spec.market, pspec, threads);
-        if det_total.is_none()
-            && matches!(pspec, PolicySpec::Deterministic { z: None, window: 0 })
-        {
-            det_total = Some(res.total_cost());
+        match pspec {
+            PolicySpec::Deterministic { z: None, window: 0 } if det_total.is_none() => {
+                det_total = Some(res.total_cost());
+            }
+            PolicySpec::Deterministic { z: None, window: 1.. } if det_window_total.is_none() => {
+                det_window_total = Some(res.total_cost());
+            }
+            _ => {}
         }
         outcomes.push(PolicyOutcome {
             name: res.policy.clone(),
@@ -452,21 +504,40 @@ pub fn run(spec: &ScenarioSpec, threads: usize) -> Result<ScenarioReport> {
     }
 
     let offline_outcome = if spec.offline && pop.users.len() == 1 {
-        let sol = offline::optimal_market(&pop.users[0].demand, &spec.market);
-        sol.best.map(|(contract, s)| OfflineOutcome {
-            cost: s.cost,
-            reservations: s.reservations,
-            contract,
-            skipped: sol.skipped.len(),
-        })
+        let demand = &pop.users[0].demand;
+        let restricted = offline::optimal_market(demand, &spec.market);
+        let joint = offline::optimal_market_joint(demand, &spec.market);
+        match (joint, restricted.best) {
+            // The joint DP is tractable only when every per-contract DP is,
+            // so a solved joint always comes with a restricted cross-check.
+            (Some(j), Some((contract, r))) => Some(OfflineOutcome {
+                cost: j.cost,
+                reservations: j.reservations,
+                joint: true,
+                restricted_cost: r.cost,
+                contract,
+                skipped: restricted.skipped.len(),
+            }),
+            (None, Some((contract, r))) => Some(OfflineOutcome {
+                cost: r.cost,
+                reservations: r.reservations,
+                joint: false,
+                restricted_cost: r.cost,
+                contract,
+                skipped: restricted.skipped.len(),
+            }),
+            (_, None) => None,
+        }
     } else {
         None
     };
 
-    let deterministic_ratio = match (&offline_outcome, det_total) {
-        (Some(o), Some(det)) if o.cost > 0.0 => Some(det / o.cost),
+    let ratio_against_offline = |total: Option<f64>| match (&offline_outcome, total) {
+        (Some(o), Some(t)) if o.cost > 0.0 => Some(t / o.cost),
         _ => None,
     };
+    let deterministic_ratio = ratio_against_offline(det_total);
+    let deterministic_window_ratio = ratio_against_offline(det_window_total);
 
     let alpha_max = spec.market.alpha_max();
     Ok(ScenarioReport {
@@ -480,6 +551,7 @@ pub fn run(spec: &ScenarioSpec, threads: usize) -> Result<ScenarioReport> {
         policies: outcomes,
         offline: offline_outcome,
         deterministic_ratio,
+        deterministic_window_ratio,
     })
 }
 
@@ -494,8 +566,8 @@ mod tests {
           "market": {
             "on_demand": 0.08,
             "contracts": [
-              {"label": "1yr", "upfront": 0.2, "rate": 0.039, "term": 6},
-              {"label": "3yr", "upfront": 0.45, "rate": 0.031, "term": 18}
+              {"label": "1yr", "upfront": 0.1333, "rate": 0.039, "term": 4},
+              {"label": "3yr", "upfront": 0.3, "rate": 0.031, "term": 12}
             ]
           },
           "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 120},
@@ -517,10 +589,13 @@ mod tests {
         assert_eq!(report.policies.len(), 3);
         // all-on-demand normalizes to exactly 1
         assert!((report.policies[0].mean_normalized - 1.0).abs() < 1e-9);
-        // offline solved, deterministic committed at least once, and the
-        // ratio respects the 2 - alpha_max comparison bound
+        // offline solved (joint DP on this compressed menu), deterministic
+        // committed at least once, and the ratio respects the 2 - alpha_max
+        // comparison bound
         let off = report.offline.as_ref().expect("offline DP ran");
         assert!(off.cost > 0.0);
+        assert!(off.joint, "terms 4 + 12 at unit demand are joint-DP tractable");
+        assert!(off.cost <= off.restricted_cost + 1e-9);
         assert!(report.policies[1].reservations >= 1);
         let ratio = report.deterministic_ratio.expect("ratio computed");
         assert!(
@@ -531,12 +606,34 @@ mod tests {
         // JSON report round-trips through the parser
         let text = report.to_json().dump_pretty();
         let back = parse(&text).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("cloudreserve-scenario/v1"));
+        assert_eq!(back.get("schema").as_str(), Some("cloudreserve-scenario/v2"));
         assert_eq!(back.get("policies").as_arr().unwrap().len(), 3);
     }
 
     #[test]
-    fn rejects_windows_on_multi_contract_markets() {
+    fn accepts_windows_on_multi_contract_markets() {
+        let text = r#"{
+          "name": "windowed-menu",
+          "market": {"on_demand": 0.08, "contracts": [
+            {"upfront": 0.2, "rate": 0.039, "term": 6},
+            {"upfront": 0.45, "rate": 0.031, "term": 18}
+          ]},
+          "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 40},
+          "policies": ["all-on-demand", "deterministic", "randomized"],
+          "window": 4
+        }"#;
+        let spec = ScenarioSpec::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(spec.market.len(), 2);
+        let report = run(&spec, 1).unwrap();
+        assert_eq!(report.policies.len(), 3);
+        assert!(report.policies[1].name.contains("w=4"));
+        // no offline comparator requested -> no ratios
+        assert!(report.deterministic_ratio.is_none());
+        assert!(report.deterministic_window_ratio.is_none());
+    }
+
+    #[test]
+    fn rejects_windows_reaching_the_shortest_term() {
         let text = r#"{
           "name": "bad",
           "market": {"on_demand": 0.08, "contracts": [
@@ -545,7 +642,22 @@ mod tests {
           ]},
           "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 10},
           "policies": ["deterministic"],
-          "window": 4
+          "window": 6
+        }"#;
+        let err = ScenarioSpec::from_json(&parse(text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("shortest"));
+    }
+
+    #[test]
+    fn rejects_custom_z_on_multi_contract_markets() {
+        let text = r#"{
+          "name": "bad",
+          "market": {"on_demand": 0.08, "contracts": [
+            {"upfront": 0.2, "rate": 0.039, "term": 6},
+            {"upfront": 0.45, "rate": 0.031, "term": 18}
+          ]},
+          "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 10},
+          "policies": [{"policy": "deterministic", "z": 0.4}]
         }"#;
         let err = ScenarioSpec::from_json(&parse(text).unwrap()).unwrap_err();
         assert!(format!("{err:#}").contains("single-contract"));

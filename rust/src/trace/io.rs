@@ -42,8 +42,10 @@ pub fn read_csv(path: &Path, slots: usize) -> Result<Population> {
         let (Some(uid), Some(slot), Some(d)) = (parts.next(), parts.next(), parts.next()) else {
             bail!("line {}: expected user_id,slot,demand, got '{line}'", lineno + 1);
         };
-        let uid: u32 = uid.trim().parse().with_context(|| format!("line {}: bad user_id", lineno + 1))?;
-        let slot: usize = slot.trim().parse().with_context(|| format!("line {}: bad slot", lineno + 1))?;
+        let uid: u32 =
+            uid.trim().parse().with_context(|| format!("line {}: bad user_id", lineno + 1))?;
+        let slot: usize =
+            slot.trim().parse().with_context(|| format!("line {}: bad slot", lineno + 1))?;
         let d: u32 = d.trim().parse().with_context(|| format!("line {}: bad demand", lineno + 1))?;
         if slot >= slots {
             bail!("line {}: slot {slot} >= trace length {slots}", lineno + 1);

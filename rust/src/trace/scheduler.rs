@@ -141,7 +141,13 @@ pub fn demand_curve(tasks: &[Task], capacity: Capacity, slots: usize) -> Vec<u32
                 inst.groups.push(task.anti_affinity);
             }
             inst.busy_until = inst.busy_until.max(end);
-            placed.push(Placed { instance: idx, end, cpu: task.cpu, mem: task.mem, group: task.anti_affinity });
+            placed.push(Placed {
+                instance: idx,
+                end,
+                cpu: task.cpu,
+                mem: task.mem,
+                group: task.anti_affinity,
+            });
         }
         // count live instances
         demand[t] = instances.iter().filter(|i| i.busy_until > t).count() as u32;

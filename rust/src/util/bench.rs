@@ -21,7 +21,11 @@ pub struct BenchResult {
 
 impl BenchResult {
     /// Build a result, sorting the samples once up front.
-    pub fn new(name: impl Into<String>, mut samples_ns: Vec<f64>, iters_per_sample: u64) -> BenchResult {
+    pub fn new(
+        name: impl Into<String>,
+        mut samples_ns: Vec<f64>,
+        iters_per_sample: u64,
+    ) -> BenchResult {
         samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         BenchResult { name: name.into(), samples_ns, iters_per_sample }
     }
@@ -130,8 +134,9 @@ impl Bencher {
             }
         }
         let per_iter = start.elapsed().as_secs_f64() / iters_done as f64;
-        let iters_per_sample =
-            ((self.min_sample_time.as_secs_f64() / per_iter.max(1e-12)) as u64).clamp(1, 10_000_000);
+        let iters_per_sample = ((self.min_sample_time.as_secs_f64() / per_iter.max(1e-12))
+            as u64)
+            .clamp(1, 10_000_000);
 
         let mut samples_ns = Vec::with_capacity(self.samples);
         for _ in 0..self.samples {

@@ -1,0 +1,328 @@
+//! Differential harness for the multi-contract market stack: random menus
+//! and demand traces, three independent cost oracles, one sandwich.
+//!
+//! For every generated `(menu, trace)` case the suite asserts
+//!
+//! ```text
+//! joint DP  ≤  restricted per-contract DP
+//! joint DP  ≤  every online policy (billed through the Ledger)
+//! deterministic (z = β, w = 0)  ≤  (2 − α_max) · joint DP
+//! ```
+//!
+//! plus engine wiring: each policy's cost is computed twice — through the
+//! boxed `run_policy_market` replay and through the batched zero-allocation
+//! fleet engine (`run_fleet_flat` over a single-user population) — and the
+//! two must agree **bit-identically**. Single-contract menus are further
+//! pinned bit-identically to the classic Algorithm 1/2 (and 3/4 with
+//! windows) policies.
+//!
+//! Soundness of the sandwich: the joint DP searches a superset of every
+//! restricted schedule and of every feasible decision sequence under the
+//! exact billing convention the `Ledger` uses (serve `min(d, active)` on
+//! reservations, cheapest rate first), so the first two inequalities are
+//! theorems of the implementation. The third is the paper's Prop. 1 bound
+//! with `α_max = max_j α_j`, checked *empirically* over the menu family
+//! generated here — the paper leaves multi-contract competitive theory
+//! open (see `PAPERS.md`: Wu et al. 1607.05178, Zhang et al. 1611.07379).
+
+use cloudreserve::algos::deterministic::Deterministic;
+use cloudreserve::algos::market::{MarketDeterministic, MarketRandomized};
+use cloudreserve::algos::offline;
+use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::pricing::{Contract, Market, Pricing};
+use cloudreserve::sim::engine::run_fleet_flat;
+use cloudreserve::sim::fleet::{suite_specs, PolicySpec};
+use cloudreserve::sim::{run_policy, run_policy_market};
+use cloudreserve::trace::{Population, UserTrace};
+use cloudreserve::util::rng::Rng;
+
+/// Random two-tier menu in the regime the harness certifies: every
+/// surviving contract's break-even is reachable inside its own window
+/// (`β < p·τ`, which dominance pruning guarantees anyway), discounts are
+/// moderate (`α ≤ 0.55`), and the deeper contract has the longer term and
+/// the higher break-even.
+fn gen_menu(rng: &mut Rng) -> Market {
+    let p = 0.1 + rng.f64() * 0.3;
+    let tau_s = 3 + rng.below(2) as usize; // 3..=4
+    let tau_d = (tau_s + 2) + rng.below(7 - (tau_s + 2) as u64) as usize; // ..=6
+    let alpha_s = 0.05 + rng.f64() * 0.5;
+    let alpha_d = 0.05 + rng.f64() * 0.5;
+    let beta_s = p * (1.0 + rng.f64() * (tau_s as f64 - 1.0));
+    let beta_d = beta_s + rng.f64() * (0.9 * p * tau_d as f64 - beta_s).max(0.0);
+    Market::new(
+        p,
+        vec![
+            Contract { upfront: beta_s * (1.0 - alpha_s), rate: alpha_s * p, term: tau_s },
+            Contract { upfront: beta_d * (1.0 - alpha_d), rate: alpha_d * p, term: tau_d },
+        ],
+    )
+}
+
+fn gen_trace(rng: &mut Rng, t_len: usize) -> Vec<u32> {
+    match rng.below(3) {
+        0 => vec![1u32; t_len],
+        1 => (0..t_len).map(|_| rng.below(3) as u32).collect(),
+        _ => (0..t_len)
+            .map(|_| if rng.chance(0.35) { 0 } else { 1 + rng.below(2) as u32 })
+            .collect(),
+    }
+}
+
+/// Menu policy set under test: the Sec. VII suite plus windowed variants.
+fn policy_specs(market: &Market, seed: u64, rng: &mut Rng) -> Vec<PolicySpec> {
+    let mut specs = suite_specs(seed).to_vec();
+    if let Some(min_term) = market.contracts().iter().map(|c| c.term).min() {
+        if min_term > 1 {
+            let w = 1 + rng.below(min_term as u64 - 1) as usize;
+            specs.push(PolicySpec::Deterministic { z: None, window: w });
+            specs.push(PolicySpec::Randomized { window: w, seed });
+        }
+    }
+    specs
+}
+
+/// One policy's ledger-billed total, computed through both the boxed
+/// replay and the batched engine — asserted bit-identical.
+fn billed_total(demands: &[u32], market: &Market, spec: &PolicySpec, what: &str) -> f64 {
+    let mut policy = spec.build(market, 0);
+    let report = run_policy_market(policy.as_mut(), demands, market)
+        .unwrap_or_else(|e| panic!("{what}: {}: infeasible decision: {e}", spec.name()));
+    let pop = Population { users: vec![UserTrace::new(0, demands.to_vec())] };
+    let fleet = run_fleet_flat(&pop.flatten(), market, spec, 2);
+    assert_eq!(fleet.per_user.len(), 1, "{what}: {}", spec.name());
+    assert_eq!(
+        fleet.per_user[0].absolute_cost.to_bits(),
+        report.total.to_bits(),
+        "{what}: {}: engine vs boxed replay diverge ({} vs {})",
+        spec.name(),
+        fleet.per_user[0].absolute_cost,
+        report.total
+    );
+    assert_eq!(fleet.per_user[0].reservations, report.reservations, "{what}: {}", spec.name());
+    report.total
+}
+
+#[test]
+fn cost_sandwich_on_random_menus() {
+    let mut rng = Rng::new(0xD1FF);
+    for case in 0..40 {
+        let market = gen_menu(&mut rng);
+        let demands = gen_trace(&mut rng, 40);
+        let what = format!("case {case} (menu k={})", market.len());
+        let d_max = demands.iter().copied().max().unwrap_or(0);
+        let terms: Vec<usize> = market.contracts().iter().map(|c| c.term).collect();
+        assert!(
+            offline::dp_joint_tractable(d_max, &terms),
+            "{what}: generator must stay inside the joint envelope"
+        );
+        let joint = offline::optimal_market_joint(&demands, &market).expect("tractable");
+
+        // joint <= restricted (superset search space, same billing)
+        let restricted = offline::optimal_market(&demands, &market);
+        if let Some((_, best)) = restricted.best {
+            assert!(
+                joint.cost <= best.cost + 1e-9 * (1.0 + best.cost),
+                "{what}: joint {} > restricted {}",
+                joint.cost,
+                best.cost
+            );
+        }
+
+        // joint <= every online policy, through both replay paths
+        let mut det_total: Option<f64> = None;
+        for spec in policy_specs(&market, 0xA5 ^ case as u64, &mut rng) {
+            let total = billed_total(&demands, &market, &spec, &what);
+            assert!(
+                joint.cost <= total + 1e-9 * (1.0 + total),
+                "{what}: joint {} > {} cost {total}",
+                joint.cost,
+                spec.name()
+            );
+            if matches!(spec, PolicySpec::Deterministic { z: None, window: 0 }) {
+                det_total = Some(total);
+            }
+        }
+
+        // deterministic (z = beta, online) <= (2 - alpha_max) * joint
+        let det = det_total.expect("suite contains the deterministic policy");
+        let bound = (2.0 - market.alpha_max()) * joint.cost;
+        assert!(
+            det <= bound + 1e-9 * (1.0 + bound),
+            "{what}: deterministic {det} > (2 - alpha_max) * joint = {bound} \
+             (alpha_max {}, joint {})",
+            market.alpha_max(),
+            joint.cost
+        );
+    }
+}
+
+#[test]
+fn single_contract_menus_stay_bit_identical_to_the_classic_policies() {
+    let mut rng = Rng::new(0x51D3);
+    for case in 0..25 {
+        let tau = 3 + rng.below(30) as usize;
+        let p = 0.02 + rng.f64() * 0.3;
+        let alpha = rng.f64() * 0.95;
+        let pricing = Pricing::normalized(p, alpha, tau);
+        let market = Market::single(pricing);
+        let w = rng.below(tau as u64) as usize; // 0..tau-1
+        let demands: Vec<u32> = (0..200)
+            .map(|_| if rng.chance(0.4) { 0 } else { rng.below(4) as u32 })
+            .collect();
+        let seed = 77 + case as u64;
+
+        let menu_det = run_policy_market(
+            &mut MarketDeterministic::with_window(market.clone(), w),
+            &demands,
+            &market,
+        )
+        .unwrap();
+        let classic_det =
+            run_policy(&mut Deterministic::new(pricing, pricing.beta(), w), &demands, pricing)
+                .unwrap();
+        assert_eq!(
+            menu_det.total.to_bits(),
+            classic_det.total.to_bits(),
+            "case {case} w={w}: menu det {} vs Algorithm {} {}",
+            menu_det.total,
+            if w == 0 { 1 } else { 3 },
+            classic_det.total
+        );
+        assert_eq!(menu_det.reservations, classic_det.reservations);
+        assert_eq!(menu_det.on_demand_slots, classic_det.on_demand_slots);
+
+        let menu_rand = run_policy_market(
+            &mut MarketRandomized::with_window(market.clone(), w, seed),
+            &demands,
+            &market,
+        )
+        .unwrap();
+        let classic_rand =
+            run_policy(&mut Randomized::with_window(pricing, w, seed), &demands, pricing).unwrap();
+        assert_eq!(
+            menu_rand.total.to_bits(),
+            classic_rand.total.to_bits(),
+            "case {case} w={w}: menu randomized vs Algorithm {}",
+            if w == 0 { 2 } else { 4 },
+        );
+    }
+}
+
+#[test]
+fn sandwich_holds_per_user_through_the_batched_engine() {
+    // Multi-user population through the chunked-shard engine: every
+    // per-user ledger total must dominate that user's joint DP, across
+    // thread counts (which must not change results at all).
+    let mut rng = Rng::new(0xF1EE7);
+    let market = Market::new(
+        0.2,
+        vec![
+            Contract { upfront: 0.35, rate: 0.03, term: 4 },
+            Contract { upfront: 0.8, rate: 0.015, term: 7 },
+        ],
+    );
+    assert_eq!(market.len(), 2);
+    let users: Vec<UserTrace> = (0..6)
+        .map(|u| UserTrace::new(u as u32, gen_trace(&mut rng, 40)))
+        .collect();
+    let pop = Population { users };
+    let flat = pop.flatten();
+    let joints: Vec<f64> = pop
+        .users
+        .iter()
+        .map(|u| offline::optimal_market_joint(&u.demand, &market).expect("tractable").cost)
+        .collect();
+    for spec in policy_specs(&market, 0x77, &mut rng) {
+        let one = run_fleet_flat(&flat, &market, &spec, 1);
+        let many = run_fleet_flat(&flat, &market, &spec, 3);
+        for ((a, b), joint) in one.per_user.iter().zip(&many.per_user).zip(&joints) {
+            assert_eq!(a.user_id, b.user_id);
+            assert_eq!(
+                a.absolute_cost.to_bits(),
+                b.absolute_cost.to_bits(),
+                "{}: thread-count changed user {}",
+                spec.name(),
+                a.user_id
+            );
+            assert!(
+                *joint <= a.absolute_cost + 1e-9 * (1.0 + a.absolute_cost),
+                "{}: user {}: joint {} > billed {}",
+                spec.name(),
+                a.user_id,
+                joint,
+                a.absolute_cost
+            );
+        }
+    }
+}
+
+#[test]
+fn joint_dp_is_exact_against_brute_force_menus() {
+    // Independent exactness oracle: exhaustive search over all per-slot
+    // purchase vectors (each contract 0..=D per slot), billed exactly like
+    // the ledger. Tiny instances only.
+    fn brute(demands: &[u32], market: &Market) -> f64 {
+        fn rec(
+            t: usize,
+            demands: &[u32],
+            hist: &mut [Vec<u32>],
+            market: &Market,
+            d_max: u32,
+        ) -> f64 {
+            if t == demands.len() {
+                return 0.0;
+            }
+            let k = market.len();
+            let d = demands[t];
+            let base = d_max as usize + 1;
+            let mut best = f64::INFINITY;
+            for combo in 0..base.pow(k as u32) {
+                let mut digits = combo;
+                let mut fees = 0.0;
+                for h in hist.iter_mut() {
+                    h.push((digits % base) as u32);
+                    digits /= base;
+                }
+                let avail: Vec<u32> = (0..k)
+                    .map(|j| {
+                        let lo = hist[j].len().saturating_sub(market.contract(j).term);
+                        hist[j][lo..].iter().sum::<u32>()
+                    })
+                    .collect();
+                for j in 0..k {
+                    fees += *hist[j].last().unwrap() as f64 * market.contract(j).upfront;
+                }
+                let total: u32 = avail.iter().sum();
+                let usage = d.min(total);
+                let mut step = fees + market.p() * (d - usage) as f64;
+                let mut rem = usage;
+                for &cid in market.rate_order() {
+                    let take = rem.min(avail[cid]);
+                    step += market.contract(cid).rate * take as f64;
+                    rem -= take;
+                }
+                best = best.min(step + rec(t + 1, demands, hist, market, d_max));
+                for h in hist.iter_mut() {
+                    h.pop();
+                }
+            }
+            best
+        }
+        let d_max = demands.iter().copied().max().unwrap_or(0);
+        let mut hist: Vec<Vec<u32>> = vec![Vec::new(); market.len()];
+        rec(0, demands, &mut hist, market, d_max)
+    }
+
+    let mut rng = Rng::new(0xB00F);
+    for case in 0..12 {
+        let market = gen_menu(&mut rng);
+        let demands: Vec<u32> = (0..6).map(|_| rng.below(2) as u32).collect();
+        let joint = offline::optimal_market_joint(&demands, &market).expect("tractable");
+        let bf = brute(&demands, &market);
+        assert!(
+            (joint.cost - bf).abs() < 1e-9,
+            "case {case}: joint {} vs brute force {bf}",
+            joint.cost
+        );
+    }
+}

@@ -17,7 +17,9 @@
 //! ledger/policy unit tests).
 
 use cloudreserve::pricing::{Contract, Market, Pricing};
-use cloudreserve::sim::fleet::{run_fleet, run_fleet_reference, suite_specs, FleetResult, PolicySpec};
+use cloudreserve::sim::fleet::{
+    run_fleet, run_fleet_reference, suite_specs, FleetResult, PolicySpec,
+};
 use cloudreserve::sim::run_policy_market;
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::trace::Population;
@@ -92,14 +94,27 @@ fn engine_matches_reference_across_populations_seeds_and_threads() {
     }
 }
 
+/// Menu specs under parity test: the Sec. VII suite plus the windowed menu
+/// variants (the cross-tier accounting runs on both paths; `menu_market`'s
+/// break-evens are inverted versus its terms — β₀ ≈ 1.67 < β₁ = 1.875 —
+/// so shallow purchases leave the deep scan uncompensated, exercising the
+/// cross-tier path rather than the uniform-compensation one).
+fn menu_specs_under_test(seed: u64) -> Vec<PolicySpec> {
+    let mut specs = suite_specs(seed).to_vec();
+    specs.push(PolicySpec::Deterministic { z: None, window: 200 });
+    specs.push(PolicySpec::Randomized { window: 90, seed });
+    specs
+}
+
 #[test]
 fn engine_matches_reference_on_multi_contract_menus() {
     // The menu policies (MarketDeterministic / MarketRandomized / pinned
     // baselines) must replay identically through the monomorphic engine
-    // and the boxed reference path, across thread counts.
+    // and the boxed reference path, across thread counts — including the
+    // prediction-window variants over the borrowed future slices.
     let mkt = menu_market();
     let pop = generate(&SynthConfig { users: 12, slots: 1500, seed: 7, ..Default::default() });
-    for spec in suite_specs(0x51) {
+    for spec in menu_specs_under_test(0x51) {
         let engine_1t = run_fleet(&pop, &mkt, &spec, 1);
         for threads in [3usize, 9] {
             let engine = run_fleet(&pop, &mkt, &spec, threads);
@@ -123,7 +138,7 @@ fn engine_matches_direct_run_policy_per_user() {
     let pop = generate(&SynthConfig { users: 12, slots: 2000, seed: 5, ..Default::default() });
     for (mkt, specs) in [
         (market(), specs_under_test(9)),
-        (menu_market(), suite_specs(9).to_vec()),
+        (menu_market(), menu_specs_under_test(9)),
     ] {
         for spec in specs {
             let fleet = run_fleet(&pop, &mkt, &spec, 4);

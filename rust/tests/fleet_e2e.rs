@@ -17,7 +17,8 @@ fn broker_matches_fleet_simulator_deterministic() {
     let pricing = pricing();
 
     // Path 1: sequential fleet simulator.
-    let sim = run_fleet(&pop, &Market::single(pricing), &PolicySpec::Deterministic { z: None, window: 0 }, 4);
+    let spec = PolicySpec::Deterministic { z: None, window: 0 };
+    let sim = run_fleet(&pop, &Market::single(pricing), &spec, 4);
 
     // Path 2: streaming broker (slot-major event order, as in production).
     let cfg = BrokerConfig { pricing, shards: 4, queue_capacity: 1024, window: 32 };
@@ -55,7 +56,8 @@ fn broker_matches_fleet_simulator_randomized() {
     let pricing = pricing();
     let seed = 99u64;
 
-    let sim = run_fleet(&pop, &Market::single(pricing), &PolicySpec::Randomized { window: 0, seed }, 3);
+    let spec = PolicySpec::Randomized { window: 0, seed };
+    let sim = run_fleet(&pop, &Market::single(pricing), &spec, 3);
 
     let cfg = BrokerConfig { pricing, shards: 3, queue_capacity: 1024, window: 16 };
     let broker = Broker::start(cfg, PolicyKind::Randomized { seed });

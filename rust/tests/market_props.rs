@@ -6,11 +6,24 @@
 //! * the break-even `β` is monotone in the discount factor `α` (deeper
 //!   discount ⇒ later break-even) and anchored at `β(α=0) = upfront`,
 //! * a single-contract `Market` reproduces classic `Pricing` costs
-//!   **bit-identically** across the policy + ledger stack.
+//!   **bit-identically** across the policy + ledger stack,
+//! * **no permanent shadowing**: under the cross-tier spend accounting, a
+//!   deeper contract whose window spans enough cheap-purchase cycles is
+//!   eventually purchased under sustained demand (the pre-fix accounting
+//!   reset the deep scan on every shallow purchase and never committed),
+//! * **spend conservation** (windowless policies): each scan's
+//!   uncompensated violation count is backed by real billing — it never
+//!   exceeds the number of window slots that either billed on-demand
+//!   instances or made a purchase (a purchase can cover its own trigger
+//!   slot, which is why purchase slots count). With a prediction window
+//!   the bound gains up to `w` lookahead slots per purchase by design
+//!   (see the `algos::market` module docs), so the property is pinned at
+//!   `w = 0` where it is exact.
 
 use cloudreserve::algos::deterministic::Deterministic;
 use cloudreserve::algos::market::{MarketDeterministic, MarketRandomized};
 use cloudreserve::algos::randomized::Randomized;
+use cloudreserve::ledger::Ledger;
 use cloudreserve::pricing::{Contract, Market, Pricing};
 use cloudreserve::sim::{run_policy, run_policy_market};
 use cloudreserve::util::prop::{check, check_no_shrink, shrink_demand, Config};
@@ -87,6 +100,140 @@ fn prop_beta_monotone_in_alpha() {
             // rate = alpha * p loses a few ulps, so compare with slack
             if b1 > b2 * (1.0 + 1e-9) {
                 return Err(format!("alpha {a1} <= {a2} but beta {b1} > {b2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Shadowing regime by construction: the shallow contract triggers every
+/// `g_s + τ_s` slots under constant unit demand, and the deep contract's
+/// window spans at least `m ≥ 3` such cycles while its break-even needs at
+/// most `(m−1)·g_s − 1` violating slots — so with cross-tier accounting
+/// (shallow purchases do *not* compensate the deeper scan, `β_d > β_s`)
+/// the deep contract must fire. Returns `(market, total_slots)`; the deep
+/// contract is id 1 after term-sorting.
+fn gen_shadowing_menu(rng: &mut Rng) -> (Market, usize) {
+    let p = 0.05 + rng.f64() * 0.2;
+    let tau_s = 4 + rng.below(5) as usize; // 4..=8
+    let g_s = 2 + rng.below(tau_s as u64 - 1) as usize; // 2..=tau_s
+    let alpha_s = 0.05 + rng.f64() * 0.65;
+    // trigger at exactly V = g_s: p*(g_s-1) < beta_s < p*g_s
+    let beta_s = p * (g_s as f64 - 1.0 + 0.1 + rng.f64() * 0.8);
+    let cycle = g_s + tau_s;
+    let m = 3 + rng.below(2) as usize; // 3..=4
+    let tau_d = m * cycle + rng.below(cycle as u64) as usize;
+    let alpha_d = rng.f64() * alpha_s; // <= alpha_s keeps upfront_d > upfront_s
+    let hi = 0.95 * p * ((m - 1) * g_s - 1) as f64;
+    let beta_d = beta_s + (hi - beta_s) * (0.1 + rng.f64() * 0.9);
+    assert!(beta_d > beta_s && beta_d < hi + 1e-12);
+    let market = Market::new(
+        p,
+        vec![
+            Contract { upfront: beta_s * (1.0 - alpha_s), rate: alpha_s * p, term: tau_s },
+            Contract { upfront: beta_d * (1.0 - alpha_d), rate: alpha_d * p, term: tau_d },
+        ],
+    );
+    (market, 2 * tau_d)
+}
+
+#[test]
+fn prop_no_permanent_shadowing() {
+    let cfg = Config { cases: 60, ..Default::default() };
+    check_no_shrink(&cfg, "no-permanent-shadowing", gen_shadowing_menu, |(market, t_len)| {
+        if market.len() != 2 {
+            return Err(format!("generator must keep both tiers, got {}", market.len()));
+        }
+        let mut policy = MarketDeterministic::new(market.clone());
+        let mut ledger = Ledger::new(market.clone());
+        let mut per_contract = [0u64; 2];
+        for _ in 0..*t_len {
+            let dec = policy.decide(1, &[]);
+            for &(cid, n) in dec.reservations {
+                per_contract[cid] += n as u64;
+            }
+            ledger.bill(1, &dec).map_err(|e| e.to_string())?;
+        }
+        if per_contract[1] == 0 {
+            return Err(format!(
+                "deep contract (beta {:.4}, term {}) was never purchased; shallow bought {} times",
+                market.beta(1),
+                market.contract(1).term,
+                per_contract[0]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spend_conservation() {
+    // p * V_j (the scan's uncompensated spend) never exceeds the billed
+    // on-demand spend in contract j's window plus p per purchase slot in
+    // it: every counted violation slot either billed >= 1 on-demand
+    // instance or was a purchase slot (the purchase covered its own
+    // trigger slot). Purely a property of the new accounting — checked at
+    // every slot, for every scan, on random two-tier menus. Windowless
+    // (w = 0) policies only: a prediction window adds up to w
+    // later-covered lookahead slots per purchase by design.
+    let cfg = Config { cases: 60, ..Default::default() };
+    check_no_shrink(
+        &cfg,
+        "spend-conservation",
+        |rng| {
+            let p = 0.05 + rng.f64() * 0.3;
+            let tau_s = 3 + rng.below(6) as usize;
+            let tau_d = tau_s + 2 + rng.below(10) as usize;
+            let market = Market::new(
+                p,
+                vec![
+                    Contract {
+                        upfront: 0.05 + rng.f64() * 0.8,
+                        rate: rng.f64() * 0.8 * p,
+                        term: tau_s,
+                    },
+                    Contract {
+                        upfront: 0.2 + rng.f64() * 1.5,
+                        rate: rng.f64() * 0.6 * p,
+                        term: tau_d,
+                    },
+                ],
+            );
+            let demands: Vec<u32> = (0..120)
+                .map(|_| if rng.chance(0.3) { 0 } else { rng.below(4) as u32 })
+                .collect();
+            (market, demands)
+        },
+        |(market, demands)| {
+            let k = market.len();
+            let mut policy = MarketDeterministic::new(market.clone());
+            let mut ledger = Ledger::new(market.clone());
+            // per slot: did it bill on-demand instances / make purchases?
+            let mut od_slots: Vec<bool> = Vec::new();
+            let mut buy_slots: Vec<bool> = Vec::new();
+            for (t, &d) in demands.iter().enumerate() {
+                let (on_demand, bought) = {
+                    let dec = policy.decide(d, &[]);
+                    let bought = dec.total_reserved();
+                    ledger.bill(d, &dec).map_err(|e| e.to_string())?;
+                    (dec.on_demand, bought)
+                };
+                od_slots.push(on_demand > 0);
+                buy_slots.push(bought > 0);
+                for j in 0..k {
+                    let tau = market.contract(j).term;
+                    let lo = (t + 1).saturating_sub(tau);
+                    let backing = (lo..=t)
+                        .filter(|&i| od_slots[i] || buy_slots[i])
+                        .count() as u32;
+                    let v = policy.scan_violations(j);
+                    if v > backing {
+                        return Err(format!(
+                            "t={t} contract {j} (tau {tau}): {v} violations > {backing} \
+                             backed slots"
+                        ));
+                    }
+                }
             }
             Ok(())
         },

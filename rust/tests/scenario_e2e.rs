@@ -1,24 +1,23 @@
-//! End-to-end test of the committed multi-contract scenario spec
-//! (`examples/scenarios/table1_two_term.json`): parse → run through the
-//! batched engine → verify the acceptance contract — two Table I terms on
-//! the menu, every policy feasible, and the deterministic menu policy's
-//! cost within `2 − α_max` of the restricted offline DP on the same trace.
+//! End-to-end tests of the committed multi-contract scenario specs
+//! (`examples/scenarios/table1_two_term.json` and
+//! `examples/scenarios/table1_two_term_window.json`): parse → run through
+//! the batched engine → verify the acceptance contract — two Table I terms
+//! on the menu, every policy feasible, the joint multi-contract offline DP
+//! solved (and under the restricted DP), and the deterministic menu
+//! policies (windowless and Sec. VI windowed) within `2 − α_max` of it.
 
 use cloudreserve::sim::scenario::{self, ScenarioSpec};
 use cloudreserve::util::json::parse;
 
-fn load_spec() -> ScenarioSpec {
-    let path = concat!(
-        env!("CARGO_MANIFEST_DIR"),
-        "/../examples/scenarios/table1_two_term.json"
-    );
+fn load_spec(name: &str) -> ScenarioSpec {
+    let path = format!("{}/../examples/scenarios/{name}", env!("CARGO_MANIFEST_DIR"));
     let text = std::fs::read_to_string(path).expect("committed scenario spec readable");
     ScenarioSpec::from_json(&parse(&text).expect("spec is valid JSON")).expect("spec parses")
 }
 
 #[test]
 fn committed_two_term_scenario_meets_the_ratio_bound() {
-    let spec = load_spec();
+    let spec = load_spec("table1_two_term.json");
     assert_eq!(spec.market.len(), 2, "two Table I terms on the menu");
     assert_eq!(spec.pruned_contracts, 0);
     assert!((spec.market.alpha_max() - 0.4875).abs() < 1e-12);
@@ -43,10 +42,20 @@ fn committed_two_term_scenario_meets_the_ratio_bound() {
     assert!(det.reservations >= 1, "stable demand must trigger reservations");
     assert!(det.mean_normalized < 1.0, "deterministic saves vs on-demand: {}", det.mean_normalized);
 
-    // Acceptance: deterministic cost <= (2 - alpha_max) * offline DP cost.
+    // The offline comparator is the joint DP here (terms 4 + 12 at unit
+    // demand), cross-checked against the restricted per-contract DP.
     let offline = report.offline.as_ref().expect("single-user trace solves the offline DP");
     assert!(offline.cost > 0.0);
+    assert!(offline.joint, "compressed menu must be joint-DP tractable");
+    assert!(
+        offline.cost <= offline.restricted_cost + 1e-9,
+        "joint {} must not exceed restricted {}",
+        offline.cost,
+        offline.restricted_cost
+    );
     assert_eq!(offline.skipped, 0, "both compressed terms are DP-tractable");
+
+    // Acceptance: deterministic cost <= (2 - alpha_max) * joint DP cost.
     let ratio = report.deterministic_ratio.expect("ratio computed");
     assert!((report.ratio_bound - (2.0 - 0.4875)).abs() < 1e-12);
     assert!(
@@ -55,22 +64,63 @@ fn committed_two_term_scenario_meets_the_ratio_bound() {
         report.ratio_bound
     );
 
-    // On stable unit demand the offline optimum commits to the deeper
+    // On stable unit demand the restricted optimum commits to the deeper
     // (better steady-state) 3-year contract.
     assert_eq!(offline.contract, Some(1));
 }
 
 #[test]
+fn committed_window_scenario_meets_the_bound_and_beats_the_online_variant() {
+    let spec = load_spec("table1_two_term_window.json");
+    assert_eq!(spec.market.len(), 2);
+    assert!(spec.offline);
+
+    let report = scenario::run(&spec, 2).expect("scenario runs end-to-end");
+    assert_eq!(report.users, 1);
+    assert_eq!(report.policies.len(), 4);
+
+    let offline = report.offline.as_ref().expect("offline comparator solved");
+    assert!(offline.joint, "window scenario pins the Sec. VI ratio against the joint DP");
+
+    // Sec. VI: with w = 3 slots of reliable prediction on stable demand,
+    // the windowed deterministic policy pays no more than the windowless
+    // one, and both respect the 2 - alpha_max comparison bound.
+    let ratio = report.deterministic_ratio.expect("windowless ratio");
+    let ratio_w = report.deterministic_window_ratio.expect("windowed ratio");
+    assert!(
+        ratio_w <= ratio + 1e-9,
+        "windowed ratio {ratio_w} must not exceed online ratio {ratio}"
+    );
+    assert!(ratio <= report.ratio_bound + 1e-9, "online ratio {ratio} over the bound");
+    assert!(ratio_w <= report.ratio_bound + 1e-9, "windowed ratio {ratio_w} over the bound");
+
+    // The windowed policies actually commit (and the randomized windowed
+    // entry bills feasibly end to end — run() would have errored).
+    let det_w = report
+        .policies
+        .iter()
+        .find(|p| p.name.contains("w=3") && p.name.starts_with("Deterministic"))
+        .expect("windowed deterministic in the suite");
+    assert!(det_w.reservations >= 1);
+    assert!(det_w.mean_normalized < 1.0);
+}
+
+#[test]
 fn scenario_json_report_shape_is_stable() {
-    let spec = load_spec();
+    let spec = load_spec("table1_two_term.json");
     let report = scenario::run(&spec, 1).expect("scenario runs");
     let doc = report.to_json();
-    assert_eq!(doc.get("schema").as_str(), Some("cloudreserve-scenario/v1"));
+    assert_eq!(doc.get("schema").as_str(), Some("cloudreserve-scenario/v2"));
     assert_eq!(doc.get("market_contracts").as_usize(), Some(2));
     assert_eq!(doc.get("policies").as_arr().map(|a| a.len()), Some(5));
     assert!(doc.get("deterministic_ratio").as_f64().is_some());
     assert!(doc.get("ratio_bound").as_f64().is_some());
     assert!(doc.get("offline").get("cost").as_f64().is_some());
+    assert!(doc.get("offline").get("restricted_cost").as_f64().is_some());
+    assert!(matches!(
+        *doc.get("offline").get("joint"),
+        cloudreserve::util::json::Json::Bool(true)
+    ));
     // serialized text re-parses
     let text = doc.dump_pretty();
     let back = parse(&text).unwrap();
