@@ -22,6 +22,10 @@ impl AllOnDemand {
     }
 }
 
+impl super::Reset for AllOnDemand {
+    fn reset(&mut self) {}
+}
+
 impl Policy for AllOnDemand {
     fn name(&self) -> String {
         "All-on-demand".to_string()
@@ -44,6 +48,14 @@ pub struct AllReserved {
 impl AllReserved {
     pub fn new(pricing: Pricing) -> AllReserved {
         AllReserved { pricing, cover: ResQueue::default(), t: 0, out: [(0, 0)] }
+    }
+}
+
+impl super::Reset for AllReserved {
+    fn reset(&mut self) {
+        self.cover.clear();
+        self.t = 0;
+        self.out = [(0, 0)];
     }
 }
 
@@ -118,6 +130,16 @@ impl Separate {
         }
         let covered = level.cover.active_at(t, tau);
         (reserve, demand01.saturating_sub(covered.min(demand01)))
+    }
+}
+
+impl super::Reset for Separate {
+    fn reset(&mut self) {
+        // levels are lazily re-created per user (their count tracks the
+        // peak demand seen), so dropping them IS the fresh state
+        self.levels.clear();
+        self.t = 0;
+        self.out = [(0, 0)];
     }
 }
 

@@ -75,6 +75,17 @@ impl Deterministic {
         self.z
     }
 
+    pub(crate) fn pricing(&self) -> &Pricing {
+        &self.pricing
+    }
+
+    /// Swap the threshold in place (used by `Randomized::reseed`; must be
+    /// paired with a `reset()` to stay equivalent to fresh construction).
+    pub(crate) fn set_threshold(&mut self, z: f64) {
+        assert!(z >= 0.0, "threshold must be non-negative");
+        self.z = z;
+    }
+
     /// Bookkeeping count `x_i` at insertion of window slot `i`: reservations
     /// whose influence range `[t'−τ+1, t'+τ−1]` covers `i`, i.e. those made
     /// at `t' ≥ i−τ+1` (reservation times never exceed the current `t ≤ i`).
@@ -90,6 +101,17 @@ impl Deterministic {
         self.scan.reserve();
         self.cover.push(t);
         self.scan_res.push_back(t);
+    }
+}
+
+impl super::Reset for Deterministic {
+    fn reset(&mut self) {
+        self.scan.clear();
+        self.cover.clear();
+        self.scan_res.clear();
+        self.t = 0;
+        self.next_scan_slot = 0;
+        self.out = [(0, 0)];
     }
 }
 

@@ -72,6 +72,13 @@ pub struct MarketDeterministic {
     thresholds: Vec<f64>,
     /// Prediction window `w < min τ`; 0 = purely online.
     w: usize,
+    /// Structure-of-arrays caches of the per-contract menu constants the
+    /// per-slot loops index (`contract(j).term` / `beta(j)` /
+    /// `steady_cost(j)` chase the menu Vec; these are flat, read-only
+    /// arrays computed once at construction — same values, same f64 bits).
+    terms: Vec<usize>,
+    betas: Vec<f64>,
+    steady: Vec<f64>,
     /// One break-even scan per contract, window length `term_j`.
     scans: Vec<WindowScan>,
     /// Times of the reservations that *compensated* contract j's scan and
@@ -123,10 +130,16 @@ impl MarketDeterministic {
             "prediction window must be shorter than every term on the menu"
         );
         let k = market.len();
+        let terms = (0..k).map(|j| market.contract(j).term).collect();
+        let betas = (0..k).map(|j| market.beta(j)).collect();
+        let steady = (0..k).map(|j| market.contract(j).steady_cost()).collect();
         MarketDeterministic {
             market,
             thresholds,
             w,
+            terms,
+            betas,
+            steady,
             scans: (0..k).map(|_| WindowScan::new()).collect(),
             res_times: (0..k).map(|_| VecDeque::new()).collect(),
             cover: (0..k).map(|_| VecDeque::new()).collect(),
@@ -174,6 +187,26 @@ impl MarketDeterministic {
     }
 }
 
+impl super::Reset for MarketDeterministic {
+    fn reset(&mut self) {
+        for s in &mut self.scans {
+            s.clear();
+        }
+        for q in &mut self.res_times {
+            q.clear();
+        }
+        for q in &mut self.cover {
+            q.clear();
+        }
+        for c in &mut self.counts {
+            *c = 0;
+        }
+        self.out.clear();
+        self.t = 0;
+        self.next_scan_slot = 0;
+    }
+}
+
 impl Policy for MarketDeterministic {
     fn name(&self) -> String {
         if self.w == 0 {
@@ -207,7 +240,7 @@ impl Policy for MarketDeterministic {
         let covered_now = self.covered(t);
         let right = t + self.w;
         for j in 0..k {
-            let term = self.market.contract(j).term;
+            let term = self.terms[j];
             self.scans[j].expire_before((right + 1).saturating_sub(term));
         }
         let visible_end = t + self.w.min(future.len());
@@ -216,7 +249,7 @@ impl Policy for MarketDeterministic {
             let d_s = if s == t { demand } else { future[s - t - 1] };
             let cov_s = if s == t { covered_now } else { self.covered_at(s) };
             for j in 0..k {
-                let term = self.market.contract(j).term;
+                let term = self.terms[j];
                 let times = &mut self.res_times[j];
                 while matches!(times.front(), Some(&rt) if rt + term <= s) {
                     times.pop_front();
@@ -245,12 +278,7 @@ impl Policy for MarketDeterministic {
             for j in 0..k {
                 if p * self.scans[j].violations() as f64 > self.thresholds[j] + 1e-12 {
                     pick = match pick {
-                        Some(i)
-                            if self.market.contract(i).steady_cost()
-                                <= self.market.contract(j).steady_cost() =>
-                        {
-                            Some(i)
-                        }
+                        Some(i) if self.steady[i] <= self.steady[j] => Some(i),
                         _ => Some(j),
                     };
                 }
@@ -261,12 +289,12 @@ impl Policy for MarketDeterministic {
             if self.w > 0 && cov >= demand {
                 break;
             }
-            self.cover[j].push_back(t + self.market.contract(j).term);
+            self.cover[j].push_back(t + self.terms[j]);
             cov += 1;
             self.counts[j] += 1;
-            let cap = self.market.beta(j);
+            let cap = self.betas[j];
             for i in 0..k {
-                if self.market.beta(i) <= cap {
+                if self.betas[i] <= cap {
                     self.scans[i].reserve();
                     self.res_times[i].push_back(t);
                 }
@@ -321,6 +349,24 @@ impl MarketRandomized {
         MarketRandomized { inner, seed }
     }
 
+    /// Redraw every contract's threshold from a new seed and rewind to
+    /// slot 0, exactly as if freshly constructed with that seed (same RNG
+    /// streams, same draw order — shard-reuse path of the fleet engine).
+    pub fn reseed(&mut self, seed: u64) {
+        use super::Reset;
+        for cid in 0..self.inner.market.len() {
+            let mut rng = Rng::new(seed ^ (cid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let z = sample_z(&self.inner.market.contract_pricing(cid), &mut rng);
+            self.inner.thresholds[cid] = if z.is_finite() {
+                z * self.inner.market.contract(cid).upfront
+            } else {
+                f64::MAX / 4.0
+            };
+        }
+        self.seed = seed;
+        self.inner.reset();
+    }
+
     /// The drawn per-contract thresholds (for analysis / logging).
     pub fn thresholds(&self) -> &[f64] {
         self.inner.thresholds()
@@ -362,6 +408,13 @@ impl<P: Policy> PinnedSingle<P> {
 
     pub fn contract(&self) -> ContractId {
         self.cid
+    }
+}
+
+impl<P: super::Reset> super::Reset for PinnedSingle<P> {
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.out = [(self.cid, 0)];
     }
 }
 
@@ -630,6 +683,42 @@ mod tests {
             let rebuilt = det.reservation_fees + det.on_demand_cost + det.reserved_usage_cost;
             assert!((det.total - rebuilt).abs() < 1e-9);
             run(&mut MarketRandomized::new(market.clone(), 5), &demands, &market);
+        }
+    }
+
+    #[test]
+    fn reset_matches_fresh_construction_bitwise() {
+        use crate::algos::Reset;
+        let market = two_tier();
+        let mut rng = Rng::new(123);
+        let mut reused = MarketDeterministic::with_window(market.clone(), 20);
+        for case in 0..6 {
+            let demands: Vec<u32> = (0..350).map(|_| rng.below(4) as u32).collect();
+            reused.reset();
+            let a = run(&mut reused, &demands, &market);
+            let mut fresh = MarketDeterministic::with_window(market.clone(), 20);
+            let b = run(&mut fresh, &demands, &market);
+            assert_eq!(a.total.to_bits(), b.total.to_bits(), "case {case}");
+            assert_eq!(a.reservations, b.reservations, "case {case}");
+        }
+    }
+
+    #[test]
+    fn reseed_matches_fresh_construction_bitwise() {
+        let market = two_tier();
+        let mut rng = Rng::new(321);
+        let mut reused = MarketRandomized::with_window(market.clone(), 15, 0);
+        for seed in [9u64, 0, 77, 1 << 60] {
+            let demands: Vec<u32> = (0..350).map(|_| rng.below(4) as u32).collect();
+            reused.reseed(seed);
+            let mut fresh = MarketRandomized::with_window(market.clone(), 15, seed);
+            for (za, zb) in reused.thresholds().iter().zip(fresh.thresholds()) {
+                assert_eq!(za.to_bits(), zb.to_bits(), "seed {seed}");
+            }
+            let a = run(&mut reused, &demands, &market);
+            let b = run(&mut fresh, &demands, &market);
+            assert_eq!(a.total.to_bits(), b.total.to_bits(), "seed {seed}");
+            assert_eq!(a.reservations, b.reservations, "seed {seed}");
         }
     }
 

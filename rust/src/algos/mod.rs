@@ -91,6 +91,23 @@ impl ResQueue {
     fn push(&mut self, t: usize) {
         self.times.push_back(t);
     }
+
+    /// Drop all entries, keeping the allocation.
+    fn clear(&mut self) {
+        self.times.clear();
+    }
+}
+
+/// Rewind a policy to its freshly-constructed state **without dropping its
+/// heap allocations**, so one policy instance can replay many users (the
+/// streaming fleet engine builds one policy per shard, not per user).
+///
+/// Contract: after `reset()`, `decide` must produce bit-identical output to
+/// a newly constructed instance with the same parameters. Randomized
+/// policies reseed instead (their threshold draw depends on the per-user
+/// seed) — see `Randomized::reseed` / `market::MarketRandomized::reseed`.
+pub(crate) trait Reset {
+    fn reset(&mut self);
 }
 
 /// Construct every policy evaluated in Sec. VII, in the paper's order.

@@ -297,7 +297,44 @@ pub fn dp_joint_tractable(d_max: u32, terms: &[usize]) -> bool {
 /// the result is a true lower bound for both — the anchor of the
 /// `joint ≤ restricted ≤ …` / `joint ≤ online` cost sandwich pinned in
 /// `rust/tests/differential.rs`.
+///
+/// Constant-level traces (`d_t ≡ L`) take a needed-capped fast path that
+/// prunes any branch holding more than `L` actives of one contract — see
+/// `constant_level` for the exactness argument; bit-equality with the
+/// uncapped DP ([`optimal_market_joint_uncapped`]) is asserted in
+/// `tests/differential.rs`.
 pub fn optimal_market_joint(demands: &[u32], market: &Market) -> Option<OfflineSolution> {
+    joint_dp(demands, market, constant_level(demands).unwrap_or(u32::MAX))
+}
+
+/// The joint DP with the constant-trace purchase cap disabled — the
+/// differential oracle the capped fast path is asserted bit-equal against
+/// (`tests/differential.rs`).
+pub fn optimal_market_joint_uncapped(
+    demands: &[u32],
+    market: &Market,
+) -> Option<OfflineSolution> {
+    joint_dp(demands, market, u32::MAX)
+}
+
+/// `Some(level)` iff every slot demands exactly `level` (non-empty trace).
+///
+/// On such traces, capping each contract's **active count** at `level` is
+/// exact: usage per slot is at most `level` and bills cheapest-first, so a
+/// schedule holding `a_j > level` actives of contract `j` serves at most
+/// `level ≤ a_j − 1` instance-slots on `j` — dropping `j`'s latest
+/// purchase leaves every slot's billing untouched (each contract's take
+/// `min(rem, avail_j)` is unchanged since `rem ≤ level`) and strictly
+/// removes its upfront fee. The cost gap is a whole fee, orders of
+/// magnitude above f64 rounding dust, so the capped minimum is
+/// *bit-identical* to the uncapped one (the reservation count can differ
+/// on exact cost ties — the frontier keeps its incumbent).
+fn constant_level(demands: &[u32]) -> Option<u32> {
+    let first = *demands.first()?;
+    demands.iter().all(|&d| d == first).then_some(first)
+}
+
+fn joint_dp(demands: &[u32], market: &Market, cap: u32) -> Option<OfflineSolution> {
     let d_max = demands.iter().copied().max().unwrap_or(0);
     let terms: Vec<usize> = market.contracts().iter().map(|c| c.term).collect();
     if !dp_joint_tractable(d_max, &terms) {
@@ -358,7 +395,7 @@ pub fn optimal_market_joint(demands: &[u32], market: &Market) -> Option<OfflineS
                 }
                 active[j] = a;
             }
-            for combo in 0..branch {
+            'combo: for combo in 0..branch {
                 let mut digits = combo;
                 let mut fees = 0.0f64;
                 let mut bought = 0u64;
@@ -368,6 +405,14 @@ pub fn optimal_market_joint(demands: &[u32], market: &Market) -> Option<OfflineS
                     let r = (digits % base) as u32;
                     digits /= base;
                     avail[j] = active[j] + r;
+                    // Needed cap (constant traces): more than `cap` actives
+                    // of one contract can never be optimal — prune the
+                    // branch. The no-purchase digit always survives, so
+                    // the frontier never empties. `cap = u32::MAX`
+                    // disables this (the general path).
+                    if avail[j] > cap {
+                        continue 'combo;
+                    }
                     total_active += avail[j];
                     fees += r as f64 * upfronts[j];
                     bought += r as u64;

@@ -36,6 +36,20 @@ impl Randomized {
         Randomized { inner: Deterministic::new(pricing, z_eff, w), z, seed }
     }
 
+    /// Redraw the threshold from a new seed and rewind to slot 0, exactly
+    /// as if freshly constructed with that seed (the fleet engine reuses
+    /// one instance across a shard's users, reseeding per user).
+    pub fn reseed(&mut self, seed: u64) {
+        use super::Reset;
+        let mut rng = Rng::new(seed);
+        let z = sample_z(self.inner.pricing(), &mut rng);
+        let z_eff = if z.is_finite() { z } else { f64::MAX / 4.0 };
+        self.z = z;
+        self.seed = seed;
+        self.inner.set_threshold(z_eff);
+        self.inner.reset();
+    }
+
     /// The drawn threshold (for analysis / logging).
     pub fn threshold(&self) -> f64 {
         self.z
@@ -87,6 +101,22 @@ mod tests {
         let c1 = run(&mut Randomized::online(pricing, 7), &demands, pricing);
         let c2 = run(&mut Randomized::online(pricing, 7), &demands, pricing);
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn reseed_matches_fresh_construction() {
+        let pricing = Pricing::normalized(0.05, 0.4875, 20);
+        let demands: Vec<u32> = (0..150).map(|i| (i % 4) as u32).collect();
+        let mut reused = Randomized::online(pricing, 1);
+        let _ = run(&mut reused, &demands, pricing); // dirty the state
+        for seed in [7u64, 0, 42] {
+            reused.reseed(seed);
+            let mut fresh = Randomized::online(pricing, seed);
+            assert_eq!(reused.threshold().to_bits(), fresh.threshold().to_bits());
+            let a = run(&mut reused, &demands, pricing);
+            let b = run(&mut fresh, &demands, pricing);
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
     }
 
     #[test]

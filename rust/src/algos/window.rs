@@ -99,6 +99,15 @@ impl WindowScan {
     pub fn buffered(&self) -> usize {
         self.viol.len()
     }
+
+    /// Reset to the freshly-constructed state, keeping allocations (the
+    /// fleet engine reuses one scan across every user in a shard).
+    pub fn clear(&mut self) {
+        self.g = 0;
+        self.viol.clear();
+        self.hist.clear();
+        self.v = 0;
+    }
 }
 
 /// Reference implementation used by tests: the literal Algorithm-1

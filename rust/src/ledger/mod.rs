@@ -242,6 +242,18 @@ impl Ledger {
     pub fn report(&self) -> CostReport {
         self.report
     }
+
+    /// Rewind to slot 0 with an empty report, keeping the market and the
+    /// per-contract queue allocations — after `reset()` the ledger bills
+    /// bit-identically to a fresh `Ledger::new(market)` (the fleet engine
+    /// reuses one ledger across every user in a shard).
+    pub fn reset(&mut self) {
+        for q in &mut self.active {
+            q.clear();
+        }
+        self.t = 0;
+        self.report = CostReport::default();
+    }
 }
 
 #[cfg(test)]
@@ -415,6 +427,23 @@ mod tests {
         // corrected decision re-bills the same slot cleanly
         l.bill(2, &Decision { on_demand: 1, reservations: &res }).unwrap();
         assert_eq!(l.report().reservations, 1);
+    }
+
+    #[test]
+    fn reset_is_equivalent_to_fresh_ledger() {
+        let m = two_term_market();
+        let mut reused = Ledger::new(m.clone());
+        let res = [(0usize, 2u32)];
+        reused.bill(2, &Decision { on_demand: 0, reservations: &res }).unwrap();
+        reused.bill(1, &Decision { on_demand: 1, reservations: &[] }).unwrap();
+        reused.reset();
+        let mut fresh = Ledger::new(m);
+        for l in [&mut reused, &mut fresh] {
+            l.bill(2, &Decision { on_demand: 1, reservations: &res[..1] }).unwrap();
+            l.bill(0, &Decision { on_demand: 0, reservations: &[] }).unwrap();
+        }
+        assert_eq!(reused.report(), fresh.report());
+        assert_eq!(reused.report().total.to_bits(), fresh.report().total.to_bits());
     }
 
     #[test]

@@ -52,7 +52,8 @@ fn main() {
                  serve      --users N --slots N --shards N --tick N [--artifacts DIR]\n\
                  offline    --tau N --p F --alpha F d1 d2 d3 ...\n\
                  scenario   --spec FILE [--threads N] [--json-out FILE]\n\
-                 bench      [--users N --slots N --seed S --threads N --out FILE] [--quick] [--skip-reference]"
+                 bench      [--users N --slots N --seed S --threads N --out FILE] [--quick] [--skip-reference]\n\
+                 bench      [--chunk-users N --fleet-max-users N] [--fleet-scale]   (streaming 10^3..10^6 grid)"
             );
             std::process::exit(2);
         }
@@ -470,6 +471,91 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ]));
     }
 
+    // (d) fleet-scale grid: stream-generate a chunked trace to disk, then
+    // replay it through the bounded-memory chunked path (never holding more
+    // than one chunk of users resident), recording wall time, throughput,
+    // and the process peak-RSS high-water mark per cell. Cells run in
+    // ascending user order so `VmHWM` attributes to the largest completed
+    // cell: a flat mark from 10^5 to 10^6 users is the O(chunk) evidence.
+    let fleet_json = if args.has("fleet-scale") {
+        use cloudreserve::sim::engine::for_each_user_chunked;
+        use cloudreserve::sim::fleet::FleetAggregate;
+        use cloudreserve::trace::io::ChunkedPopulation;
+        use cloudreserve::trace::synth::generate_chunked;
+        use cloudreserve::util::mem::peak_rss_kb;
+
+        let chunk_users = args.usize_or("chunk-users", 4096) as u32;
+        anyhow::ensure!(chunk_users > 0, "--chunk-users must be positive");
+        let fleet_slots = 3 * cloudreserve::trace::SLOTS_PER_DAY; // 4,320 minute-slots
+        let full_grid: &[usize] = if quick {
+            &[1_000, 10_000]
+        } else {
+            &[1_000, 10_000, 100_000, 1_000_000]
+        };
+        let max_users = args.usize_or("fleet-max-users", usize::MAX);
+        let grid: Vec<usize> = full_grid.iter().copied().filter(|&u| u <= max_users).collect();
+
+        let single = Market::single(ec2_small_compressed());
+        let menu2 = Market::new(
+            0.01,
+            vec![
+                cloudreserve::pricing::Contract { upfront: 1.0, rate: 0.004, term: 600 },
+                cloudreserve::pricing::Contract { upfront: 1.5, rate: 0.002, term: 1800 },
+            ],
+        );
+        let markets: [(&str, &Market); 2] = [("single", &single), ("menu2", &menu2)];
+        let spec = cloudreserve::sim::fleet::PolicySpec::Deterministic { z: None, window: 0 };
+
+        let tmp_dir = std::env::temp_dir();
+        let mut fleet_rows = Vec::new();
+        for &n in &grid {
+            eprintln!(
+                "bench: fleet-scale {n} users x {fleet_slots} slots (chunks of {chunk_users})..."
+            );
+            let path = tmp_dir.join(format!("cloudreserve_fleet_{n}_{seed}.bin"));
+            let cfg = SynthConfig { users: n, slots: fleet_slots, seed, ..Default::default() };
+            let t0 = Instant::now();
+            generate_chunked(&cfg, &path, chunk_users)?;
+            let gen_wall_s = t0.elapsed().as_secs_f64();
+            let file_bytes = std::fs::metadata(&path)?.len();
+
+            for (mname, m) in markets {
+                let mut chunked = ChunkedPopulation::open(&path)?;
+                let mut agg = FleetAggregate::new();
+                let t0 = Instant::now();
+                for_each_user_chunked(&mut chunked, m, &spec, threads, |u| agg.merge(u))?;
+                let replay_wall_s = t0.elapsed().as_secs_f64();
+                let cell_user_slots = chunked.total_slots() as f64;
+                let peak = peak_rss_kb();
+                println!(
+                    "fleet     {n:>9} users  {mname:<7} {:>9.3}s gen {:>9.3}s replay {:>10.2} M user-slots/s  peak-RSS {}",
+                    gen_wall_s,
+                    replay_wall_s,
+                    cell_user_slots / replay_wall_s / 1e6,
+                    peak.map(|kb| format!("{:.0} MiB", kb as f64 / 1024.0))
+                        .unwrap_or_else(|| "n/a".into()),
+                );
+                fleet_rows.push(Json::obj(vec![
+                    ("users", Json::Num(n as f64)),
+                    ("slots", Json::Num(fleet_slots as f64)),
+                    ("chunk_users", Json::Num(chunk_users as f64)),
+                    ("market", Json::Str(mname.to_string())),
+                    ("gen_wall_s", Json::Num(gen_wall_s)),
+                    ("replay_wall_s", Json::Num(replay_wall_s)),
+                    ("user_slots_per_s", Json::Num(cell_user_slots / replay_wall_s)),
+                    ("peak_rss_kb", peak.map(|kb| Json::Num(kb as f64)).unwrap_or(Json::Null)),
+                    ("file_bytes", Json::Num(file_bytes as f64)),
+                    ("mean_normalized", Json::Num(agg.mean_normalized())),
+                    ("total_reservations", Json::Num(agg.total_reservations() as f64)),
+                ]));
+            }
+            std::fs::remove_file(&path)?;
+        }
+        Json::Arr(fleet_rows)
+    } else {
+        Json::Null
+    };
+
     let created_unix = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
@@ -508,6 +594,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("offline_dp", Json::Arr(dp_rows)),
         ("offline_dp_joint", Json::Arr(joint_rows)),
         ("decide_ns", Json::Arr(decide_rows)),
+        ("fleet_scale", fleet_json),
     ]);
     std::fs::write(&out, doc.dump_pretty())?;
     println!("wrote {out}");

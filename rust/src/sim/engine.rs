@@ -35,12 +35,13 @@ use crate::algos::baselines::{AllOnDemand, AllReserved, Separate};
 use crate::algos::deterministic::Deterministic;
 use crate::algos::market::{MarketDeterministic, MarketRandomized, PinnedSingle};
 use crate::algos::randomized::Randomized;
-use crate::algos::{Decision, Policy};
+use crate::algos::{Decision, Policy, Reset};
 use crate::analysis::classify::classify;
 use crate::ledger::Ledger;
 use crate::pricing::Market;
 use crate::sim::all_on_demand_cost;
 use crate::sim::fleet::{FleetResult, PolicySpec, UserResult};
+use crate::trace::io::ChunkedPopulation;
 use crate::trace::FlatPopulation;
 use crate::util::stats::summarize_u32;
 
@@ -144,35 +145,123 @@ impl FleetPolicy {
     }
 }
 
-/// Replay one user's demand curve through one policy: the allocation-free
-/// inner loop of the batched engine.
-pub fn replay_user(demand: &[u32], user_id: u32, market: &Market, spec: &PolicySpec) -> UserResult {
-    let mut policy = FleetPolicy::build(spec, market, user_id);
-    let w = policy.window();
-    let len = demand.len();
-    let mut ledger = Ledger::new(market.clone());
-    for (t, &d) in demand.iter().enumerate() {
-        let fut: &[u32] = if w == 0 {
-            &[]
-        } else {
-            // Borrowed future window [t+1, t+w] (shrinking at the tail).
-            &demand[t + 1..(t + 1 + w).min(len)]
+/// One shard's reusable replay state: a single [`FleetPolicy`] and a
+/// single [`Ledger`], rewound per user instead of rebuilt. The seed path
+/// constructed both per user — two `Market` clones and ~10 heap
+/// allocations per user, which dominates at fleet scale where each user's
+/// replay is short. Deterministic policies `reset()`; randomized ones
+/// `reseed()` with the per-user seed, reproducing `FleetPolicy::build`'s
+/// draws bit-for-bit (pinned by the reset/reseed unit tests and by
+/// `tests/engine_parity.rs` against the build-per-user reference runner).
+pub struct ShardRunner {
+    policy: FleetPolicy,
+    ledger: Ledger,
+    p: f64,
+    /// Base seed of a `Randomized`/`MarketRandomized` spec (unused
+    /// otherwise); the per-user seed is `base ^ (user_id << 17)`.
+    base_seed: u64,
+    w: usize,
+}
+
+impl ShardRunner {
+    pub fn new(spec: &PolicySpec, market: &Market) -> ShardRunner {
+        let policy = FleetPolicy::build(spec, market, 0);
+        let w = policy.window();
+        let base_seed = match *spec {
+            PolicySpec::Randomized { seed, .. } => seed,
+            _ => 0,
         };
-        let dec = policy.decide(d, fut);
-        ledger
-            .bill(d, &dec)
-            .unwrap_or_else(|e| panic!("user {user_id}: infeasible decision: {e}"));
+        ShardRunner { policy, ledger: Ledger::new(market.clone()), p: market.p(), base_seed, w }
     }
-    let report = ledger.report();
-    let denom = all_on_demand_cost(demand, market.p());
-    let normalized = if denom > 0.0 { report.total / denom } else { 1.0 };
-    UserResult {
-        user_id,
-        group: classify(&summarize_u32(demand)),
-        normalized_cost: normalized,
-        absolute_cost: report.total,
-        reservations: report.reservations,
+
+    /// Rewind policy + ledger to the fresh state for `user_id`.
+    fn prepare(&mut self, user_id: u32) {
+        match &mut self.policy {
+            FleetPolicy::AllOnDemand(p) => p.reset(),
+            FleetPolicy::AllReserved(p) => p.reset(),
+            FleetPolicy::Separate(p) => p.reset(),
+            FleetPolicy::Deterministic(p) => p.reset(),
+            FleetPolicy::Randomized(p) => p.reseed(self.base_seed ^ ((user_id as u64) << 17)),
+            FleetPolicy::MarketDeterministic(p) => p.reset(),
+            FleetPolicy::MarketRandomized(p) => {
+                p.reseed(self.base_seed ^ ((user_id as u64) << 17))
+            }
+            FleetPolicy::PinnedAllReserved(p) => p.reset(),
+            FleetPolicy::PinnedSeparate(p) => p.reset(),
+        }
+        self.ledger.reset();
     }
+
+    /// Replay one user's demand curve: the allocation-free inner loop of
+    /// the batched engine.
+    pub fn replay(&mut self, demand: &[u32], user_id: u32) -> UserResult {
+        self.prepare(user_id);
+        let w = self.w;
+        let len = demand.len();
+        for (t, &d) in demand.iter().enumerate() {
+            let fut: &[u32] = if w == 0 {
+                &[]
+            } else {
+                // Borrowed future window [t+1, t+w] (shrinking at the tail).
+                &demand[t + 1..(t + 1 + w).min(len)]
+            };
+            let dec = self.policy.decide(d, fut);
+            self.ledger
+                .bill(d, &dec)
+                .unwrap_or_else(|e| panic!("user {user_id}: infeasible decision: {e}"));
+        }
+        let report = self.ledger.report();
+        let denom = all_on_demand_cost(demand, self.p);
+        let normalized = if denom > 0.0 { report.total / denom } else { 1.0 };
+        UserResult {
+            user_id,
+            group: classify(&summarize_u32(demand)),
+            normalized_cost: normalized,
+            absolute_cost: report.total,
+            reservations: report.reservations,
+        }
+    }
+}
+
+/// Replay one user's demand curve through one policy (one-off form; shard
+/// loops should hold a [`ShardRunner`] and call `replay` repeatedly).
+pub fn replay_user(demand: &[u32], user_id: u32, market: &Market, spec: &PolicySpec) -> UserResult {
+    ShardRunner::new(spec, market).replay(demand, user_id)
+}
+
+/// Shard `flat` into contiguous chunks across `threads` std threads and
+/// append every user's result to `out` in input order. Per-user results
+/// are independent of the sharding, so output is deterministic and
+/// thread-count-invariant.
+fn run_shards_into(
+    flat: &FlatPopulation,
+    market: &Market,
+    spec: &PolicySpec,
+    threads: usize,
+    out: &mut Vec<UserResult>,
+) {
+    let n = flat.len();
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = if n == 0 { 0 } else { n.div_ceil(threads) };
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for shard in 0..threads {
+            let lo = shard * chunk;
+            let hi = ((shard + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            handles.push(scope.spawn(move || {
+                let mut runner = ShardRunner::new(spec, market);
+                (lo..hi)
+                    .map(|i| runner.replay(flat.demand(i), flat.user_id(i)))
+                    .collect::<Vec<UserResult>>()
+            }));
+        }
+        for h in handles {
+            out.extend(h.join().expect("fleet shard panicked"));
+        }
+    });
 }
 
 /// Run one policy spec over a columnar population, sharded into contiguous
@@ -184,32 +273,55 @@ pub fn run_fleet_flat(
     spec: &PolicySpec,
     threads: usize,
 ) -> FleetResult {
-    let n = flat.len();
-    let threads = threads.max(1).min(n.max(1));
-    let chunk = if n == 0 { 0 } else { (n + threads - 1) / threads };
-    let mut per_user: Vec<UserResult> = Vec::with_capacity(n);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for shard in 0..threads {
-            let lo = shard * chunk;
-            let hi = ((shard + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            handles.push(scope.spawn(move || {
-                (lo..hi)
-                    .map(|i| replay_user(flat.demand(i), flat.user_id(i), market, spec))
-                    .collect::<Vec<UserResult>>()
-            }));
-        }
-        for h in handles {
-            per_user.extend(h.join().expect("fleet shard panicked"));
-        }
-    });
+    let mut per_user: Vec<UserResult> = Vec::with_capacity(flat.len());
+    run_shards_into(flat, market, spec, threads, &mut per_user);
     // Chunking already preserves input order; sort by user id to keep the
     // reference path's output contract for arbitrarily ordered populations.
     per_user.sort_by_key(|u| u.user_id);
     FleetResult { policy: spec.name(), per_user }
+}
+
+/// Stream a chunked trace file through the engine, feeding each user's
+/// result to `sink` in file order. Resident memory is O(one chunk): the
+/// chunk buffer and the per-chunk result vector are reused across chunks,
+/// so a 10⁶-user fleet replays in the footprint of `chunk_users` users.
+/// Per-user results are bit-identical to [`run_fleet_flat`] over the same
+/// fleet (sharding never crosses a user).
+pub fn for_each_user_chunked(
+    chunked: &mut ChunkedPopulation,
+    market: &Market,
+    spec: &PolicySpec,
+    threads: usize,
+    mut sink: impl FnMut(&UserResult),
+) -> anyhow::Result<()> {
+    let mut buf = FlatPopulation::default();
+    let mut chunk_results: Vec<UserResult> = Vec::new();
+    for c in 0..chunked.n_chunks() {
+        chunked.read_chunk_into(c, &mut buf)?;
+        chunk_results.clear();
+        run_shards_into(&buf, market, spec, threads, &mut chunk_results);
+        for u in &chunk_results {
+            sink(u);
+        }
+    }
+    Ok(())
+}
+
+/// Run one policy spec over a chunked trace file, collecting the full
+/// per-user result vector (bit-identical to [`run_fleet_flat`] on the
+/// equivalent in-RAM population). For fleets too large to hold even the
+/// results in memory, use [`for_each_user_chunked`] with a streaming sink
+/// such as [`crate::sim::fleet::FleetAggregate`].
+pub fn run_fleet_chunked(
+    chunked: &mut ChunkedPopulation,
+    market: &Market,
+    spec: &PolicySpec,
+    threads: usize,
+) -> anyhow::Result<FleetResult> {
+    let mut per_user: Vec<UserResult> = Vec::with_capacity(chunked.n_users());
+    for_each_user_chunked(chunked, market, spec, threads, |u| per_user.push(u.clone()))?;
+    per_user.sort_by_key(|u| u.user_id);
+    Ok(FleetResult { policy: spec.name(), per_user })
 }
 
 #[cfg(test)]
@@ -317,6 +429,32 @@ mod tests {
         let flat = FlatPopulation::default();
         let r = run_fleet_flat(&flat, &market(), &PolicySpec::AllOnDemand, 4);
         assert!(r.per_user.is_empty());
+    }
+
+    #[test]
+    fn chunked_replay_matches_in_ram_engine() {
+        // Full policy x chunk-size x thread-count coverage lives in
+        // tests/engine_parity.rs; this is the in-tree smoke check.
+        let pop = generate(&SynthConfig { users: 13, slots: 900, seed: 4, ..Default::default() });
+        let flat = pop.flatten();
+        let dir = std::env::temp_dir().join("cloudreserve_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("engine_chunked_{}", std::process::id()));
+        crate::trace::io::write_chunked(&pop, &path, 4).unwrap();
+        let spec = PolicySpec::Randomized { window: 0, seed: 11 };
+        for mkt in [market(), menu_market()] {
+            let in_ram = run_fleet_flat(&flat, &mkt, &spec, 3);
+            let mut chunked = ChunkedPopulation::open(&path).unwrap();
+            let streamed = run_fleet_chunked(&mut chunked, &mkt, &spec, 3).unwrap();
+            assert_eq!(in_ram.per_user.len(), streamed.per_user.len());
+            for (a, b) in in_ram.per_user.iter().zip(&streamed.per_user) {
+                assert_eq!(a.user_id, b.user_id);
+                assert_eq!(a.normalized_cost.to_bits(), b.normalized_cost.to_bits());
+                assert_eq!(a.absolute_cost.to_bits(), b.absolute_cost.to_bits());
+                assert_eq!(a.reservations, b.reservations);
+            }
+        }
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

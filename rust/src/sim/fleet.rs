@@ -167,6 +167,86 @@ impl FleetResult {
     }
 }
 
+/// Streaming accumulator for fleet replays too large to hold a per-user
+/// result vector: O(1) state fed one [`UserResult`] at a time (the sink
+/// for [`crate::sim::engine::for_each_user_chunked`]). Means match
+/// [`FleetResult`]'s when fed in the same order (same summation order).
+#[derive(Debug, Clone, Default)]
+pub struct FleetAggregate {
+    users: u64,
+    sum_normalized: f64,
+    group_users: [u64; 3],
+    group_sum_normalized: [f64; 3],
+    total_cost: f64,
+    total_reservations: u64,
+}
+
+impl FleetAggregate {
+    pub fn new() -> FleetAggregate {
+        FleetAggregate::default()
+    }
+
+    fn group_idx(g: Group) -> usize {
+        match g {
+            Group::G1Sporadic => 0,
+            Group::G2Medium => 1,
+            Group::G3Stable => 2,
+        }
+    }
+
+    /// Fold one user's result into the aggregate.
+    pub fn merge(&mut self, u: &UserResult) {
+        self.users += 1;
+        self.sum_normalized += u.normalized_cost;
+        let gi = FleetAggregate::group_idx(u.group);
+        self.group_users[gi] += 1;
+        self.group_sum_normalized[gi] += u.normalized_cost;
+        self.total_cost += u.absolute_cost;
+        self.total_reservations += u.reservations;
+    }
+
+    pub fn users(&self) -> u64 {
+        self.users
+    }
+
+    /// Mean normalized cost across all users folded so far.
+    pub fn mean_normalized(&self) -> f64 {
+        if self.users == 0 {
+            f64::NAN
+        } else {
+            self.sum_normalized / self.users as f64
+        }
+    }
+
+    /// Mean normalized cost of one σ/μ group.
+    pub fn group_mean_normalized(&self, g: Group) -> f64 {
+        let gi = FleetAggregate::group_idx(g);
+        if self.group_users[gi] == 0 {
+            f64::NAN
+        } else {
+            self.group_sum_normalized[gi] / self.group_users[gi] as f64
+        }
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.total_cost
+    }
+
+    pub fn total_reservations(&self) -> u64 {
+        self.total_reservations
+    }
+
+    /// Table II row: [all, g1, g2, g3].
+    pub fn table2_row(&self) -> [f64; 4] {
+        [
+            self.mean_normalized(),
+            self.group_mean_normalized(Group::G1Sporadic),
+            self.group_mean_normalized(Group::G2Medium),
+            self.group_mean_normalized(Group::G3Stable),
+        ]
+    }
+}
+
 /// Run one policy spec across the population, sharded over `threads`.
 ///
 /// Flattens the population and drives the batched engine; when running
@@ -335,6 +415,27 @@ mod tests {
             assert_eq!(a.user_id, b.user_id);
             assert_eq!(a.normalized_cost.to_bits(), b.normalized_cost.to_bits());
             assert_eq!(a.reservations, b.reservations);
+        }
+    }
+
+    #[test]
+    fn aggregate_matches_fleet_result_means() {
+        let pop = small_pop();
+        let spec = PolicySpec::Deterministic { z: None, window: 0 };
+        let r = run_fleet(&pop, &market(), &spec, 4);
+        let mut agg = FleetAggregate::new();
+        for u in &r.per_user {
+            agg.merge(u);
+        }
+        assert_eq!(agg.users(), r.per_user.len() as u64);
+        // fed in the same order, the sums are bit-identical
+        assert_eq!(agg.mean_normalized().to_bits(), r.mean_normalized(None).to_bits());
+        assert_eq!(agg.total_cost().to_bits(), r.total_cost().to_bits());
+        assert_eq!(agg.total_reservations(), r.total_reservations());
+        let a = agg.table2_row();
+        let b = r.table2_row();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()));
         }
     }
 

@@ -3,12 +3,12 @@
 //! 933-user month-long population (run-length encoded, ~100x smaller).
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use super::{Population, UserTrace};
+use super::{FlatPopulation, Population, UserTrace};
 
 /// Write a population as sparse CSV. NOTE: the format omits zero-demand
 /// slots, so users whose entire curve is zero do not round-trip (the
@@ -120,6 +120,313 @@ pub fn read_bin(path: &Path) -> Result<Population> {
     Ok(Population { users })
 }
 
+// ---------------------------------------------------------------------------
+// cloudreserve-trace/v2: chunked columnar format for fleets too large to
+// materialize. Layout (all integers little-endian):
+//
+//   header   magic "CLDRSV02" | u32 n_users | u32 chunk_users
+//            | u32 n_chunks | u64 index_offset | u64 total_slots
+//   chunks   per user, the v1 RLE record:
+//            u32 user_id | u32 len | u32 n_runs | (u32 value, u32 run)*
+//   index    per chunk (at index_offset):
+//            u64 offset | u64 byte_len | u64 checksum (FNV-1a 64)
+//            | u32 first_user_index | u32 users_in_chunk
+//
+// The index lives at the tail so the writer streams chunks front-to-back
+// without knowing the fleet size up front; `finish()` seeks back once to
+// patch the header. Readers replay chunks in O(chunk) resident memory.
+// ---------------------------------------------------------------------------
+
+const MAGIC_V2: &[u8; 8] = b"CLDRSV02";
+const HEADER_V2_LEN: u64 = 8 + 4 + 4 + 4 + 8 + 8;
+const INDEX_ENTRY_LEN: u64 = 8 + 8 + 8 + 4 + 4;
+
+/// FNV-1a 64-bit, the dependency-free per-chunk checksum.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Per-chunk index entry of the v2 format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Byte offset of the chunk payload from the start of the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub byte_len: u64,
+    /// FNV-1a 64 checksum of the payload bytes.
+    pub checksum: u64,
+    /// Global index of the chunk's first user.
+    pub first_user_index: u32,
+    /// Number of users in this chunk.
+    pub users_in_chunk: u32,
+}
+
+/// Encode one user as the v1 RLE record into `buf`.
+fn encode_user_rle(buf: &mut Vec<u8>, user_id: u32, demand: &[u32]) {
+    buf.extend_from_slice(&user_id.to_le_bytes());
+    buf.extend_from_slice(&(demand.len() as u32).to_le_bytes());
+    let runs_at = buf.len();
+    buf.extend_from_slice(&0u32.to_le_bytes()); // n_runs, patched below
+    let mut n_runs = 0u32;
+    let mut iter = demand.iter().copied();
+    if let Some(mut v) = iter.next() {
+        let mut run = 1u32;
+        for d in iter {
+            if d == v {
+                run += 1;
+            } else {
+                buf.extend_from_slice(&v.to_le_bytes());
+                buf.extend_from_slice(&run.to_le_bytes());
+                n_runs += 1;
+                v = d;
+                run = 1;
+            }
+        }
+        buf.extend_from_slice(&v.to_le_bytes());
+        buf.extend_from_slice(&run.to_le_bytes());
+        n_runs += 1;
+    }
+    buf[runs_at..runs_at + 4].copy_from_slice(&n_runs.to_le_bytes());
+}
+
+/// Streaming writer for the v2 chunked format: push users one at a time,
+/// chunks flush to disk every `chunk_users`, nothing fleet-sized is held
+/// in memory.
+pub struct ChunkedWriter {
+    w: BufWriter<File>,
+    chunk_users: u32,
+    buf: Vec<u8>,
+    buf_users: u32,
+    index: Vec<ChunkMeta>,
+    n_users: u32,
+    total_slots: u64,
+    pos: u64,
+}
+
+impl ChunkedWriter {
+    /// Create the file and reserve the header; `chunk_users` is the chunk
+    /// granularity (also the resident-memory unit on replay).
+    pub fn create(path: &Path, chunk_users: u32) -> Result<ChunkedWriter> {
+        ensure!(chunk_users > 0, "chunk_users must be positive");
+        let mut w =
+            BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+        w.write_all(&[0u8; HEADER_V2_LEN as usize])?;
+        Ok(ChunkedWriter {
+            w,
+            chunk_users,
+            buf: Vec::new(),
+            buf_users: 0,
+            index: Vec::new(),
+            n_users: 0,
+            total_slots: 0,
+            pos: HEADER_V2_LEN,
+        })
+    }
+
+    /// Append one user's demand curve.
+    pub fn push_user(&mut self, user_id: u32, demand: &[u32]) -> Result<()> {
+        encode_user_rle(&mut self.buf, user_id, demand);
+        self.buf_users += 1;
+        self.n_users += 1;
+        self.total_slots += demand.len() as u64;
+        if self.buf_users == self.chunk_users {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    fn flush_chunk(&mut self) -> Result<()> {
+        if self.buf_users == 0 {
+            return Ok(());
+        }
+        let meta = ChunkMeta {
+            offset: self.pos,
+            byte_len: self.buf.len() as u64,
+            checksum: fnv1a64(&self.buf),
+            first_user_index: self.n_users - self.buf_users,
+            users_in_chunk: self.buf_users,
+        };
+        self.w.write_all(&self.buf)?;
+        self.pos += meta.byte_len;
+        self.index.push(meta);
+        self.buf.clear();
+        self.buf_users = 0;
+        Ok(())
+    }
+
+    /// Flush the last partial chunk, write the index, patch the header.
+    pub fn finish(mut self) -> Result<()> {
+        self.flush_chunk()?;
+        let index_offset = self.pos;
+        for m in &self.index {
+            self.w.write_all(&m.offset.to_le_bytes())?;
+            self.w.write_all(&m.byte_len.to_le_bytes())?;
+            self.w.write_all(&m.checksum.to_le_bytes())?;
+            self.w.write_all(&m.first_user_index.to_le_bytes())?;
+            self.w.write_all(&m.users_in_chunk.to_le_bytes())?;
+        }
+        self.w.seek(SeekFrom::Start(0))?;
+        self.w.write_all(MAGIC_V2)?;
+        self.w.write_all(&self.n_users.to_le_bytes())?;
+        self.w.write_all(&self.chunk_users.to_le_bytes())?;
+        self.w.write_all(&(self.index.len() as u32).to_le_bytes())?;
+        self.w.write_all(&index_offset.to_le_bytes())?;
+        self.w.write_all(&self.total_slots.to_le_bytes())?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Write an in-RAM population through the chunked writer (tests and small
+/// conversions; big fleets should stream via `synth::generate_chunked`).
+pub fn write_chunked(pop: &Population, path: &Path, chunk_users: u32) -> Result<()> {
+    let mut w = ChunkedWriter::create(path, chunk_users)?;
+    for u in &pop.users {
+        w.push_user(u.user_id, &u.demand)?;
+    }
+    w.finish()
+}
+
+/// Reader for the v2 chunked format: holds the index in memory and streams
+/// one checksummed chunk at a time into a reusable [`FlatPopulation`].
+pub struct ChunkedPopulation {
+    file: File,
+    n_users: u32,
+    chunk_users: u32,
+    total_slots: u64,
+    index: Vec<ChunkMeta>,
+}
+
+impl ChunkedPopulation {
+    /// Open and validate header + index (payload checksums are verified
+    /// lazily, per chunk, on read).
+    pub fn open(path: &Path) -> Result<ChunkedPopulation> {
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = file.metadata()?.len();
+        let mut header = [0u8; HEADER_V2_LEN as usize];
+        file.read_exact(&mut header).context("short v2 header")?;
+        if &header[0..8] != MAGIC_V2 {
+            bail!("{path:?}: not a cloudreserve chunked trace file (bad magic)");
+        }
+        let u32_at = |i: usize| u32::from_le_bytes(header[i..i + 4].try_into().unwrap());
+        let u64_at = |i: usize| u64::from_le_bytes(header[i..i + 8].try_into().unwrap());
+        let n_users = u32_at(8);
+        let chunk_users = u32_at(12);
+        let n_chunks = u32_at(16) as u64;
+        let index_offset = u64_at(20);
+        let total_slots = u64_at(28);
+        ensure!(n_users <= 10_000_000, "implausible user count {n_users}");
+        ensure!(chunk_users > 0 || n_users == 0, "zero chunk_users with {n_users} users");
+        ensure!(
+            index_offset + n_chunks * INDEX_ENTRY_LEN <= file_len,
+            "index extends past end of file"
+        );
+        file.seek(SeekFrom::Start(index_offset))?;
+        let mut index = Vec::with_capacity(n_chunks as usize);
+        let mut entry = [0u8; INDEX_ENTRY_LEN as usize];
+        let mut users_seen = 0u64;
+        for c in 0..n_chunks {
+            file.read_exact(&mut entry).context("short index entry")?;
+            let e64 = |i: usize| u64::from_le_bytes(entry[i..i + 8].try_into().unwrap());
+            let e32 = |i: usize| u32::from_le_bytes(entry[i..i + 4].try_into().unwrap());
+            let m = ChunkMeta {
+                offset: e64(0),
+                byte_len: e64(8),
+                checksum: e64(16),
+                first_user_index: e32(24),
+                users_in_chunk: e32(28),
+            };
+            ensure!(
+                m.offset >= HEADER_V2_LEN && m.offset + m.byte_len <= index_offset,
+                "chunk {c}: payload [{}, {}) outside file body",
+                m.offset,
+                m.offset + m.byte_len
+            );
+            ensure!(m.first_user_index as u64 == users_seen, "chunk {c}: user index gap");
+            users_seen += m.users_in_chunk as u64;
+            index.push(m);
+        }
+        ensure!(users_seen == n_users as u64, "index covers {users_seen}/{n_users} users");
+        Ok(ChunkedPopulation { file, n_users, chunk_users, total_slots, index })
+    }
+
+    pub fn n_users(&self) -> usize {
+        self.n_users as usize
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn chunk_users(&self) -> usize {
+        self.chunk_users as usize
+    }
+
+    /// Total instance-slots across the whole fleet (from the header).
+    pub fn total_slots(&self) -> u64 {
+        self.total_slots
+    }
+
+    pub fn chunk_meta(&self, i: usize) -> ChunkMeta {
+        self.index[i]
+    }
+
+    /// Read chunk `i` into a fresh columnar population.
+    pub fn read_chunk(&mut self, i: usize) -> Result<FlatPopulation> {
+        let mut out = FlatPopulation::default();
+        self.read_chunk_into(i, &mut out)?;
+        Ok(out)
+    }
+
+    /// Read chunk `i` into `out` (cleared first), reusing its allocations —
+    /// the steady-state replay path allocates nothing per chunk.
+    pub fn read_chunk_into(&mut self, i: usize, out: &mut FlatPopulation) -> Result<()> {
+        let m = self.index[i];
+        self.file.seek(SeekFrom::Start(m.offset))?;
+        let mut payload = vec![0u8; m.byte_len as usize];
+        self.file.read_exact(&mut payload).with_context(|| format!("chunk {i}: short read"))?;
+        let got = fnv1a64(&payload);
+        ensure!(
+            got == m.checksum,
+            "chunk {i}: checksum mismatch (stored {:#018x}, computed {got:#018x})",
+            m.checksum
+        );
+        out.clear();
+        let mut at = 0usize;
+        let mut demand: Vec<u32> = Vec::new();
+        for _ in 0..m.users_in_chunk {
+            ensure!(at + 12 <= payload.len(), "chunk {i}: truncated user record");
+            let rd = |a: usize| u32::from_le_bytes(payload[a..a + 4].try_into().unwrap());
+            let uid = rd(at);
+            let len = rd(at + 4) as usize;
+            let n_runs = rd(at + 8) as usize;
+            at += 12;
+            ensure!(at + n_runs * 8 <= payload.len(), "chunk {i}: truncated RLE runs");
+            demand.clear();
+            demand.reserve(len);
+            for r in 0..n_runs {
+                let v = rd(at + r * 8);
+                let run = rd(at + r * 8 + 4) as usize;
+                demand.resize(demand.len() + run, v);
+            }
+            at += n_runs * 8;
+            ensure!(
+                demand.len() == len,
+                "user {uid}: RLE expands to {} slots, header says {len}",
+                demand.len()
+            );
+            out.push_user(uid, &demand);
+        }
+        ensure!(at == payload.len(), "chunk {i}: {} trailing bytes", payload.len() - at);
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +481,71 @@ mod tests {
         let path = tmp("bad.bin");
         std::fs::write(&path, b"NOTATRACE").unwrap();
         assert!(read_bin(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn chunked_roundtrip_matches_flat() {
+        let pop = generate(&SynthConfig { users: 23, slots: 400, ..Default::default() });
+        let flat = pop.flatten();
+        for chunk_users in [1u32, 4, 7, 23, 100] {
+            let path = tmp(&format!("pop_v2_{chunk_users}.bin"));
+            write_chunked(&pop, &path, chunk_users).unwrap();
+            let mut chunked = ChunkedPopulation::open(&path).unwrap();
+            assert_eq!(chunked.n_users(), 23);
+            assert_eq!(chunked.total_slots(), 23 * 400);
+            assert_eq!(chunked.n_chunks(), 23usize.div_ceil(chunk_users as usize));
+            let mut seen = 0usize;
+            let mut buf = FlatPopulation::default();
+            for c in 0..chunked.n_chunks() {
+                chunked.read_chunk_into(c, &mut buf).unwrap();
+                for i in 0..buf.len() {
+                    assert_eq!(buf.user_id(i), flat.user_id(seen));
+                    assert_eq!(buf.demand(i), flat.demand(seen), "chunk_users={chunk_users}");
+                    seen += 1;
+                }
+            }
+            assert_eq!(seen, flat.len());
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn chunked_rejects_bad_magic_and_truncation() {
+        let path = tmp("bad_v2.bin");
+        std::fs::write(&path, b"CLDRSV99rest").unwrap();
+        assert!(ChunkedPopulation::open(&path).is_err());
+        // valid magic but truncated header
+        std::fs::write(&path, b"CLDRSV02").unwrap();
+        assert!(ChunkedPopulation::open(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn chunked_rejects_corrupted_chunk() {
+        let pop = generate(&SynthConfig { users: 9, slots: 300, ..Default::default() });
+        let path = tmp("corrupt_v2.bin");
+        write_chunked(&pop, &path, 4).unwrap();
+        // flip one byte inside the first chunk payload (after the header)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = HEADER_V2_LEN as usize + 5;
+        bytes[at] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut chunked = ChunkedPopulation::open(&path).unwrap();
+        let err = chunked.read_chunk(0).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "unexpected error: {err}");
+        // other chunks still verify
+        assert!(chunked.read_chunk(1).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn chunked_handles_empty_fleet() {
+        let path = tmp("empty_v2.bin");
+        write_chunked(&Population::default(), &path, 8).unwrap();
+        let chunked = ChunkedPopulation::open(&path).unwrap();
+        assert_eq!(chunked.n_users(), 0);
+        assert_eq!(chunked.n_chunks(), 0);
         std::fs::remove_file(path).ok();
     }
 

@@ -100,6 +100,36 @@ impl FlatPopulation {
         FlatPopulation { user_ids, offsets, demand }
     }
 
+    /// Pre-size the columnar buffers (used by the chunked reader, which
+    /// knows the per-chunk user count up front).
+    pub fn with_capacity(users: usize, slots: usize) -> FlatPopulation {
+        let mut offsets = Vec::with_capacity(users + 1);
+        offsets.push(0);
+        FlatPopulation {
+            user_ids: Vec::with_capacity(users),
+            offsets,
+            demand: Vec::with_capacity(slots),
+        }
+    }
+
+    /// Append one user's demand curve in columnar form.
+    pub fn push_user(&mut self, user_id: u32, demand: &[u32]) {
+        if self.offsets.is_empty() {
+            self.offsets.push(0);
+        }
+        self.user_ids.push(user_id);
+        self.demand.extend_from_slice(demand);
+        self.offsets.push(self.demand.len());
+    }
+
+    /// Drop all users but keep the allocations (chunk-buffer reuse).
+    pub fn clear(&mut self) {
+        self.user_ids.clear();
+        self.demand.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+    }
+
     /// Number of users.
     pub fn len(&self) -> usize {
         self.user_ids.len()
@@ -172,5 +202,28 @@ mod tests {
         let flat = Population::default().flatten();
         assert!(flat.is_empty());
         assert_eq!(flat.total_slots(), 0);
+    }
+
+    #[test]
+    fn push_user_matches_from_population() {
+        let pop = Population {
+            users: vec![
+                UserTrace::new(3, vec![1, 0, 2]),
+                UserTrace::new(5, vec![]),
+                UserTrace::new(8, vec![7]),
+            ],
+        };
+        let flat = pop.flatten();
+        let mut built = FlatPopulation::default();
+        for u in &pop.users {
+            built.push_user(u.user_id, &u.demand);
+        }
+        assert_eq!(flat, built);
+        // clear keeps the struct usable and equal to a fresh build
+        built.clear();
+        assert!(built.is_empty());
+        built.push_user(3, &[1, 0, 2]);
+        assert_eq!(built.len(), 1);
+        assert_eq!(built.demand(0), &[1, 0, 2]);
     }
 }

@@ -55,10 +55,11 @@ impl Default for SynthConfig {
     }
 }
 
-/// Generate the full population.
-pub fn generate(cfg: &SynthConfig) -> Population {
+/// Stream the population one user at a time, in user-id order, without
+/// materializing the fleet. [`generate`] is implemented on top of this, so
+/// the streaming and in-RAM paths are bit-identical by construction.
+pub fn for_each_user(cfg: &SynthConfig, mut f: impl FnMut(u32, Vec<u32>)) {
     let mut root = Rng::new(cfg.seed);
-    let mut users = Vec::with_capacity(cfg.users);
     for uid in 0..cfg.users {
         let mut rng = root.fork(uid as u64);
         let archetype = match rng.weighted(&cfg.weights) {
@@ -68,9 +69,35 @@ pub fn generate(cfg: &SynthConfig) -> Population {
             _ => Archetype::Batch,
         };
         let demand = generate_user(archetype, cfg.slots, &mut rng);
-        users.push(UserTrace::new(uid as u32, demand));
+        f(uid as u32, demand);
     }
+}
+
+/// Generate the full population in RAM.
+pub fn generate(cfg: &SynthConfig) -> Population {
+    let mut users = Vec::with_capacity(cfg.users);
+    for_each_user(cfg, |uid, demand| users.push(UserTrace::new(uid, demand)));
     Population { users }
+}
+
+/// Stream-generate straight into the v2 chunked trace file: resident
+/// memory stays O(slots + chunk RLE bytes) regardless of fleet size.
+pub fn generate_chunked(
+    cfg: &SynthConfig,
+    path: &std::path::Path,
+    chunk_users: u32,
+) -> anyhow::Result<()> {
+    let mut w = super::io::ChunkedWriter::create(path, chunk_users)?;
+    let mut err = None;
+    for_each_user(cfg, |uid, demand| {
+        if err.is_none() {
+            err = w.push_user(uid, &demand).err();
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    w.finish()
 }
 
 /// Generate one user's demand curve.
@@ -218,6 +245,28 @@ mod tests {
         let a = generate(&cfg);
         let b = generate(&cfg);
         assert_eq!(a.users, b.users);
+    }
+
+    #[test]
+    fn streaming_generator_matches_in_ram() {
+        let cfg = SynthConfig { users: 17, slots: 800, seed: 99, ..Default::default() };
+        let pop = generate(&cfg);
+        let dir = std::env::temp_dir().join("cloudreserve_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("synth_v2_{}", std::process::id()));
+        generate_chunked(&cfg, &path, 5).unwrap();
+        let mut chunked = crate::trace::io::ChunkedPopulation::open(&path).unwrap();
+        let mut i = 0usize;
+        for c in 0..chunked.n_chunks() {
+            let chunk = chunked.read_chunk(c).unwrap();
+            for j in 0..chunk.len() {
+                assert_eq!(chunk.user_id(j), pop.users[i].user_id);
+                assert_eq!(chunk.demand(j), &pop.users[i].demand[..]);
+                i += 1;
+            }
+        }
+        assert_eq!(i, pop.users.len());
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -1,0 +1,45 @@
+//! Process-memory introspection for the fleet-scale bench: peak resident
+//! set size, read from the kernel's high-water mark (`VmHWM` in
+//! `/proc/self/status`). No syscalls beyond a procfs read, no
+//! dependencies; non-Linux platforms report `None`.
+
+/// Peak resident set size of the current process in kibibytes, if the
+/// platform exposes it.
+///
+/// `VmHWM` is a process-lifetime high-water mark: it never decreases, so a
+/// grid of runs must execute in ascending memory order for per-run
+/// attribution (the fleet-scale bench runs 10³ → 10⁶ users ascending and
+/// reads the mark after each cell — a flat mark across cells is exactly
+/// the O(chunk) bounded-memory evidence).
+#[cfg(target_os = "linux")]
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn peak_rss_kb() -> Option<u64> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn peak_rss_is_positive_and_monotone() {
+        let before = peak_rss_kb().expect("VmHWM available on Linux");
+        assert!(before > 0);
+        // touch a few MB so the mark cannot move backwards
+        let v = vec![1u8; 4 << 20];
+        std::hint::black_box(&v);
+        let after = peak_rss_kb().unwrap();
+        assert!(after >= before, "high-water mark went backwards: {before} -> {after}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Property tests for the `cloudreserve-trace/v2` chunked columnar format:
+//! random fleets round-trip bit-exactly through `ChunkedWriter` →
+//! `ChunkedPopulation` for arbitrary chunk sizes, the streaming generator
+//! matches the in-RAM one byte-for-byte, and damaged files (flipped bytes,
+//! truncation, wrong magic) are rejected rather than silently misread.
+
+use cloudreserve::trace::io::{ChunkedPopulation, ChunkedWriter};
+use cloudreserve::trace::synth::{generate, generate_chunked, SynthConfig};
+use cloudreserve::trace::FlatPopulation;
+use cloudreserve::util::rng::Rng;
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cloudreserve_test_{tag}_{}.bin", std::process::id()))
+}
+
+fn write_flat_chunked(flat: &FlatPopulation, path: &std::path::Path, chunk_users: u32) {
+    let mut w = ChunkedWriter::create(path, chunk_users).expect("create");
+    for i in 0..flat.len() {
+        w.push_user(flat.user_id(i), flat.demand(i)).expect("push");
+    }
+    w.finish().expect("finish");
+}
+
+/// Random fleet with RLE-friendly and RLE-hostile users mixed in.
+fn random_flat(rng: &mut Rng, users: usize, slots: usize) -> FlatPopulation {
+    let mut flat = FlatPopulation::with_capacity(users, slots);
+    for u in 0..users {
+        let demand: Vec<u32> = match rng.below(3) {
+            0 => vec![rng.below(5) as u32; slots], // constant: one run
+            1 => (0..slots).map(|_| rng.below(4) as u32).collect(), // noisy
+            _ => {
+                // piecewise-constant plateaus, the realistic shape
+                let mut d = Vec::with_capacity(slots);
+                let mut level = rng.below(6) as u32;
+                while d.len() < slots {
+                    let run = 1 + rng.below(20) as usize;
+                    for _ in 0..run.min(slots - d.len()) {
+                        d.push(level);
+                    }
+                    level = rng.below(6) as u32;
+                }
+                d
+            }
+        };
+        flat.push_user(u as u32 * 3 + 1, &demand); // non-contiguous ids
+    }
+    flat
+}
+
+fn read_all(chunked: &mut ChunkedPopulation) -> FlatPopulation {
+    let mut all = FlatPopulation::default();
+    for i in 0..chunked.n_chunks() {
+        let chunk = chunked.read_chunk(i).expect("chunk reads back");
+        for u in 0..chunk.len() {
+            all.push_user(chunk.user_id(u), chunk.demand(u));
+        }
+    }
+    all
+}
+
+fn assert_same_fleet(a: &FlatPopulation, b: &FlatPopulation, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: user count");
+    assert_eq!(a.total_slots(), b.total_slots(), "{what}: total slots");
+    for i in 0..a.len() {
+        assert_eq!(a.user_id(i), b.user_id(i), "{what}: user index {i}");
+        assert_eq!(a.demand(i), b.demand(i), "{what}: demand of user index {i}");
+    }
+}
+
+#[test]
+fn random_fleets_round_trip_across_chunk_sizes() {
+    let mut rng = Rng::new(0xC4A2);
+    for case in 0..20 {
+        let users = 1 + rng.below(60) as usize;
+        let slots = 1 + rng.below(300) as usize;
+        let flat = random_flat(&mut rng, users, slots);
+        // chunk sizes straddling the fleet: 1, a random interior size, and
+        // one larger than the whole fleet (single chunk).
+        for chunk_users in [1, 1 + rng.below(users as u64) as u32, users as u32 + 7] {
+            let what = format!("case {case} ({users}x{slots}, chunks of {chunk_users})");
+            let path = tmp_path(&format!("roundtrip_{case}_{chunk_users}"));
+            write_flat_chunked(&flat, &path, chunk_users);
+            let mut chunked = ChunkedPopulation::open(&path).expect("open");
+            assert_eq!(chunked.n_users(), users, "{what}");
+            assert_eq!(chunked.total_slots(), flat.total_slots() as u64, "{what}");
+            let expected_chunks = users.div_ceil(chunk_users as usize);
+            assert_eq!(chunked.n_chunks(), expected_chunks, "{what}");
+            let back = read_all(&mut chunked);
+            assert_same_fleet(&flat, &back, &what);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+#[test]
+fn streaming_generator_matches_in_ram_generation() {
+    for (users, slots, seed) in [(17, 120, 2013u64), (64, 77, 9), (5, 1000, 0x5EED)] {
+        let cfg = SynthConfig { users, slots, seed, ..Default::default() };
+        let in_ram = FlatPopulation::from(&generate(&cfg));
+        let path = tmp_path(&format!("synth_{users}_{slots}"));
+        generate_chunked(&cfg, &path, 7).expect("stream-generate");
+        let mut chunked = ChunkedPopulation::open(&path).expect("open");
+        let streamed = read_all(&mut chunked);
+        assert_same_fleet(&in_ram, &streamed, &format!("synth {users}x{slots} seed {seed}"));
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn every_corrupted_payload_byte_is_detected() {
+    // Flip each byte of the first chunk's payload in turn: the FNV-1a
+    // checksum must reject every single-byte corruption (it has full
+    // avalanche over the payload; no byte is slack).
+    let mut rng = Rng::new(0xBAD);
+    let flat = random_flat(&mut rng, 6, 24);
+    let path = tmp_path("corrupt");
+    write_flat_chunked(&flat, &path, 3);
+    let clean = std::fs::read(&path).expect("read back");
+    let meta = ChunkedPopulation::open(&path).expect("open clean").chunk_meta(0);
+    let (start, len) = (meta.offset as usize, meta.byte_len as usize);
+
+    for off in 0..len {
+        let mut bytes = clean.clone();
+        bytes[start + off] ^= 0x40;
+        std::fs::write(&path, &bytes).expect("write corrupted");
+        // the index itself is untouched, so open() still succeeds…
+        let mut c = ChunkedPopulation::open(&path).expect("open corrupted");
+        // …but the damaged chunk must fail its checksum, and chunk 1 must
+        // still read fine (corruption is contained per chunk).
+        let err = c.read_chunk(0).expect_err("corruption must be detected");
+        assert!(format!("{err:#}").contains("checksum"), "byte {off}: {err:#}");
+        c.read_chunk(1).expect("other chunks unaffected");
+    }
+    std::fs::write(&path, &clean).expect("restore");
+    ChunkedPopulation::open(&path).expect("clean file still opens").read_chunk(0).expect("ok");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_and_mislabeled_files_are_rejected() {
+    let mut rng = Rng::new(0x7EAE);
+    let flat = random_flat(&mut rng, 5, 30);
+    let path = tmp_path("truncate");
+    write_flat_chunked(&flat, &path, 2);
+    let clean = std::fs::read(&path).expect("read back");
+
+    // every strict prefix must fail to open (header, payload, or index cut)
+    for keep in [0, 4, 31, clean.len() / 2, clean.len() - 1] {
+        std::fs::write(&path, &clean[..keep]).expect("write truncated");
+        assert!(
+            ChunkedPopulation::open(&path).is_err(),
+            "truncation to {keep} of {} bytes must be rejected",
+            clean.len()
+        );
+    }
+
+    // wrong magic (a v1 flat file is not a v2 chunked file)
+    let mut bytes = clean.clone();
+    bytes[0] ^= 0xFF;
+    std::fs::write(&path, &bytes).expect("write bad magic");
+    assert!(ChunkedPopulation::open(&path).is_err(), "bad magic must be rejected");
+    std::fs::remove_file(&path).ok();
+}

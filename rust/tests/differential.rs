@@ -257,6 +257,52 @@ fn sandwich_holds_per_user_through_the_batched_engine() {
 }
 
 #[test]
+fn capped_joint_dp_is_bit_identical_on_constant_traces() {
+    // `optimal_market_joint` takes a needed-capped fast path when the trace
+    // is constant (d_t ≡ L): per-contract actives are pruned at L, which is
+    // provably exact there (dropping the purchase that lifts a_j above L
+    // leaves every cheapest-first take unchanged and strictly removes an
+    // upfront fee). The *cost* must match the uncapped search to the bit.
+    // Reservation COUNT may legitimately differ on exact cost ties (the
+    // frontier keeps the incumbent), so only cost bits are asserted.
+    let mut rng = Rng::new(0xCA9ED);
+    let mut engaged = 0;
+    for case in 0..30 {
+        let market = gen_menu(&mut rng);
+        let level = rng.below(4) as u32; // 0..=3
+        let t_len = 10 + rng.below(41) as usize; // 10..=50
+        let terms: Vec<usize> = market.contracts().iter().map(|c| c.term).collect();
+        if !offline::dp_joint_tractable(level, &terms) {
+            continue;
+        }
+        let demands = vec![level; t_len];
+        let capped = offline::optimal_market_joint(&demands, &market).expect("tractable");
+        let uncapped =
+            offline::optimal_market_joint_uncapped(&demands, &market).expect("tractable");
+        assert_eq!(
+            capped.cost.to_bits(),
+            uncapped.cost.to_bits(),
+            "case {case} (L={level}, T={t_len}): capped {} vs uncapped {}",
+            capped.cost,
+            uncapped.cost
+        );
+        engaged += 1;
+
+        // Non-constant traces must be untouched by the cap plumbing: a
+        // single perturbed slot makes both entry points the same search.
+        let mut bumped = demands.clone();
+        bumped[t_len / 2] = level + 1;
+        if offline::dp_joint_tractable(level + 1, &terms) {
+            let a = offline::optimal_market_joint(&bumped, &market).expect("tractable");
+            let b = offline::optimal_market_joint_uncapped(&bumped, &market).expect("tractable");
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "case {case}: perturbed trace");
+            assert_eq!(a.reservations, b.reservations, "case {case}: perturbed trace");
+        }
+    }
+    assert!(engaged >= 10, "fast path exercised only {engaged} times");
+}
+
+#[test]
 fn joint_dp_is_exact_against_brute_force_menus() {
     // Independent exactness oracle: exhaustive search over all per-slot
     // purchase vectors (each contract 0..=D per slot), billed exactly like

@@ -17,10 +17,12 @@
 //! ledger/policy unit tests).
 
 use cloudreserve::pricing::{Contract, Market, Pricing};
+use cloudreserve::sim::engine::run_fleet_chunked;
 use cloudreserve::sim::fleet::{
     run_fleet, run_fleet_reference, suite_specs, FleetResult, PolicySpec,
 };
 use cloudreserve::sim::run_policy_market;
+use cloudreserve::trace::io::{write_chunked, ChunkedPopulation};
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::trace::Population;
 
@@ -156,6 +158,43 @@ fn engine_matches_direct_run_policy_per_user() {
                 );
                 assert_eq!(got.reservations, want.reservations);
             }
+        }
+    }
+}
+
+#[test]
+fn chunked_streaming_replay_is_bit_identical_to_in_ram() {
+    // The bounded-memory chunked path (stream chunks from disk, rewind one
+    // ShardRunner per shard) must reproduce the in-RAM engine to the bit —
+    // across every policy under test, chunk sizes that split users at
+    // awkward boundaries, both markets, and several thread counts. This is
+    // the correctness contract that lets `bench --fleet-scale` replay a
+    // million users without holding them resident.
+    let dir = std::env::temp_dir();
+    for (mkt, specs, tag) in [
+        (market(), specs_under_test(0xC1), "single"),
+        (menu_market(), menu_specs_under_test(0xC1), "menu"),
+    ] {
+        let pop = generate(&SynthConfig { users: 23, slots: 900, seed: 11, ..Default::default() });
+        for chunk_users in [1u32, 4, 23, 64] {
+            let path = dir.join(format!(
+                "cloudreserve_parity_{tag}_{chunk_users}_{}.bin",
+                std::process::id()
+            ));
+            write_chunked(&pop, &path, chunk_users).unwrap();
+            for spec in &specs {
+                let in_ram = run_fleet(&pop, &mkt, spec, 4);
+                for threads in [1usize, 3, 9] {
+                    let mut chunked = ChunkedPopulation::open(&path).unwrap();
+                    let streamed = run_fleet_chunked(&mut chunked, &mkt, spec, threads).unwrap();
+                    let what = format!(
+                        "{tag} {} chunk_users={chunk_users} threads={threads}",
+                        spec.name()
+                    );
+                    assert_bit_identical(&in_ram, &streamed, &what);
+                }
+            }
+            std::fs::remove_file(&path).ok();
         }
     }
 }
