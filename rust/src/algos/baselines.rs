@@ -9,8 +9,9 @@
 //!   paper's joint algorithm.
 
 use super::window::WindowScan;
-use super::{Decision, Policy, ResQueue};
+use super::{Decision, Policy, ResQueue, SaveState};
 use crate::pricing::{ContractId, Pricing};
+use crate::util::state::{StateReader, StateWriter};
 
 /// Never reserve; serve everything on demand.
 #[derive(Debug, Clone, Default)]
@@ -24,6 +25,14 @@ impl AllOnDemand {
 
 impl super::Reset for AllOnDemand {
     fn reset(&mut self) {}
+}
+
+impl SaveState for AllOnDemand {
+    fn save_state(&self, _w: &mut StateWriter) {}
+
+    fn restore_state(&mut self, _r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 impl Policy for AllOnDemand {
@@ -56,6 +65,20 @@ impl super::Reset for AllReserved {
         self.cover.clear();
         self.t = 0;
         self.out = [(0, 0)];
+    }
+}
+
+impl SaveState for AllReserved {
+    fn save_state(&self, w: &mut StateWriter) {
+        self.cover.save_state(w);
+        w.usize(self.t);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.cover.restore_state(r)?;
+        self.t = r.usize()?;
+        self.out = [(0, 0)];
+        Ok(())
     }
 }
 
@@ -140,6 +163,39 @@ impl super::Reset for Separate {
         self.levels.clear();
         self.t = 0;
         self.out = [(0, 0)];
+    }
+}
+
+impl SaveState for Separate {
+    fn save_state(&self, w: &mut StateWriter) {
+        w.usize(self.t);
+        w.usize(self.levels.len());
+        for level in &self.levels {
+            level.scan.save_state(w);
+            level.cover.save_state(w);
+            w.usize(level.scan_res.len());
+            for &rt in &level.scan_res {
+                w.usize(rt);
+            }
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.t = r.usize()?;
+        let n = r.usize()?;
+        self.levels.clear();
+        for _ in 0..n {
+            let mut level = Level::new();
+            level.scan.restore_state(r)?;
+            level.cover.restore_state(r)?;
+            let m = r.usize()?;
+            for _ in 0..m {
+                level.scan_res.push_back(r.usize()?);
+            }
+            self.levels.push(level);
+        }
+        self.out = [(0, 0)];
+        Ok(())
     }
 }
 

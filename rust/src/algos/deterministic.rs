@@ -12,8 +12,9 @@
 //! (see that module for the uniform-increment argument).
 
 use super::window::WindowScan;
-use super::{Decision, Policy, ResQueue};
+use super::{Decision, Policy, ResQueue, SaveState};
 use crate::pricing::{ContractId, Pricing};
+use crate::util::state::{StateReader, StateWriter};
 
 /// Deterministic online reservation policy (single-contract: always
 /// reserves contract 0 of its market).
@@ -112,6 +113,37 @@ impl super::Reset for Deterministic {
         self.t = 0;
         self.next_scan_slot = 0;
         self.out = [(0, 0)];
+    }
+}
+
+impl SaveState for Deterministic {
+    fn save_state(&self, w: &mut StateWriter) {
+        w.f64_bits(self.z);
+        self.scan.save_state(w);
+        self.cover.save_state(w);
+        w.usize(self.scan_res.len());
+        for &rt in &self.scan_res {
+            w.usize(rt);
+        }
+        w.usize(self.t);
+        w.usize(self.next_scan_slot);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        let z = r.f64_bits()?;
+        anyhow::ensure!(z >= 0.0, "checkpointed threshold {z} is negative");
+        self.z = z;
+        self.scan.restore_state(r)?;
+        self.cover.restore_state(r)?;
+        let n = r.usize()?;
+        self.scan_res.clear();
+        for _ in 0..n {
+            self.scan_res.push_back(r.usize()?);
+        }
+        self.t = r.usize()?;
+        self.next_scan_slot = r.usize()?;
+        self.out = [(0, 0)];
+        Ok(())
     }
 }
 

@@ -58,9 +58,10 @@ use std::collections::VecDeque;
 
 use super::density::sample_z;
 use super::window::WindowScan;
-use super::{Decision, Policy};
+use super::{Decision, Policy, SaveState};
 use crate::pricing::{ContractId, Market};
 use crate::util::rng::Rng;
+use crate::util::state::{StateReader, StateWriter};
 
 /// Deterministic menu policy: per-contract break-even scans over a shared
 /// reservation pool, with cross-tier spend accounting and an optional
@@ -204,6 +205,76 @@ impl super::Reset for MarketDeterministic {
         self.out.clear();
         self.t = 0;
         self.next_scan_slot = 0;
+    }
+}
+
+impl SaveState for MarketDeterministic {
+    /// Serializes only dynamic state: thresholds (MarketRandomized redraws
+    /// them, so they are not derivable from the menu), per-contract scans /
+    /// compensation times / coverage expiries, and the slot cursors. The
+    /// menu-derived `terms`/`betas`/`steady` arrays are reconstructed by the
+    /// constructor; `counts`/`out` are per-slot scratch.
+    fn save_state(&self, w: &mut StateWriter) {
+        let k = self.market.len();
+        w.usize(k);
+        for &z in &self.thresholds {
+            w.f64_bits(z);
+        }
+        for scan in &self.scans {
+            scan.save_state(w);
+        }
+        for q in &self.res_times {
+            w.usize(q.len());
+            for &rt in q {
+                w.usize(rt);
+            }
+        }
+        for q in &self.cover {
+            w.usize(q.len());
+            for &e in q {
+                w.usize(e);
+            }
+        }
+        w.usize(self.t);
+        w.usize(self.next_scan_slot);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        let k = r.usize()?;
+        anyhow::ensure!(
+            k == self.market.len(),
+            "checkpoint has {} contracts, market has {}",
+            k,
+            self.market.len()
+        );
+        for z in &mut self.thresholds {
+            *z = r.f64_bits()?;
+            anyhow::ensure!(*z >= 0.0, "checkpointed threshold {z} is negative");
+        }
+        for scan in &mut self.scans {
+            scan.restore_state(r)?;
+        }
+        for q in &mut self.res_times {
+            let n = r.usize()?;
+            q.clear();
+            for _ in 0..n {
+                q.push_back(r.usize()?);
+            }
+        }
+        for q in &mut self.cover {
+            let n = r.usize()?;
+            q.clear();
+            for _ in 0..n {
+                q.push_back(r.usize()?);
+            }
+        }
+        self.t = r.usize()?;
+        self.next_scan_slot = r.usize()?;
+        for c in &mut self.counts {
+            *c = 0;
+        }
+        self.out.clear();
+        Ok(())
     }
 }
 
@@ -377,6 +448,20 @@ impl MarketRandomized {
     }
 }
 
+impl SaveState for MarketRandomized {
+    /// Like the classic randomized policy, all randomness is consumed at
+    /// construction/reseed; the drawn thresholds travel inside `inner`.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.u64(self.seed);
+        self.inner.save_state(w);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.seed = r.u64()?;
+        self.inner.restore_state(r)
+    }
+}
+
 impl Policy for MarketRandomized {
     fn name(&self) -> String {
         self.inner.name()
@@ -415,6 +500,18 @@ impl<P: super::Reset> super::Reset for PinnedSingle<P> {
     fn reset(&mut self) {
         self.inner.reset();
         self.out = [(self.cid, 0)];
+    }
+}
+
+impl<P: SaveState> SaveState for PinnedSingle<P> {
+    fn save_state(&self, w: &mut StateWriter) {
+        self.inner.save_state(w);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.inner.restore_state(r)?;
+        self.out = [(self.cid, 0)];
+        Ok(())
     }
 }
 

@@ -21,6 +21,7 @@ pub mod randomized;
 pub mod window;
 
 use crate::pricing::{ContractId, Pricing};
+use crate::util::state::{StateReader, StateWriter};
 
 /// One slot's typed purchase decision: run `on_demand` instances on demand,
 /// commit to `reservations` — `(contract id, count)` pairs from the
@@ -110,6 +111,37 @@ pub(crate) trait Reset {
     fn reset(&mut self);
 }
 
+/// Checkpointable mutable state, the crash-recovery sibling of [`Reset`].
+///
+/// Contract: after `restore_state` on an instance constructed with the same
+/// parameters (pricing, window, menu), `decide` must produce bit-identical
+/// output to the instance that was saved. Only dynamic state is serialized —
+/// derived configuration (pricing tables, break-even thresholds that never
+/// change, window length) is re-derived from the constructor arguments and
+/// cross-checked where cheap.
+pub(crate) trait SaveState {
+    fn save_state(&self, w: &mut StateWriter);
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()>;
+}
+
+impl SaveState for ResQueue {
+    fn save_state(&self, w: &mut StateWriter) {
+        w.usize(self.times.len());
+        for &t in &self.times {
+            w.usize(t);
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        let n = r.usize()?;
+        self.times.clear();
+        for _ in 0..n {
+            self.times.push_back(r.usize()?);
+        }
+        Ok(())
+    }
+}
+
 /// Construct every policy evaluated in Sec. VII, in the paper's order.
 /// `seed` feeds the randomized policy's threshold draw.
 pub fn benchmark_suite(pricing: &Pricing, seed: u64) -> Vec<Box<dyn Policy>> {
@@ -135,6 +167,24 @@ mod tests {
         assert_eq!(q.active_at(3, 3), 1); // res@0 expired
         assert_eq!(q.active_at(4, 3), 1);
         assert_eq!(q.active_at(5, 3), 0);
+    }
+
+    #[test]
+    fn res_queue_save_restore_round_trip() {
+        let mut q = ResQueue::default();
+        q.push(3);
+        q.push(9);
+        q.push(14);
+        let mut w = StateWriter::new();
+        q.save_state(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut restored = ResQueue::default();
+        restored.push(777); // stale content must be discarded
+        let mut r = StateReader::new(&bytes);
+        restored.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(restored.times, q.times);
     }
 
     #[test]

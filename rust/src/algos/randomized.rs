@@ -5,9 +5,10 @@
 
 use super::density::sample_z;
 use super::deterministic::Deterministic;
-use super::{Decision, Policy};
+use super::{Decision, Policy, SaveState};
 use crate::pricing::Pricing;
 use crate::util::rng::Rng;
+use crate::util::state::{StateReader, StateWriter};
 
 /// Randomized reservation policy: a single draw of `z` at construction,
 /// then deterministic behaviour — the randomness is over algorithms, not
@@ -57,6 +58,23 @@ impl Randomized {
 
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+}
+
+impl SaveState for Randomized {
+    /// The policy consumes its RNG entirely at construction/reseed (a single
+    /// threshold draw), so its random state is fully captured by the drawn
+    /// `z` and the seed; `inner` carries the effective (clamped) threshold.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.f64_bits(self.z);
+        w.u64(self.seed);
+        self.inner.save_state(w);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.z = r.f64_bits()?;
+        self.seed = r.u64()?;
+        self.inner.restore_state(r)
     }
 }
 

@@ -24,6 +24,9 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::algos::SaveState;
+use crate::util::state::{StateReader, StateWriter};
+
 /// Incremental tracker of `V = #{i in window : d_i > x_i}`.
 #[derive(Debug, Clone, Default)]
 pub struct WindowScan {
@@ -107,6 +110,40 @@ impl WindowScan {
         self.viol.clear();
         self.hist.clear();
         self.v = 0;
+    }
+}
+
+impl SaveState for WindowScan {
+    /// Serializes `g` plus the full `viol` deque — including entries whose
+    /// `e <= g` that are only removed lazily on expiry — and rebuilds
+    /// `hist`/`v` on restore by counting `e > g`. This reproduces the saved
+    /// instance exactly (lazy entries and all) without serializing the
+    /// `HashMap`, whose iteration order is nondeterministic.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.i64(self.g);
+        w.usize(self.viol.len());
+        for &(slot, e) in &self.viol {
+            w.usize(slot);
+            w.i64(e);
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.g = r.i64()?;
+        let n = r.usize()?;
+        self.viol.clear();
+        self.hist.clear();
+        self.v = 0;
+        for _ in 0..n {
+            let slot = r.usize()?;
+            let e = r.i64()?;
+            self.viol.push_back((slot, e));
+            if e > self.g {
+                *self.hist.entry(e).or_insert(0) += 1;
+                self.v += 1;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -248,6 +285,49 @@ mod tests {
         w.expire_before(5); // lazy removal must not underflow
         assert_eq!(w.violations(), 0);
         assert_eq!(w.buffered(), 0);
+    }
+
+    #[test]
+    fn save_restore_continues_identically_to_original() {
+        // Drive a scan mid-stream (so it holds lazily-cleared entries),
+        // snapshot it, and check the restored copy tracks the original
+        // through further mixed operations.
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut orig = WindowScan::new();
+        let tau = 5;
+        for t in 0..30usize {
+            orig.expire_before((t + 1).saturating_sub(tau));
+            orig.insert(t, rng.below(4) as u32, rng.below(3) as u32);
+            if rng.chance(0.4) {
+                orig.reserve();
+            }
+        }
+        let mut w = StateWriter::new();
+        orig.save_state(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut copy = WindowScan::new();
+        copy.insert(0, 9, 0); // stale state must be discarded
+        let mut r = StateReader::new(&bytes);
+        copy.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(copy.violations(), orig.violations());
+        assert_eq!(copy.buffered(), orig.buffered());
+
+        for t in 30..60usize {
+            let d = rng.below(4) as u32;
+            let x = rng.below(3) as u32;
+            let res = rng.chance(0.4);
+            for s in [&mut orig, &mut copy] {
+                s.expire_before((t + 1).saturating_sub(tau));
+                s.insert(t, d, x);
+                if res {
+                    s.reserve();
+                }
+            }
+            assert_eq!(copy.violations(), orig.violations(), "t={t}");
+            assert_eq!(copy.reservations(), orig.reservations(), "t={t}");
+        }
     }
 
     #[test]

@@ -22,8 +22,9 @@
 
 use std::collections::VecDeque;
 
-use crate::algos::Decision;
+use crate::algos::{Decision, SaveState};
 use crate::pricing::{ContractId, Market, Pricing};
+use crate::util::state::{StateReader, StateWriter};
 
 /// Errors surfaced by the billing engine. (Display/Error are hand-written:
 /// `thiserror` is not in the offline vendor set.)
@@ -256,6 +257,61 @@ impl Ledger {
     }
 }
 
+impl SaveState for Ledger {
+    fn save_state(&self, w: &mut StateWriter) {
+        w.usize(self.active.len());
+        for q in &self.active {
+            w.usize(q.len());
+            for &e in q {
+                w.usize(e);
+            }
+        }
+        w.usize(self.t);
+        let r = &self.report;
+        w.f64_bits(r.total);
+        w.f64_bits(r.reservation_fees);
+        w.f64_bits(r.on_demand_cost);
+        w.f64_bits(r.reserved_usage_cost);
+        w.u64(r.reservations);
+        w.u64(r.on_demand_slots);
+        w.u64(r.reserved_slots);
+        w.u64(r.demand_slots);
+        w.u32(r.peak_active);
+        w.usize(r.slots);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        let k = r.usize()?;
+        anyhow::ensure!(
+            k == self.active.len(),
+            "checkpoint has {} contract queues, ledger has {}",
+            k,
+            self.active.len()
+        );
+        for q in &mut self.active {
+            let n = r.usize()?;
+            q.clear();
+            for _ in 0..n {
+                q.push_back(r.usize()?);
+            }
+        }
+        self.t = r.usize()?;
+        self.report = CostReport {
+            total: r.f64_bits()?,
+            reservation_fees: r.f64_bits()?,
+            on_demand_cost: r.f64_bits()?,
+            reserved_usage_cost: r.f64_bits()?,
+            reservations: r.u64()?,
+            on_demand_slots: r.u64()?,
+            reserved_slots: r.u64()?,
+            demand_slots: r.u64()?,
+            peak_active: r.u32()?,
+            slots: r.usize()?,
+        };
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -444,6 +500,43 @@ mod tests {
         }
         assert_eq!(reused.report(), fresh.report());
         assert_eq!(reused.report().total.to_bits(), fresh.report().total.to_bits());
+    }
+
+    #[test]
+    fn save_restore_continues_billing_bit_identically() {
+        let m = two_term_market();
+        let mut orig = Ledger::new(m.clone());
+        let res = [(0usize, 2u32), (1usize, 1u32)];
+        orig.bill(3, &Decision { on_demand: 0, reservations: &res }).unwrap();
+        orig.bill(2, &Decision { on_demand: 1, reservations: &[] }).unwrap();
+
+        let mut w = StateWriter::new();
+        orig.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut copy = Ledger::new(m);
+        copy.bill(1, &Decision { on_demand: 1, reservations: &[] }).unwrap(); // stale
+        let mut r = StateReader::new(&bytes);
+        copy.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(copy.report(), orig.report());
+
+        for l in [&mut orig, &mut copy] {
+            l.bill(2, &Decision { on_demand: 0, reservations: &[] }).unwrap();
+            l.bill(3, &Decision { on_demand: 1, reservations: &[] }).unwrap();
+        }
+        assert_eq!(copy.report().total.to_bits(), orig.report().total.to_bits());
+        assert_eq!(copy.report(), orig.report());
+    }
+
+    #[test]
+    fn restore_rejects_contract_count_mismatch() {
+        let mut w = StateWriter::new();
+        Ledger::new(two_term_market()).save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut single = Ledger::single(pricing());
+        let mut r = StateReader::new(&bytes);
+        let err = single.restore_state(&mut r).unwrap_err().to_string();
+        assert!(err.contains("contract queues"), "{err}");
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! * `scenario`      — run a declarative JSON scenario (market menu +
 //!                     trace source + policy set) through the engine and
 //!                     emit a comparable normalized-cost report.
+//! * `fleet`         — stream one policy over a chunked trace with
+//!                     crash-recovery: periodic checkpoints, `--resume`,
+//!                     corrupt-chunk quarantine, and deterministic fault
+//!                     injection for recovery drills.
 //! * `bench`         — measure the batched fleet engine (suite throughput,
 //!                     offline-DP solve times, per-policy decide latency)
 //!                     and write the tracked `BENCH.json` perf baseline.
@@ -41,17 +45,22 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("offline") => cmd_offline(&args),
         Some("scenario") => cmd_scenario(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline|scenario|bench> [--options]\n\
+                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline|scenario|fleet|bench> [--options]\n\
                  \n\
-                 gen-traces --users N --slots N --seed S --out FILE [--csv] [--plot-user U]\n\
+                 gen-traces --users N --slots N --seed S --out FILE [--csv] [--chunk-users N] [--plot-user U]\n\
                  classify   [--traces FILE | --users N --slots N --seed S]\n\
                  simulate   [--traces FILE | --users N --slots N] --seed S --threads N [--csv-out FILE]\n\
                  serve      --users N --slots N --shards N --tick N [--artifacts DIR]\n\
                  offline    --tau N --p F --alpha F d1 d2 d3 ...\n\
                  scenario   --spec FILE [--threads N] [--json-out FILE]\n\
+                 fleet      --trace FILE [--market single|menu2] [--policy NAME --window N --policy-seed S]\n\
+                 fleet      [--threads N] [--checkpoint FILE --checkpoint-every N] [--resume [FILE]]\n\
+                 fleet      [--on-corrupt fail|skip --read-retries N] [--report FILE]\n\
+                 fleet      [--kill-after-chunk N] [--fault-seed S --fault-read-rate F --fault-flip-rate F]\n\
                  bench      [--users N --slots N --seed S --threads N --out FILE] [--quick] [--skip-reference]\n\
                  bench      [--chunk-users N --fleet-max-users N] [--fleet-scale]   (streaming 10^3..10^6 grid)"
             );
@@ -60,7 +69,22 @@ fn main() {
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // A scripted kill-point is a simulated crash, not a failure of the
+        // run itself — give it a distinct exit code so the CI recovery
+        // smoke can tell "crashed as planned" from a real error.
+        let code =
+            if e.downcast_ref::<cloudreserve::util::faults::KillPoint>().is_some() { 3 } else { 1 };
+        std::process::exit(code);
+    }
+}
+
+/// Removes the wrapped file on drop, so scratch files vanish even when the
+/// surrounding command errors out mid-way.
+struct TempFile(std::path::PathBuf);
+
+impl Drop for TempFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
     }
 }
 
@@ -107,9 +131,26 @@ fn cmd_gen_traces(args: &Args) -> anyhow::Result<()> {
         seed: args.u64_or("seed", 2013),
         ..Default::default()
     };
-    let pop = generate(&cfg);
     let out = args.str_or("out", "traces.bin");
     let path = std::path::Path::new(&out);
+    if let Some(cu) = args.get("chunk-users") {
+        // Streaming path: chunked v2 format, nothing fleet-sized in RAM —
+        // this is the input format of `fleet` and the bench fleet grid.
+        let chunk_users: u32 = cu
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--chunk-users expects a positive integer, got '{cu}'"))?;
+        cloudreserve::trace::synth::generate_chunked(&cfg, path, chunk_users)?;
+        let chunked = trace_io::ChunkedPopulation::open(path)?;
+        println!(
+            "wrote {} users x {} slots to {out} ({} chunks of {chunk_users}, fingerprint {:#018x})",
+            chunked.n_users(),
+            cfg.slots,
+            chunked.n_chunks(),
+            chunked.fingerprint64()
+        );
+        return Ok(());
+    }
+    let pop = generate(&cfg);
     if args.has("csv") || path.extension().map(|e| e == "csv").unwrap_or(false) {
         trace_io::write_csv(&pop, path)?;
     } else {
@@ -235,6 +276,210 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.total_cost(),
         report.total_reservations()
     );
+    Ok(())
+}
+
+/// `fleet`: stream one policy over a chunked v2 trace with crash recovery —
+/// periodic checksummed checkpoints (`--checkpoint`, `--checkpoint-every`),
+/// `--resume` to continue a killed run bit-identically, corrupt-chunk
+/// quarantine (`--on-corrupt skip`), and deterministic fault injection
+/// (`--kill-after-chunk`, `--fault-seed`) for recovery drills. The JSON
+/// report carries aggregate f64s as exact bit patterns so CI can assert a
+/// resumed run byte-identical to a clean one.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    use cloudreserve::sim::engine::{
+        for_each_user_chunked_recoverable, OnCorrupt, RecoveryOptions,
+    };
+    use cloudreserve::sim::fleet::PolicySpec;
+    use cloudreserve::trace::io::ChunkedPopulation;
+    use cloudreserve::util::faults::{site, Fault, FaultPlan};
+    use cloudreserve::util::json::Json;
+
+    let trace = args.get("trace").ok_or_else(|| {
+        anyhow::anyhow!("fleet requires --trace FILE (chunked v2; see `gen-traces --chunk-users`)")
+    })?;
+    let mut chunked = ChunkedPopulation::open(std::path::Path::new(trace))?;
+
+    let market_name = args.str_or("market", "single");
+    let market = match market_name.as_str() {
+        "single" => Market::single(ec2_small_compressed()),
+        "menu2" => Market::new(
+            0.01,
+            vec![
+                cloudreserve::pricing::Contract { upfront: 1.0, rate: 0.004, term: 600 },
+                cloudreserve::pricing::Contract { upfront: 1.5, rate: 0.002, term: 1800 },
+            ],
+        ),
+        other => anyhow::bail!("unknown --market '{other}' (expected single|menu2)"),
+    };
+
+    let window = args.usize_or("window", 0);
+    let policy_seed = args.u64_or("policy-seed", 1);
+    let policy_name = args.str_or("policy", "deterministic");
+    let spec = match policy_name.as_str() {
+        "all-on-demand" => PolicySpec::AllOnDemand,
+        "all-reserved" => PolicySpec::AllReserved,
+        "separate" => PolicySpec::Separate,
+        "deterministic" => PolicySpec::Deterministic { z: None, window },
+        "randomized" => PolicySpec::Randomized { window, seed: policy_seed },
+        other => anyhow::bail!(
+            "unknown --policy '{other}' \
+             (expected all-on-demand|all-reserved|separate|deterministic|randomized)"
+        ),
+    };
+
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+
+    // `--resume FILE` names the checkpoint explicitly; bare `--resume`
+    // reuses `--checkpoint`. Either way future checkpoints keep landing on
+    // the same path.
+    let resume_path = args.get("resume").map(str::to_string);
+    let resume = resume_path.is_some() || args.has("resume");
+    let checkpoint = args.get("checkpoint").map(str::to_string).or(resume_path);
+    anyhow::ensure!(
+        !resume || checkpoint.is_some(),
+        "--resume needs a checkpoint path (either `--resume FILE` or `--checkpoint FILE`)"
+    );
+
+    let on_corrupt = match args.str_or("on-corrupt", "fail").as_str() {
+        "fail" => OnCorrupt::Fail,
+        "skip" => OnCorrupt::Skip,
+        other => anyhow::bail!("unknown --on-corrupt '{other}' (expected fail|skip)"),
+    };
+
+    let mut plan = FaultPlan::new();
+    if let Some(k) = args.get("kill-after-chunk") {
+        let key: u64 = k
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--kill-after-chunk expects a chunk index, got '{k}'"))?;
+        plan = plan.script(site::FLEET_AFTER_CHUNK, key, u32::MAX, Fault::Kill);
+    }
+    if let Some(s) = args.get("fault-seed") {
+        let fault_seed: u64 =
+            s.parse().map_err(|_| anyhow::anyhow!("--fault-seed expects an integer, got '{s}'"))?;
+        plan = plan.seeded(
+            fault_seed,
+            args.f64_or("fault-read-rate", 0.0),
+            args.f64_or("fault-flip-rate", 0.0),
+        );
+    }
+
+    let opts = RecoveryOptions {
+        checkpoint_path: checkpoint.as_deref().map(std::path::Path::new),
+        checkpoint_every: args.usize_or("checkpoint-every", 0),
+        resume,
+        on_corrupt,
+        max_read_retries: args.usize_or("read-retries", 2) as u32,
+        retry_base_ms: args.u64_or("retry-base-ms", 10),
+        faults: plan.is_armed().then_some(&plan),
+    };
+
+    eprintln!(
+        "fleet: {} ({market_name}) over {} users in {} chunks ({threads} threads){}",
+        spec.name(),
+        chunked.n_users(),
+        chunked.n_chunks(),
+        if resume { " [resuming]" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let outcome =
+        for_each_user_chunked_recoverable(&mut chunked, &market, &spec, threads, &opts, |_| {})?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let agg = &outcome.aggregate;
+    println!(
+        "fleet done in {wall_s:.2}s: {} users, mean normalized cost {:.6}, \
+         total cost {:.2}, {} reservations",
+        agg.users(),
+        agg.mean_normalized(),
+        agg.total_cost(),
+        agg.total_reservations()
+    );
+    if let Some(from) = outcome.resumed_from_chunk {
+        println!(
+            "resumed from chunk {from}{}; replayed {} chunks this run ({} checkpoints written)",
+            if outcome.used_fallback_checkpoint { " (via fallback checkpoint)" } else { "" },
+            outcome.chunks_replayed,
+            outcome.checkpoints_written
+        );
+    }
+    if !outcome.quarantined.is_empty() {
+        println!("quarantined {} chunk(s):", outcome.quarantined.len());
+        for q in &outcome.quarantined {
+            println!("  chunk {} ({} users skipped): {}", q.chunk, q.users_skipped, q.error);
+        }
+    }
+    let injected = plan.injected();
+    if !injected.is_empty() {
+        eprintln!("faults injected this run: {}", injected.len());
+    }
+
+    if let Some(report) = args.get("report") {
+        let hex = |v: f64| Json::Str(format!("{:#018x}", v.to_bits()));
+        let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("cloudreserve-fleetrun/v1".into())),
+            ("trace", Json::Str(trace.to_string())),
+            ("trace_fingerprint", Json::Str(format!("{:#018x}", chunked.fingerprint64()))),
+            ("policy", Json::Str(spec.name())),
+            ("market", Json::Str(market_name)),
+            ("threads", Json::Num(threads as f64)),
+            ("n_chunks", Json::Num(chunked.n_chunks() as f64)),
+            ("users", Json::Num(agg.users() as f64)),
+            ("mean_normalized", num_or_null(agg.mean_normalized())),
+            ("mean_normalized_bits", hex(agg.mean_normalized())),
+            ("total_cost", num_or_null(agg.total_cost())),
+            ("total_cost_bits", hex(agg.total_cost())),
+            ("total_reservations", Json::Num(agg.total_reservations() as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("chunks_replayed", Json::Num(outcome.chunks_replayed as f64)),
+            ("checkpoints_written", Json::Num(outcome.checkpoints_written as f64)),
+            (
+                "resumed_from_chunk",
+                outcome.resumed_from_chunk.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null),
+            ),
+            ("used_fallback_checkpoint", Json::Bool(outcome.used_fallback_checkpoint)),
+            (
+                "quarantined_chunks",
+                Json::Arr(
+                    outcome
+                        .quarantined
+                        .iter()
+                        .map(|q| {
+                            Json::obj(vec![
+                                ("chunk", Json::Num(q.chunk as f64)),
+                                ("offset", Json::Num(q.offset as f64)),
+                                ("byte_len", Json::Num(q.byte_len as f64)),
+                                ("users_skipped", Json::Num(q.users_skipped as f64)),
+                                ("error", Json::Str(q.error.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "faults_injected",
+                Json::Arr(
+                    injected
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("site", Json::Str(f.site.to_string())),
+                                ("key", Json::Num(f.key as f64)),
+                                ("attempt", Json::Num(f.attempt as f64)),
+                                ("kind", Json::Str(f.kind.to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(report, doc.dump_pretty())?;
+        eprintln!("wrote {report}");
+    }
     Ok(())
 }
 
@@ -513,6 +758,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 "bench: fleet-scale {n} users x {fleet_slots} slots (chunks of {chunk_users})..."
             );
             let path = tmp_dir.join(format!("cloudreserve_fleet_{n}_{seed}.bin"));
+            // Drop guard: the scratch trace is removed even when generation
+            // or a replay cell below errors out of this function.
+            let _scratch = TempFile(path.clone());
             let cfg = SynthConfig { users: n, slots: fleet_slots, seed, ..Default::default() };
             let t0 = Instant::now();
             generate_chunked(&cfg, &path, chunk_users)?;
@@ -549,7 +797,6 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     ("total_reservations", Json::Num(agg.total_reservations() as f64)),
                 ]));
             }
-            std::fs::remove_file(&path)?;
         }
         Json::Arr(fleet_rows)
     } else {

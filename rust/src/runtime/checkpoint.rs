@@ -1,0 +1,490 @@
+//! `cloudreserve-ckpt/v1`: checksummed crash-recovery snapshots for chunked
+//! fleet runs.
+//!
+//! A checkpoint captures everything the chunked replay loop needs to resume
+//! bit-identically at a chunk boundary: the running [`FleetAggregate`], the
+//! serialized state of every [`ShardRunner`](crate::sim::engine::ShardRunner)
+//! (policy expiry queues, window-scan spend, RNG words, ledger totals), the
+//! quarantine list, and fingerprints of the trace/market/spec so a resume
+//! against mismatched inputs is rejected instead of silently producing a
+//! wrong aggregate.
+//!
+//! File layout (little-endian):
+//!
+//! ```text
+//!   magic "CLDRCKP1" | u64 payload_len | payload | u64 fnv1a64(payload)
+//! ```
+//!
+//! Writes are crash-safe: bytes stream to `<path>.tmp`, are fsynced, the
+//! previous checkpoint (if any) is renamed to `<path>.prev`, and the temp
+//! file renames onto `path`. A crash at any point leaves either the old
+//! checkpoint intact or both generations on disk — [`Checkpoint::load`]
+//! falls back to `<path>.prev` when the newest file is torn or corrupt.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algos::SaveState;
+use crate::pricing::Market;
+use crate::sim::fleet::{FleetAggregate, PolicySpec};
+use crate::util::faults::{site, Fault, FaultPlan};
+use crate::util::state::{fnv1a64, StateReader, StateWriter};
+
+const MAGIC: &[u8; 8] = b"CLDRCKP1";
+
+/// One checksum-failed chunk that was skipped under `--on-corrupt skip`:
+/// the structured quarantine record surfaced in the run report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuarantinedChunk {
+    pub chunk: usize,
+    /// Byte offset of the chunk payload in the trace file.
+    pub offset: u64,
+    pub byte_len: u64,
+    /// Users whose results are missing from the aggregate.
+    pub users_skipped: u32,
+    /// Human-readable cause (checksum mismatch details, decode error, ...).
+    pub error: String,
+}
+
+/// Stable fingerprint of a market: on-demand rate plus every surviving
+/// contract, bit-exact on the f64 fields.
+pub fn market_fingerprint(market: &Market) -> u64 {
+    let mut w = StateWriter::new();
+    w.f64_bits(market.p());
+    w.usize(market.len());
+    for c in market.contracts() {
+        w.f64_bits(c.upfront);
+        w.f64_bits(c.rate);
+        w.usize(c.term);
+    }
+    fnv1a64(w.bytes())
+}
+
+/// Stable fingerprint of a policy spec (tag + every parameter, threshold
+/// bit-exact, including the randomized base seed).
+pub fn spec_fingerprint(spec: &PolicySpec) -> u64 {
+    let mut w = StateWriter::new();
+    match *spec {
+        PolicySpec::AllOnDemand => w.u8(0),
+        PolicySpec::AllReserved => w.u8(1),
+        PolicySpec::Separate => w.u8(2),
+        PolicySpec::Deterministic { z, window } => {
+            w.u8(3);
+            match z {
+                None => w.u8(0),
+                Some(z) => {
+                    w.u8(1);
+                    w.f64_bits(z);
+                }
+            }
+            w.usize(window);
+        }
+        PolicySpec::Randomized { window, seed } => {
+            w.u8(4);
+            w.usize(window);
+            w.u64(seed);
+        }
+    }
+    fnv1a64(w.bytes())
+}
+
+/// A point-in-time snapshot of a chunked fleet run at a chunk boundary.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// [`ChunkedPopulation::fingerprint64`](crate::trace::io::ChunkedPopulation::fingerprint64)
+    /// of the trace being replayed.
+    pub trace_fp: u64,
+    pub market_fp: u64,
+    pub spec_fp: u64,
+    /// Total chunks in the trace (cross-checked on resume).
+    pub n_chunks: u64,
+    /// First chunk NOT yet folded into the aggregate; resume starts here.
+    pub next_chunk: u64,
+    pub aggregate: FleetAggregate,
+    pub quarantined: Vec<QuarantinedChunk>,
+    /// Serialized [`ShardRunner`](crate::sim::engine::ShardRunner) state
+    /// blobs, one per shard. Restored for fidelity when the resume uses the
+    /// same shard count; per-user results are sharding-independent, so a
+    /// different count simply rebuilds fresh runners.
+    pub runners: Vec<Vec<u8>>,
+}
+
+impl Checkpoint {
+    fn payload(&self) -> Vec<u8> {
+        let mut w = StateWriter::new();
+        w.u64(self.trace_fp);
+        w.u64(self.market_fp);
+        w.u64(self.spec_fp);
+        w.u64(self.n_chunks);
+        w.u64(self.next_chunk);
+        self.aggregate.save_state(&mut w);
+        w.usize(self.quarantined.len());
+        for q in &self.quarantined {
+            w.usize(q.chunk);
+            w.u64(q.offset);
+            w.u64(q.byte_len);
+            w.u32(q.users_skipped);
+            w.str(&q.error);
+        }
+        w.usize(self.runners.len());
+        for r in &self.runners {
+            w.blob(r);
+        }
+        w.into_bytes()
+    }
+
+    fn from_payload(payload: &[u8]) -> Result<Checkpoint> {
+        let mut r = StateReader::new(payload);
+        let trace_fp = r.u64()?;
+        let market_fp = r.u64()?;
+        let spec_fp = r.u64()?;
+        let n_chunks = r.u64()?;
+        let next_chunk = r.u64()?;
+        let mut aggregate = FleetAggregate::new();
+        aggregate.restore_state(&mut r)?;
+        let nq = r.usize()?;
+        let mut quarantined = Vec::with_capacity(nq.min(1024));
+        for _ in 0..nq {
+            quarantined.push(QuarantinedChunk {
+                chunk: r.usize()?,
+                offset: r.u64()?,
+                byte_len: r.u64()?,
+                users_skipped: r.u32()?,
+                error: r.str()?,
+            });
+        }
+        let nr = r.usize()?;
+        let mut runners = Vec::with_capacity(nr.min(1024));
+        for _ in 0..nr {
+            runners.push(r.blob()?.to_vec());
+        }
+        r.finish()?;
+        Ok(Checkpoint {
+            trace_fp,
+            market_fp,
+            spec_fp,
+            n_chunks,
+            next_chunk,
+            aggregate,
+            quarantined,
+            runners,
+        })
+    }
+
+    /// Serialize to the on-disk v1 framing (magic, length, payload, FNV).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut bytes = Vec::with_capacity(24 + payload.len());
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        bytes
+    }
+
+    /// Parse the on-disk framing, verifying magic, length, and checksum.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        ensure!(bytes.len() >= 16, "checkpoint is {} bytes, shorter than its header", bytes.len());
+        if &bytes[0..8] != MAGIC {
+            bail!("not a cloudreserve checkpoint (bad magic)");
+        }
+        let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        ensure!(
+            bytes.len() == 16 + payload_len + 8,
+            "checkpoint is torn: header says {} payload bytes, file has {} \
+             (expected {} total)",
+            payload_len,
+            bytes.len().saturating_sub(24),
+            16 + payload_len + 8
+        );
+        let payload = &bytes[16..16 + payload_len];
+        let stored = u64::from_le_bytes(bytes[16 + payload_len..].try_into().unwrap());
+        let got = fnv1a64(payload);
+        ensure!(
+            got == stored,
+            "checkpoint payload checksum mismatch (stored {stored:#018x}, computed {got:#018x})"
+        );
+        Checkpoint::from_payload(payload)
+    }
+
+    /// Write crash-safely: temp file + fsync + rename, retaining the
+    /// previous checkpoint at `<path>.prev` as a fallback generation.
+    /// `faults` (when armed) may tear or flip the bytes at the
+    /// [`site::CKPT_WRITE`] failpoint, keyed by `next_chunk` — the injected
+    /// damage lands *in the renamed file*, exercising the `.prev` fallback.
+    pub fn write_atomic(&self, path: &Path, faults: Option<&FaultPlan>) -> Result<()> {
+        let mut bytes = self.to_bytes();
+        if let Some(plan) = faults {
+            match plan.check(site::CKPT_WRITE, self.next_chunk, 0) {
+                Some(Fault::TornWrite { keep }) => {
+                    let keep = (keep % bytes.len().max(1) as u64) as usize;
+                    bytes.truncate(keep);
+                }
+                Some(Fault::BitFlip { byte, bit }) => {
+                    let at = (byte % bytes.len().max(1) as u64) as usize;
+                    bytes[at] ^= 1 << (bit & 7);
+                }
+                // read-path faults don't apply to a write site
+                Some(Fault::ReadError) | Some(Fault::Kill) | None => {}
+            }
+        }
+        let tmp = sibling(path, ".tmp");
+        {
+            let mut f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+            use std::io::Write;
+            f.write_all(&bytes)?;
+            f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+        }
+        let prev = sibling(path, ".prev");
+        if path.exists() {
+            std::fs::rename(path, &prev)
+                .with_context(|| format!("rotate {path:?} -> {prev:?}"))?;
+        }
+        std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load `path`, falling back to `<path>.prev` when the newest
+    /// generation is missing, torn, or checksum-corrupt. Returns the
+    /// checkpoint and whether the fallback was used.
+    pub fn load(path: &Path) -> Result<(Checkpoint, bool)> {
+        let newest = std::fs::read(path)
+            .with_context(|| format!("read checkpoint {path:?}"))
+            .and_then(|bytes| {
+                Checkpoint::from_bytes(&bytes).with_context(|| format!("parse checkpoint {path:?}"))
+            });
+        let newest_err = match newest {
+            Ok(ckpt) => return Ok((ckpt, false)),
+            Err(e) => e,
+        };
+        let prev = sibling(path, ".prev");
+        let fallback = std::fs::read(&prev)
+            .with_context(|| format!("read fallback checkpoint {prev:?}"))
+            .and_then(|bytes| {
+                Checkpoint::from_bytes(&bytes)
+                    .with_context(|| format!("parse fallback checkpoint {prev:?}"))
+            });
+        match fallback {
+            Ok(ckpt) => Ok((ckpt, true)),
+            Err(fallback_err) => Err(fallback_err.context(format!(
+                "newest checkpoint also unusable: {newest_err:#}"
+            ))),
+        }
+    }
+
+    /// Reject a resume whose inputs differ from the checkpointed run, with
+    /// a per-component message naming what changed.
+    pub fn ensure_matches(
+        &self,
+        trace_fp: u64,
+        market_fp: u64,
+        spec_fp: u64,
+        n_chunks: u64,
+    ) -> Result<()> {
+        ensure!(
+            self.trace_fp == trace_fp,
+            "checkpoint was taken against a different trace file \
+             (checkpoint {:#018x}, current {trace_fp:#018x})",
+            self.trace_fp
+        );
+        ensure!(
+            self.market_fp == market_fp,
+            "checkpoint was taken against a different market \
+             (checkpoint {:#018x}, current {market_fp:#018x})",
+            self.market_fp
+        );
+        ensure!(
+            self.spec_fp == spec_fp,
+            "checkpoint was taken with a different policy spec \
+             (checkpoint {:#018x}, current {spec_fp:#018x})",
+            self.spec_fp
+        );
+        ensure!(
+            self.n_chunks == n_chunks,
+            "checkpoint expects {} chunks, trace has {n_chunks}",
+            self.n_chunks
+        );
+        ensure!(
+            self.next_chunk <= self.n_chunks,
+            "checkpoint next_chunk {} is past its own chunk count {}",
+            self.next_chunk,
+            self.n_chunks
+        );
+        Ok(())
+    }
+}
+
+/// `path` with `suffix` appended to its final component.
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(suffix);
+    PathBuf::from(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pricing::{Contract, Pricing};
+
+    fn sample() -> Checkpoint {
+        let mut aggregate = FleetAggregate::new();
+        aggregate.merge(&crate::sim::fleet::UserResult {
+            user_id: 7,
+            group: crate::analysis::classify::Group::G2Medium,
+            normalized_cost: 0.8125,
+            absolute_cost: 12.5,
+            reservations: 3,
+        });
+        Checkpoint {
+            trace_fp: 0x1111_2222_3333_4444,
+            market_fp: 0x5555_6666_7777_8888,
+            spec_fp: 0x9999_aaaa_bbbb_cccc,
+            n_chunks: 12,
+            next_chunk: 5,
+            aggregate,
+            quarantined: vec![QuarantinedChunk {
+                chunk: 2,
+                offset: 420,
+                byte_len: 999,
+                users_skipped: 4,
+                error: "chunk 2: checksum mismatch".to_string(),
+            }],
+            runners: vec![vec![1, 2, 3], vec![], vec![255; 40]],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("cloudreserve_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn bytes_round_trip() {
+        let ckpt = sample();
+        let back = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(back.trace_fp, ckpt.trace_fp);
+        assert_eq!(back.market_fp, ckpt.market_fp);
+        assert_eq!(back.spec_fp, ckpt.spec_fp);
+        assert_eq!(back.n_chunks, 12);
+        assert_eq!(back.next_chunk, 5);
+        assert_eq!(back.aggregate.users(), 1);
+        assert_eq!(
+            back.aggregate.mean_normalized().to_bits(),
+            ckpt.aggregate.mean_normalized().to_bits()
+        );
+        assert_eq!(back.quarantined, ckpt.quarantined);
+        assert_eq!(back.runners, ckpt.runners);
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_rejected() {
+        let bytes = sample().to_bytes();
+        // flipped payload byte -> checksum mismatch
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "unexpected: {err}");
+        // torn tail -> length mismatch
+        let torn = &bytes[..bytes.len() - 5];
+        let err = Checkpoint::from_bytes(torn).unwrap_err();
+        assert!(err.to_string().contains("torn"), "unexpected: {err}");
+        // wrong magic
+        let mut wrong = bytes.clone();
+        wrong[0] = b'X';
+        assert!(Checkpoint::from_bytes(&wrong).is_err());
+    }
+
+    #[test]
+    fn write_rotates_previous_generation_and_load_prefers_newest() {
+        let path = tmp("ckpt_rotate");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+        let mut a = sample();
+        a.next_chunk = 3;
+        a.write_atomic(&path, None).unwrap();
+        let mut b = sample();
+        b.next_chunk = 6;
+        b.write_atomic(&path, None).unwrap();
+        assert!(sibling(&path, ".prev").exists());
+        let (loaded, used_fallback) = Checkpoint::load(&path).unwrap();
+        assert!(!used_fallback);
+        assert_eq!(loaded.next_chunk, 6);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+    }
+
+    #[test]
+    fn load_falls_back_to_prev_when_newest_is_torn() {
+        let path = tmp("ckpt_fallback");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+        let mut a = sample();
+        a.next_chunk = 3;
+        a.write_atomic(&path, None).unwrap();
+        // second write torn by an injected fault (keyed by next_chunk=6)
+        let plan =
+            FaultPlan::new().script(site::CKPT_WRITE, 6, u32::MAX, Fault::TornWrite { keep: 10 });
+        let mut b = sample();
+        b.next_chunk = 6;
+        b.write_atomic(&path, Some(&plan)).unwrap();
+        let (loaded, used_fallback) = Checkpoint::load(&path).unwrap();
+        assert!(used_fallback, "torn newest checkpoint must fall back to .prev");
+        assert_eq!(loaded.next_chunk, 3);
+        // both generations gone -> error mentions both failures
+        std::fs::remove_file(sibling(&path, ".prev")).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("also unusable"), "unexpected: {err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprints_distinguish_inputs() {
+        let m1 = Market::single(Pricing::normalized(0.1, 0.5, 100));
+        let m2 = Market::single(Pricing::normalized(0.1, 0.5, 101));
+        let m3 = Market::new(
+            0.01,
+            vec![
+                Contract { upfront: 1.0, rate: 0.004, term: 600 },
+                Contract { upfront: 1.5, rate: 0.002, term: 1800 },
+            ],
+        );
+        assert_ne!(market_fingerprint(&m1), market_fingerprint(&m2));
+        assert_ne!(market_fingerprint(&m1), market_fingerprint(&m3));
+        assert_eq!(market_fingerprint(&m1), market_fingerprint(&m1.clone()));
+
+        let s1 = PolicySpec::Randomized { window: 0, seed: 11 };
+        let s2 = PolicySpec::Randomized { window: 0, seed: 12 };
+        let s3 = PolicySpec::Deterministic { z: None, window: 0 };
+        let s4 = PolicySpec::Deterministic { z: Some(0.4), window: 0 };
+        assert_ne!(spec_fingerprint(&s1), spec_fingerprint(&s2));
+        assert_ne!(spec_fingerprint(&s1), spec_fingerprint(&s3));
+        assert_ne!(spec_fingerprint(&s3), spec_fingerprint(&s4));
+        assert_eq!(spec_fingerprint(&s1), spec_fingerprint(&s1.clone()));
+    }
+
+    #[test]
+    fn mismatched_resume_inputs_are_rejected_with_component_names() {
+        let ckpt = sample();
+        assert!(ckpt
+            .ensure_matches(ckpt.trace_fp, ckpt.market_fp, ckpt.spec_fp, ckpt.n_chunks)
+            .is_ok());
+        let e = ckpt
+            .ensure_matches(1, ckpt.market_fp, ckpt.spec_fp, ckpt.n_chunks)
+            .unwrap_err();
+        assert!(e.to_string().contains("different trace"));
+        let e = ckpt
+            .ensure_matches(ckpt.trace_fp, 1, ckpt.spec_fp, ckpt.n_chunks)
+            .unwrap_err();
+        assert!(e.to_string().contains("different market"));
+        let e = ckpt
+            .ensure_matches(ckpt.trace_fp, ckpt.market_fp, 1, ckpt.n_chunks)
+            .unwrap_err();
+        assert!(e.to_string().contains("different policy spec"));
+        let e = ckpt
+            .ensure_matches(ckpt.trace_fp, ckpt.market_fp, ckpt.spec_fp, 13)
+            .unwrap_err();
+        assert!(e.to_string().contains("13"));
+    }
+}

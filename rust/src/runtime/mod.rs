@@ -8,6 +8,7 @@
 //! catalog and this module picks a variant and zero-pads batches to fit.
 
 pub mod artifact;
+pub mod checkpoint;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -35,14 +35,23 @@ use crate::algos::baselines::{AllOnDemand, AllReserved, Separate};
 use crate::algos::deterministic::Deterministic;
 use crate::algos::market::{MarketDeterministic, MarketRandomized, PinnedSingle};
 use crate::algos::randomized::Randomized;
-use crate::algos::{Decision, Policy, Reset};
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::algos::{Decision, Policy, Reset, SaveState};
 use crate::analysis::classify::classify;
 use crate::ledger::Ledger;
 use crate::pricing::Market;
+use crate::runtime::checkpoint::{
+    market_fingerprint, spec_fingerprint, Checkpoint, QuarantinedChunk,
+};
 use crate::sim::all_on_demand_cost;
-use crate::sim::fleet::{FleetResult, PolicySpec, UserResult};
-use crate::trace::io::ChunkedPopulation;
+use crate::sim::fleet::{FleetAggregate, FleetResult, PolicySpec, UserResult};
+use crate::trace::io::{ChunkCorrupt, ChunkedPopulation};
 use crate::trace::FlatPopulation;
+use crate::util::faults::{backoff_delay, site, Fault, FaultPlan, KillPoint};
+use crate::util::state::{StateReader, StateWriter};
 use crate::util::stats::summarize_u32;
 
 /// Statically dispatched per-user policy state for the fleet hot path.
@@ -143,6 +152,60 @@ impl FleetPolicy {
             FleetPolicy::PinnedSeparate(p) => p.window(),
         }
     }
+
+    /// Checkpoint tag of the active variant — restores must target the same
+    /// variant (same spec + market routing), never transmute across arms.
+    fn tag(&self) -> u8 {
+        match self {
+            FleetPolicy::AllOnDemand(_) => 0,
+            FleetPolicy::AllReserved(_) => 1,
+            FleetPolicy::Separate(_) => 2,
+            FleetPolicy::Deterministic(_) => 3,
+            FleetPolicy::Randomized(_) => 4,
+            FleetPolicy::MarketDeterministic(_) => 5,
+            FleetPolicy::MarketRandomized(_) => 6,
+            FleetPolicy::PinnedAllReserved(_) => 7,
+            FleetPolicy::PinnedSeparate(_) => 8,
+        }
+    }
+}
+
+impl SaveState for FleetPolicy {
+    fn save_state(&self, w: &mut StateWriter) {
+        w.u8(self.tag());
+        match self {
+            FleetPolicy::AllOnDemand(p) => p.save_state(w),
+            FleetPolicy::AllReserved(p) => p.save_state(w),
+            FleetPolicy::Separate(p) => p.save_state(w),
+            FleetPolicy::Deterministic(p) => p.save_state(w),
+            FleetPolicy::Randomized(p) => p.save_state(w),
+            FleetPolicy::MarketDeterministic(p) => p.save_state(w),
+            FleetPolicy::MarketRandomized(p) => p.save_state(w),
+            FleetPolicy::PinnedAllReserved(p) => p.save_state(w),
+            FleetPolicy::PinnedSeparate(p) => p.save_state(w),
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        let tag = r.u8()?;
+        anyhow::ensure!(
+            tag == self.tag(),
+            "checkpointed policy variant (tag {tag}) does not match the \
+             running policy (tag {})",
+            self.tag()
+        );
+        match self {
+            FleetPolicy::AllOnDemand(p) => p.restore_state(r),
+            FleetPolicy::AllReserved(p) => p.restore_state(r),
+            FleetPolicy::Separate(p) => p.restore_state(r),
+            FleetPolicy::Deterministic(p) => p.restore_state(r),
+            FleetPolicy::Randomized(p) => p.restore_state(r),
+            FleetPolicy::MarketDeterministic(p) => p.restore_state(r),
+            FleetPolicy::MarketRandomized(p) => p.restore_state(r),
+            FleetPolicy::PinnedAllReserved(p) => p.restore_state(r),
+            FleetPolicy::PinnedSeparate(p) => p.restore_state(r),
+        }
+    }
 }
 
 /// One shard's reusable replay state: a single [`FleetPolicy`] and a
@@ -221,6 +284,29 @@ impl ShardRunner {
             reservations: report.reservations,
         }
     }
+
+    /// Serialize the runner's dynamic state (policy + ledger) for a
+    /// checkpoint. `replay` rewinds everything per user, so restoring this
+    /// state is about snapshot fidelity — results never depend on runner
+    /// state carried across users — but it means a resumed process is
+    /// byte-for-byte in the state the killed one checkpointed, RNG words
+    /// and expiry queues included.
+    pub fn save_state_bytes(&self) -> Vec<u8> {
+        let mut w = StateWriter::new();
+        self.policy.save_state(&mut w);
+        self.ledger.save_state(&mut w);
+        w.into_bytes()
+    }
+
+    /// Restore state serialized by
+    /// [`save_state_bytes`](ShardRunner::save_state_bytes). The runner must
+    /// have been built from the same spec + market.
+    pub fn restore_state_bytes(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = StateReader::new(bytes);
+        self.policy.restore_state(&mut r).context("restore policy state")?;
+        self.ledger.restore_state(&mut r).context("restore ledger state")?;
+        r.finish()
+    }
 }
 
 /// Replay one user's demand curve through one policy (one-off form; shard
@@ -242,17 +328,29 @@ fn run_shards_into(
 ) {
     let n = flat.len();
     let threads = threads.max(1).min(n.max(1));
+    let mut runners: Vec<ShardRunner> =
+        (0..threads).map(|_| ShardRunner::new(spec, market)).collect();
+    run_shards_over(&mut runners, flat, out);
+}
+
+/// Shard `flat` over a set of persistent [`ShardRunner`]s (at most
+/// `runners.len()` threads, fewer when the population is smaller) and append
+/// results to `out` in input order. The checkpointed chunk loop owns the
+/// runners across chunks so their state can be snapshotted between chunks;
+/// [`run_shards_into`] builds throwaway runners and delegates here.
+fn run_shards_over(runners: &mut [ShardRunner], flat: &FlatPopulation, out: &mut Vec<UserResult>) {
+    let n = flat.len();
+    let threads = runners.len().max(1).min(n.max(1));
     let chunk = if n == 0 { 0 } else { n.div_ceil(threads) };
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(threads);
-        for shard in 0..threads {
+        for (shard, runner) in runners.iter_mut().enumerate().take(threads) {
             let lo = shard * chunk;
             let hi = ((shard + 1) * chunk).min(n);
             if lo >= hi {
                 break;
             }
             handles.push(scope.spawn(move || {
-                let mut runner = ShardRunner::new(spec, market);
                 (lo..hi)
                     .map(|i| runner.replay(flat.demand(i), flat.user_id(i)))
                     .collect::<Vec<UserResult>>()
@@ -281,12 +379,253 @@ pub fn run_fleet_flat(
     FleetResult { policy: spec.name(), per_user }
 }
 
+/// What to do when a chunk fails its checksum (or decodes corrupt) and
+/// retries are exhausted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OnCorrupt {
+    /// Abort the run with the chunk's typed error (the default).
+    #[default]
+    Fail,
+    /// Skip the chunk, record a [`QuarantinedChunk`], and keep replaying.
+    Skip,
+}
+
+/// Knobs for the crash-recoverable chunked replay path. The default is
+/// exactly the old behavior: no checkpointing, no fault injection, fail on
+/// the first corrupt chunk (transient I/O errors still get a short retry).
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryOptions<'a> {
+    /// Where to write checkpoints (and read them from on resume); `None`
+    /// disables checkpointing entirely.
+    pub checkpoint_path: Option<&'a Path>,
+    /// Checkpoint every N completed chunks (a final checkpoint is always
+    /// written when a path is set); `0` means final-only.
+    pub checkpoint_every: usize,
+    /// Load `checkpoint_path` (or its `.prev` fallback) and resume from its
+    /// `next_chunk` instead of starting at chunk 0.
+    pub resume: bool,
+    pub on_corrupt: OnCorrupt,
+    /// Bounded retries for *transient* read errors (I/O). Checksum and
+    /// decode failures are deterministic and never retried.
+    pub max_read_retries: u32,
+    /// Base backoff in milliseconds (doubles per retry, capped).
+    pub retry_base_ms: u64,
+    /// Deterministic failpoint plan; `None` or an unarmed plan is inert.
+    pub faults: Option<&'a FaultPlan>,
+}
+
+impl Default for RecoveryOptions<'_> {
+    fn default() -> Self {
+        RecoveryOptions {
+            checkpoint_path: None,
+            checkpoint_every: 0,
+            resume: false,
+            on_corrupt: OnCorrupt::Fail,
+            max_read_retries: 2,
+            retry_base_ms: 10,
+            faults: None,
+        }
+    }
+}
+
+/// What a recoverable chunked run did, beyond the per-user sink calls.
+#[derive(Debug, Clone)]
+pub struct ChunkedRunOutcome {
+    /// Aggregate over every user folded so far — including users replayed
+    /// by the checkpointed predecessor run when resuming.
+    pub aggregate: FleetAggregate,
+    /// Chunks skipped under [`OnCorrupt::Skip`], in order (carried forward
+    /// across resumes).
+    pub quarantined: Vec<QuarantinedChunk>,
+    /// First chunk this process replayed, when resumed from a checkpoint.
+    pub resumed_from_chunk: Option<u64>,
+    /// True when the newest checkpoint was unusable and `.prev` was loaded.
+    pub used_fallback_checkpoint: bool,
+    pub checkpoints_written: u64,
+    /// Chunks replayed by THIS process (excludes checkpointed + skipped).
+    pub chunks_replayed: u64,
+}
+
+/// Read chunk `c` with bounded retry-with-backoff for transient I/O errors.
+/// Injected faults (when armed) fire per attempt: `ReadError` manufactures
+/// a retryable I/O error, `BitFlip` corrupts the payload before checksum
+/// verification (deterministic, so it is *not* retried — the same flip
+/// would fire again — and surfaces as [`ChunkCorrupt`]).
+fn read_chunk_with_retry(
+    chunked: &mut ChunkedPopulation,
+    c: usize,
+    buf: &mut FlatPopulation,
+    opts: &RecoveryOptions<'_>,
+) -> anyhow::Result<()> {
+    let mut attempt: u32 = 0;
+    loop {
+        let injected = opts.faults.and_then(|p| p.check(site::TRACE_READ, c as u64, attempt));
+        let result = match injected {
+            Some(Fault::ReadError) => Err(anyhow::Error::new(std::io::Error::other(format!(
+                "injected transient read error (chunk {c}, attempt {attempt})"
+            )))),
+            Some(Fault::BitFlip { byte, bit }) => {
+                chunked.read_chunk_into_with(c, buf, Some((byte, bit)))
+            }
+            // Kill/TornWrite don't apply to the read site; read normally.
+            Some(Fault::Kill) | Some(Fault::TornWrite { .. }) | None => {
+                chunked.read_chunk_into(c, buf)
+            }
+        };
+        let err = match result {
+            Ok(()) => return Ok(()),
+            Err(e) => e,
+        };
+        let transient = err.downcast_ref::<std::io::Error>().is_some()
+            && err.downcast_ref::<ChunkCorrupt>().is_none();
+        if transient && attempt < opts.max_read_retries {
+            std::thread::sleep(backoff_delay(attempt, opts.retry_base_ms));
+            attempt += 1;
+            continue;
+        }
+        return Err(err);
+    }
+}
+
+/// The crash-recoverable chunk loop behind [`for_each_user_chunked`]:
+/// streams chunks through persistent shard runners, folds every user into a
+/// [`FleetAggregate`] (and `sink`), checkpoints at chunk boundaries, and —
+/// on resume — picks up bit-identically where the checkpoint left off
+/// (per-user results are sharding-independent, and the aggregate's
+/// sequential f64 sums restore their exact bits).
+///
+/// On resume, users already folded into the checkpointed aggregate are NOT
+/// re-fed to `sink`; the returned aggregate covers the whole fleet.
+pub fn for_each_user_chunked_recoverable(
+    chunked: &mut ChunkedPopulation,
+    market: &Market,
+    spec: &PolicySpec,
+    threads: usize,
+    opts: &RecoveryOptions<'_>,
+    mut sink: impl FnMut(&UserResult),
+) -> anyhow::Result<ChunkedRunOutcome> {
+    let trace_fp = chunked.fingerprint64();
+    let market_fp = market_fingerprint(market);
+    let spec_fp = spec_fingerprint(spec);
+    let n_chunks = chunked.n_chunks() as u64;
+
+    let threads = threads.max(1);
+    let mut runners: Vec<ShardRunner> =
+        (0..threads).map(|_| ShardRunner::new(spec, market)).collect();
+    let mut aggregate = FleetAggregate::new();
+    let mut quarantined: Vec<QuarantinedChunk> = Vec::new();
+    let mut start_chunk = 0u64;
+    let mut resumed_from_chunk = None;
+    let mut used_fallback_checkpoint = false;
+
+    if opts.resume {
+        let path = opts
+            .checkpoint_path
+            .ok_or_else(|| anyhow::anyhow!("resume requested without a checkpoint path"))?;
+        let (ckpt, used_fallback) = Checkpoint::load(path)?;
+        ckpt.ensure_matches(trace_fp, market_fp, spec_fp, n_chunks)
+            .with_context(|| format!("checkpoint {path:?} does not match this run"))?;
+        // Same shard count: restore each runner to its checkpointed state
+        // (RNG words, queues, ledger). A different count is harmless —
+        // per-user results never depend on state carried across users — so
+        // fresh runners are used instead.
+        if ckpt.runners.len() == runners.len() {
+            for (runner, blob) in runners.iter_mut().zip(&ckpt.runners) {
+                runner
+                    .restore_state_bytes(blob)
+                    .with_context(|| format!("restore shard runner from {path:?}"))?;
+            }
+        }
+        aggregate = ckpt.aggregate;
+        quarantined = ckpt.quarantined;
+        start_chunk = ckpt.next_chunk;
+        resumed_from_chunk = Some(start_chunk);
+        used_fallback_checkpoint = used_fallback;
+    }
+
+    let every = if opts.checkpoint_every == 0 { u64::MAX } else { opts.checkpoint_every as u64 };
+    let mut buf = FlatPopulation::default();
+    let mut chunk_results: Vec<UserResult> = Vec::new();
+    let mut checkpoints_written = 0u64;
+    let mut chunks_replayed = 0u64;
+
+    for c in (start_chunk as usize)..chunked.n_chunks() {
+        match read_chunk_with_retry(chunked, c, &mut buf, opts) {
+            Ok(()) => {
+                chunk_results.clear();
+                run_shards_over(&mut runners, &buf, &mut chunk_results);
+                for u in &chunk_results {
+                    aggregate.merge(u);
+                    sink(u);
+                }
+                chunks_replayed += 1;
+            }
+            Err(e) => match opts.on_corrupt {
+                OnCorrupt::Fail => {
+                    return Err(e.context(format!("chunk {c}: unrecoverable, aborting run")))
+                }
+                OnCorrupt::Skip => {
+                    let m = chunked.chunk_meta(c);
+                    quarantined.push(QuarantinedChunk {
+                        chunk: c,
+                        offset: m.offset,
+                        byte_len: m.byte_len,
+                        users_skipped: m.users_in_chunk,
+                        error: format!("{e:#}"),
+                    });
+                }
+            },
+        }
+        let done = c as u64 + 1;
+        if let Some(path) = opts.checkpoint_path {
+            if done % every == 0 || done == n_chunks {
+                let ckpt = Checkpoint {
+                    trace_fp,
+                    market_fp,
+                    spec_fp,
+                    n_chunks,
+                    next_chunk: done,
+                    aggregate: aggregate.clone(),
+                    quarantined: quarantined.clone(),
+                    runners: runners.iter().map(ShardRunner::save_state_bytes).collect(),
+                };
+                ckpt.write_atomic(path, opts.faults)
+                    .with_context(|| format!("write checkpoint after chunk {c}"))?;
+                checkpoints_written += 1;
+            }
+        }
+        // Kill-point AFTER the checkpoint write: a resume from this crash
+        // restarts at `done`, never replaying a chunk twice.
+        if let Some(plan) = opts.faults {
+            if matches!(plan.check(site::FLEET_AFTER_CHUNK, c as u64, 0), Some(Fault::Kill)) {
+                return Err(anyhow::Error::new(KillPoint {
+                    site: site::FLEET_AFTER_CHUNK,
+                    key: c as u64,
+                }));
+            }
+        }
+    }
+
+    Ok(ChunkedRunOutcome {
+        aggregate,
+        quarantined,
+        resumed_from_chunk,
+        used_fallback_checkpoint,
+        checkpoints_written,
+        chunks_replayed,
+    })
+}
+
 /// Stream a chunked trace file through the engine, feeding each user's
 /// result to `sink` in file order. Resident memory is O(one chunk): the
 /// chunk buffer and the per-chunk result vector are reused across chunks,
 /// so a 10⁶-user fleet replays in the footprint of `chunk_users` users.
 /// Per-user results are bit-identical to [`run_fleet_flat`] over the same
 /// fleet (sharding never crosses a user).
+///
+/// This is the no-recovery convenience form of
+/// [`for_each_user_chunked_recoverable`] (default [`RecoveryOptions`]: no
+/// checkpoints, no faults, fail on corruption).
 pub fn for_each_user_chunked(
     chunked: &mut ChunkedPopulation,
     market: &Market,
@@ -294,17 +633,15 @@ pub fn for_each_user_chunked(
     threads: usize,
     mut sink: impl FnMut(&UserResult),
 ) -> anyhow::Result<()> {
-    let mut buf = FlatPopulation::default();
-    let mut chunk_results: Vec<UserResult> = Vec::new();
-    for c in 0..chunked.n_chunks() {
-        chunked.read_chunk_into(c, &mut buf)?;
-        chunk_results.clear();
-        run_shards_into(&buf, market, spec, threads, &mut chunk_results);
-        for u in &chunk_results {
-            sink(u);
-        }
-    }
-    Ok(())
+    for_each_user_chunked_recoverable(
+        chunked,
+        market,
+        spec,
+        threads,
+        &RecoveryOptions::default(),
+        |u| sink(u),
+    )
+    .map(|_| ())
 }
 
 /// Run one policy spec over a chunked trace file, collecting the full
@@ -332,6 +669,15 @@ mod tests {
 
     fn market() -> Market {
         Market::single(Pricing::normalized(0.08 / 69.0, 0.4875, 1000))
+    }
+
+    /// Borrowed future window `[t+1, t+w]` (empty for purely online).
+    fn fut_at(demand: &[u32], w: usize, t: usize) -> &[u32] {
+        if w == 0 {
+            &[]
+        } else {
+            &demand[t + 1..(t + 1 + w).min(demand.len())]
+        }
     }
 
     fn menu_market() -> Market {
@@ -402,6 +748,75 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fleet_policy_save_restore_resumes_mid_user() {
+        // Snapshot every policy variant mid-replay and restore into an
+        // instance built for a DIFFERENT user (different per-user RNG seed):
+        // the continued decision streams must match exactly, proving the
+        // snapshot captures all dynamic state including the random draw.
+        let pop = generate(&SynthConfig { users: 2, slots: 800, seed: 6, ..Default::default() });
+        let u = &pop.users[0];
+        for (mkt, specs) in [(market(), specs()), (menu_market(), menu_specs())] {
+            for spec in specs {
+                let mut original = FleetPolicy::build(&spec, &mkt, u.user_id);
+                let w = original.window();
+                let cut = 300;
+                for (t, &d) in u.demand.iter().enumerate().take(cut) {
+                    original.decide(d, fut_at(&u.demand, w, t));
+                }
+                let mut sw = StateWriter::new();
+                original.save_state(&mut sw);
+                let bytes = sw.into_bytes();
+                let mut restored = FleetPolicy::build(&spec, &mkt, u.user_id ^ 1);
+                let mut sr = StateReader::new(&bytes);
+                restored.restore_state(&mut sr).unwrap();
+                sr.finish().unwrap();
+                for (t, &d) in u.demand.iter().enumerate().skip(cut) {
+                    assert_eq!(
+                        original.decide(d, fut_at(&u.demand, w, t)),
+                        restored.decide(d, fut_at(&u.demand, w, t)),
+                        "{} slot {t} (menu k={})",
+                        spec.name(),
+                        mkt.len()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_runner_state_bytes_round_trip() {
+        let pop = generate(&SynthConfig { users: 3, slots: 700, seed: 8, ..Default::default() });
+        for (mkt, spec) in [
+            (market(), PolicySpec::Randomized { window: 0, seed: 11 }),
+            (menu_market(), PolicySpec::Deterministic { z: None, window: 0 }),
+        ] {
+            let mut a = ShardRunner::new(&spec, &mkt);
+            a.replay(&pop.users[0].demand, pop.users[0].user_id);
+            let blob = a.save_state_bytes();
+            let mut b = ShardRunner::new(&spec, &mkt);
+            b.restore_state_bytes(&blob).unwrap();
+            // both runners continue identically from the snapshot
+            for u in &pop.users[1..] {
+                let ra = a.replay(&u.demand, u.user_id);
+                let rb = b.replay(&u.demand, u.user_id);
+                assert_eq!(ra.normalized_cost.to_bits(), rb.normalized_cost.to_bits());
+                assert_eq!(ra.absolute_cost.to_bits(), rb.absolute_cost.to_bits());
+                assert_eq!(ra.reservations, rb.reservations);
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_cross_variant_blobs() {
+        let mkt = market();
+        let det = ShardRunner::new(&PolicySpec::Deterministic { z: None, window: 0 }, &mkt);
+        let blob = det.save_state_bytes();
+        let mut rand = ShardRunner::new(&PolicySpec::Randomized { window: 0, seed: 1 }, &mkt);
+        let err = rand.restore_state_bytes(&blob).unwrap_err();
+        assert!(format!("{err:#}").contains("variant"), "unexpected: {err:#}");
     }
 
     #[test]

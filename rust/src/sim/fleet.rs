@@ -15,12 +15,15 @@ use std::sync::mpsc;
 use std::thread;
 
 use crate::algos::market::{MarketDeterministic, MarketRandomized, PinnedSingle};
-use crate::algos::{baselines, deterministic::Deterministic, randomized::Randomized, Policy};
+use crate::algos::{
+    baselines, deterministic::Deterministic, randomized::Randomized, Policy, SaveState,
+};
 use crate::analysis::classify::{classify, Group};
 use crate::pricing::Market;
 use crate::sim::engine::run_fleet_flat;
 use crate::sim::{all_on_demand_cost, run_policy_market};
 use crate::trace::{FlatPopulation, Population};
+use crate::util::state::{StateReader, StateWriter};
 
 /// Which policy to instantiate per user (policies carry per-user state, so
 /// the fleet runner needs a factory, not an instance).
@@ -244,6 +247,38 @@ impl FleetAggregate {
             self.group_mean_normalized(Group::G2Medium),
             self.group_mean_normalized(Group::G3Stable),
         ]
+    }
+}
+
+impl SaveState for FleetAggregate {
+    /// The sums are sequential f64 additions in user order, so restoring
+    /// their exact bits and continuing in the same order yields an aggregate
+    /// bit-identical to the uninterrupted run.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.u64(self.users);
+        w.f64_bits(self.sum_normalized);
+        for &g in &self.group_users {
+            w.u64(g);
+        }
+        for &s in &self.group_sum_normalized {
+            w.f64_bits(s);
+        }
+        w.f64_bits(self.total_cost);
+        w.u64(self.total_reservations);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.users = r.u64()?;
+        self.sum_normalized = r.f64_bits()?;
+        for g in &mut self.group_users {
+            *g = r.u64()?;
+        }
+        for s in &mut self.group_sum_normalized {
+            *s = r.f64_bits()?;
+        }
+        self.total_cost = r.f64_bits()?;
+        self.total_reservations = r.u64()?;
+        Ok(())
     }
 }
 

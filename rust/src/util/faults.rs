@@ -1,0 +1,252 @@
+//! Deterministic fault injection for crash-recovery testing.
+//!
+//! A [`FaultPlan`] is consulted at named I/O sites (trace chunk reads,
+//! checkpoint writes, post-chunk kill-points). Faults come from two sources
+//! that compose:
+//!
+//! * **scripted** entries — exact `(site, key, attempt)` triggers, used by
+//!   tests and the CI crash-recovery smoke to hit one specific boundary;
+//! * a **seeded** mode — a hash of `(seed, site, key, attempt)` against
+//!   per-site rates, so soak runs can shotgun faults reproducibly from a
+//!   single `--fault-seed`.
+//!
+//! Every injected fault is logged; the run report surfaces the log so no
+//! fault is ever silent. The plan itself never performs I/O — callers apply
+//! the returned [`Fault`] to their own buffers/files, which keeps injection
+//! in one auditable place per site.
+
+use std::sync::Mutex;
+
+/// Well-known failpoint site names.
+pub mod site {
+    /// Reading one chunk payload from a chunked trace file.
+    pub const TRACE_READ: &str = "trace.read_chunk";
+    /// Writing a checkpoint snapshot (torn write / bit flip before rename).
+    pub const CKPT_WRITE: &str = "checkpoint.write";
+    /// Immediately after a chunk (and any due checkpoint) completes.
+    pub const FLEET_AFTER_CHUNK: &str = "fleet.after_chunk";
+}
+
+/// What to inject at a site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail the read with a transient I/O error (retryable).
+    ReadError,
+    /// Flip one bit of the payload: byte index (mod len), bit 0..=7.
+    BitFlip { byte: u64, bit: u8 },
+    /// Truncate the written file to `keep` bytes before it is renamed.
+    TornWrite { keep: u64 },
+    /// Abort the process at this point (simulated crash).
+    Kill,
+}
+
+impl Fault {
+    fn name(&self) -> &'static str {
+        match self {
+            Fault::ReadError => "read_error",
+            Fault::BitFlip { .. } => "bit_flip",
+            Fault::TornWrite { .. } => "torn_write",
+            Fault::Kill => "kill",
+        }
+    }
+}
+
+/// One scripted trigger: fires while `attempt <= max_attempt` for the exact
+/// `(site, key)` pair. `max_attempt >= 1` lets a transient fault persist for
+/// a bounded number of retries and then clear.
+#[derive(Debug, Clone)]
+struct Scripted {
+    site: &'static str,
+    key: u64,
+    max_attempt: u32,
+    fault: Fault,
+}
+
+/// Record of a fault that actually fired.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub site: &'static str,
+    pub key: u64,
+    pub attempt: u32,
+    pub kind: &'static str,
+}
+
+/// Deterministic fault source. `Sync` so the coordinator thread can hold it
+/// across scoped shard threads (checks happen on the coordinator only).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    scripted: Vec<Scripted>,
+    seed: Option<u64>,
+    read_error_rate: f64,
+    flip_rate: f64,
+    log: Mutex<Vec<InjectedFault>>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Script an exact fault: fires for `(site, key)` while
+    /// `attempt <= max_attempt`.
+    pub fn script(mut self, site: &'static str, key: u64, max_attempt: u32, fault: Fault) -> Self {
+        self.scripted.push(Scripted { site, key, max_attempt, fault });
+        self
+    }
+
+    /// Enable seeded random faults: independent draws per
+    /// `(seed, site, key, attempt)`, so a fault on attempt 0 does not imply
+    /// one on the retry.
+    pub fn seeded(mut self, seed: u64, read_error_rate: f64, flip_rate: f64) -> Self {
+        self.seed = Some(seed);
+        self.read_error_rate = read_error_rate.clamp(0.0, 1.0);
+        self.flip_rate = flip_rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// True if any fault source is configured — callers can skip the
+    /// injection path entirely otherwise.
+    pub fn is_armed(&self) -> bool {
+        !self.scripted.is_empty() || self.seed.is_some()
+    }
+
+    /// Consult the plan at `site` for unit-of-work `key` (chunk index,
+    /// checkpoint ordinal, …) on retry `attempt` (0 = first try). Fires at
+    /// most one fault; scripted entries win over seeded draws.
+    pub fn check(&self, site: &'static str, key: u64, attempt: u32) -> Option<Fault> {
+        let fault = self.decide(site, key, attempt)?;
+        self.log.lock().unwrap().push(InjectedFault {
+            site,
+            key,
+            attempt,
+            kind: fault.name(),
+        });
+        Some(fault)
+    }
+
+    fn decide(&self, site: &'static str, key: u64, attempt: u32) -> Option<Fault> {
+        for s in &self.scripted {
+            if s.site == site && s.key == key && attempt <= s.max_attempt {
+                return Some(s.fault);
+            }
+        }
+        let seed = self.seed?;
+        let h = mix(seed, site, key, attempt);
+        // Map the top 53 bits to [0,1) — same construction as Rng::f64.
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if site == site::TRACE_READ {
+            if u < self.read_error_rate {
+                return Some(Fault::ReadError);
+            }
+            if u < self.read_error_rate + self.flip_rate {
+                let h2 = mix(seed ^ 0x5bf0_3635, site, key, attempt);
+                return Some(Fault::BitFlip { byte: h2 >> 8, bit: (h2 & 7) as u8 });
+            }
+        }
+        None
+    }
+
+    /// Faults that have fired so far, in order.
+    pub fn injected(&self) -> Vec<InjectedFault> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+/// SplitMix64-style avalanche over the fault coordinates.
+fn mix(seed: u64, site: &str, key: u64, attempt: u32) -> u64 {
+    let mut z = seed
+        .wrapping_add(crate::util::state::fnv1a64(site.as_bytes()))
+        .wrapping_add(key.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(attempt as u64);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Error type for a scripted kill-point: carried up through `anyhow` so the
+/// CLI can map a simulated crash to a distinct exit code.
+#[derive(Debug, Clone)]
+pub struct KillPoint {
+    pub site: &'static str,
+    pub key: u64,
+}
+
+impl std::fmt::Display for KillPoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kill-point triggered at {} (key {})", self.site, self.key)
+    }
+}
+
+impl std::error::Error for KillPoint {}
+
+/// Exponential backoff delay for retry `attempt` (0-based): `base << attempt`
+/// milliseconds, capped to keep tests fast.
+pub fn backoff_delay(attempt: u32, base_ms: u64) -> std::time::Duration {
+    let ms = base_ms.saturating_mul(1u64 << attempt.min(6)).min(2_000);
+    std::time::Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_fault_fires_only_within_attempt_bound() {
+        let plan = FaultPlan::new().script(site::TRACE_READ, 3, 1, Fault::ReadError);
+        assert_eq!(plan.check(site::TRACE_READ, 3, 0), Some(Fault::ReadError));
+        assert_eq!(plan.check(site::TRACE_READ, 3, 1), Some(Fault::ReadError));
+        assert_eq!(plan.check(site::TRACE_READ, 3, 2), None);
+        assert_eq!(plan.check(site::TRACE_READ, 4, 0), None);
+        assert_eq!(plan.check(site::CKPT_WRITE, 3, 0), None);
+        assert_eq!(plan.injected().len(), 2);
+    }
+
+    #[test]
+    fn seeded_faults_are_deterministic() {
+        let a = FaultPlan::new().seeded(11, 0.3, 0.1);
+        let b = FaultPlan::new().seeded(11, 0.3, 0.1);
+        for key in 0..64 {
+            for attempt in 0..3 {
+                assert_eq!(
+                    a.decide(site::TRACE_READ, key, attempt),
+                    b.decide(site::TRACE_READ, key, attempt)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_faults_vary_by_attempt() {
+        // With a 50% read-error rate, some key must recover on retry —
+        // attempts draw independently.
+        let plan = FaultPlan::new().seeded(7, 0.5, 0.0);
+        let recovered = (0..64).any(|key| {
+            plan.decide(site::TRACE_READ, key, 0).is_some()
+                && plan.decide(site::TRACE_READ, key, 1).is_none()
+        });
+        assert!(recovered);
+    }
+
+    #[test]
+    fn unarmed_plan_is_inert() {
+        let plan = FaultPlan::new();
+        assert!(!plan.is_armed());
+        assert_eq!(plan.check(site::TRACE_READ, 0, 0), None);
+        assert!(plan.injected().is_empty());
+    }
+
+    #[test]
+    fn kill_point_downcasts_through_anyhow_context() {
+        use anyhow::Context;
+        let err = anyhow::Error::new(KillPoint { site: site::FLEET_AFTER_CHUNK, key: 5 })
+            .context("fleet run aborted");
+        let kp = err.downcast_ref::<KillPoint>().expect("downcast");
+        assert_eq!(kp.key, 5);
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        assert!(backoff_delay(0, 10) < backoff_delay(3, 10));
+        assert!(backoff_delay(40, 1_000).as_millis() <= 2_000);
+    }
+}

@@ -3,8 +3,10 @@
 
 pub mod bench;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod mem;
 pub mod prop;
 pub mod rng;
+pub mod state;
 pub mod stats;

@@ -1,0 +1,244 @@
+//! Minimal byte-level state serialization for checkpoints.
+//!
+//! The offline vendor set has no serde, so checkpointable types write their
+//! state through [`StateWriter`] and read it back through [`StateReader`]:
+//! fixed-width little-endian integers, `f64` as raw bits (bit-exact resume
+//! is the whole point), and length-prefixed blobs. Readers are fully
+//! bounds-checked and return errors instead of panicking, because checkpoint
+//! bytes may arrive torn or bit-flipped from disk.
+
+use anyhow::{bail, ensure, Result};
+
+/// FNV-1a 64-bit hash — shared by the chunked trace index and the checkpoint
+/// format. Not cryptographic; detects corruption, not adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only byte sink for state snapshots.
+#[derive(Debug, Default)]
+pub struct StateWriter {
+    buf: Vec<u8>,
+}
+
+impl StateWriter {
+    pub fn new() -> Self {
+        StateWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` values travel as u64 so snapshots are portable across widths.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Raw IEEE-754 bits — restores must be bit-identical, so no decimal
+    /// round-trip is acceptable.
+    pub fn f64_bits(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed byte blob.
+    pub fn blob(&mut self, bytes: &[u8]) {
+        self.usize(bytes.len());
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.blob(s.as_bytes());
+    }
+}
+
+/// Bounds-checked cursor over snapshot bytes.
+#[derive(Debug)]
+pub struct StateReader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> StateReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        StateReader { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.at.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.at..end];
+                self.at = end;
+                Ok(s)
+            }
+            None => bail!(
+                "state truncated: need {} bytes at offset {} of {}",
+                n,
+                self.at,
+                self.buf.len()
+            ),
+        }
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("state value {v} exceeds usize"))
+    }
+
+    pub fn f64_bits(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn blob(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        ensure!(
+            n <= self.buf.len().saturating_sub(self.at),
+            "state blob length {} exceeds remaining {} bytes",
+            n,
+            self.buf.len() - self.at
+        );
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.blob()?;
+        Ok(String::from_utf8(b.to_vec())?)
+    }
+
+    /// Remaining unread bytes.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    /// Assert the snapshot was fully consumed — catches schema drift where a
+    /// writer and reader disagree about field order.
+    pub fn finish(self) -> Result<()> {
+        ensure!(
+            self.at == self.buf.len(),
+            "state has {} unread trailing bytes",
+            self.buf.len() - self.at
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_field_kinds() {
+        let mut w = StateWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.i64(-42);
+        w.usize(123_456);
+        w.f64_bits(-0.0);
+        w.f64_bits(f64::NAN);
+        w.blob(b"hello");
+        w.str("chunk 3");
+        let bytes = w.into_bytes();
+
+        let mut r = StateReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.i64().unwrap(), -42);
+        assert_eq!(r.usize().unwrap(), 123_456);
+        assert_eq!(r.f64_bits().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f64_bits().unwrap().is_nan());
+        assert_eq!(r.blob().unwrap(), b"hello");
+        assert_eq!(r.str().unwrap(), "chunk 3");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_instead_of_panicking() {
+        let mut w = StateWriter::new();
+        w.u64(1);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes[..5]);
+        let err = r.u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn oversized_blob_length_rejected() {
+        let mut w = StateWriter::new();
+        w.usize(1 << 40); // claims a blob far larger than the buffer
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        assert!(r.blob().is_err());
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut w = StateWriter::new();
+        w.u32(1);
+        w.u32(2);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

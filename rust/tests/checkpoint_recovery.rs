@@ -1,0 +1,434 @@
+//! Crash-recovery property tests for the checkpointed chunked fleet path:
+//! a run killed at ANY chunk boundary and resumed from its checkpoint must
+//! be bit-identical to an uninterrupted run (for every policy, including
+//! randomized ones, on both markets); a torn checkpoint write must fall
+//! back to the previous generation; corrupt chunks must either abort with
+//! full context or be quarantined with a structured report — never folded
+//! in silently; and transient read errors must be retried to success.
+
+use cloudreserve::pricing::{Contract, Market, Pricing};
+use cloudreserve::sim::engine::{for_each_user_chunked_recoverable, OnCorrupt, RecoveryOptions};
+use cloudreserve::sim::fleet::{FleetAggregate, PolicySpec, UserResult};
+use cloudreserve::trace::io::ChunkedPopulation;
+use cloudreserve::trace::synth::{generate_chunked, SynthConfig};
+use cloudreserve::util::faults::{site, Fault, FaultPlan, KillPoint};
+use std::path::{Path, PathBuf};
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cloudreserve_ckpt_{tag}_{}.bin", std::process::id()))
+}
+
+/// `<path>.prev` — the fallback generation kept by `Checkpoint::write_atomic`.
+fn prev_of(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".prev");
+    PathBuf::from(s)
+}
+
+fn make_trace(tag: &str, users: usize, slots: usize, seed: u64, chunk_users: u32) -> PathBuf {
+    let path = tmp_path(tag);
+    let cfg = SynthConfig { users, slots, seed, ..Default::default() };
+    generate_chunked(&cfg, &path, chunk_users).expect("generate chunked trace");
+    path
+}
+
+fn markets() -> Vec<(&'static str, Market)> {
+    vec![
+        ("single", Market::single(Pricing::normalized(0.08 / 69.0, 0.4875, 1000))),
+        (
+            "menu2",
+            Market::new(
+                0.01,
+                vec![
+                    Contract { upfront: 1.0, rate: 0.004, term: 600 },
+                    Contract { upfront: 1.5, rate: 0.002, term: 1800 },
+                ],
+            ),
+        ),
+    ]
+}
+
+fn specs() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::AllOnDemand,
+        PolicySpec::AllReserved,
+        PolicySpec::Separate,
+        PolicySpec::Deterministic { z: None, window: 32 },
+        PolicySpec::Randomized { window: 16, seed: 7 },
+    ]
+}
+
+/// Exact-bit view of the aggregate (f64s compared as raw bits, not approx).
+fn agg_bits(a: &FleetAggregate) -> (u64, u64, u64, u64) {
+    (a.mean_normalized().to_bits(), a.total_cost().to_bits(), a.total_reservations(), a.users())
+}
+
+/// Exact-bit view of one sink delivery.
+fn user_bits(u: &UserResult) -> (u32, u64, u64, u64) {
+    (u.user_id, u.normalized_cost.to_bits(), u.absolute_cost.to_bits(), u.reservations)
+}
+
+fn cleanup(paths: &[&Path]) {
+    for p in paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// The core acceptance property: kill at EVERY chunk boundary, resume, and
+/// demand the final aggregate AND the concatenated sink stream bit-identical
+/// to an uninterrupted run — for every policy spec on both markets.
+#[test]
+fn resume_at_every_chunk_boundary_is_bit_identical() {
+    for (mname, market) in markets() {
+        for (si, spec) in specs().into_iter().enumerate() {
+            let trace = make_trace(&format!("resume_{mname}_{si}"), 21, 400, 0xFEED, 4);
+            let mut chunked = ChunkedPopulation::open(&trace).expect("open trace");
+            let n_chunks = chunked.n_chunks();
+            assert_eq!(n_chunks, 6, "21 users in chunks of 4");
+
+            let mut clean_users = Vec::new();
+            let clean = for_each_user_chunked_recoverable(
+                &mut chunked,
+                &market,
+                &spec,
+                3,
+                &RecoveryOptions::default(),
+                |u| clean_users.push(user_bits(u)),
+            )
+            .expect("clean run");
+
+            for kill in 0..n_chunks {
+                let what = format!("{mname}/{} kill after chunk {kill}", spec.name());
+                let ckpt = tmp_path(&format!("resume_{mname}_{si}_k{kill}"));
+                let plan = FaultPlan::new().script(
+                    site::FLEET_AFTER_CHUNK,
+                    kill as u64,
+                    u32::MAX,
+                    Fault::Kill,
+                );
+
+                let mut first_users = Vec::new();
+                let opts = RecoveryOptions {
+                    checkpoint_path: Some(&ckpt),
+                    checkpoint_every: 1,
+                    faults: Some(&plan),
+                    ..Default::default()
+                };
+                let err = for_each_user_chunked_recoverable(
+                    &mut chunked,
+                    &market,
+                    &spec,
+                    3,
+                    &opts,
+                    |u| first_users.push(user_bits(u)),
+                )
+                .expect_err(&what);
+                let kp = err
+                    .downcast_ref::<KillPoint>()
+                    .unwrap_or_else(|| panic!("{what}: expected a kill-point, got {err:#}"));
+                assert_eq!(kp.key, kill as u64, "{what}");
+
+                let opts = RecoveryOptions {
+                    checkpoint_path: Some(&ckpt),
+                    checkpoint_every: 1,
+                    resume: true,
+                    ..Default::default()
+                };
+                let mut rest_users = Vec::new();
+                let out = for_each_user_chunked_recoverable(
+                    &mut chunked,
+                    &market,
+                    &spec,
+                    3,
+                    &opts,
+                    |u| rest_users.push(user_bits(u)),
+                )
+                .unwrap_or_else(|e| panic!("{what}: resume failed: {e:#}"));
+
+                assert_eq!(out.resumed_from_chunk, Some(kill as u64 + 1), "{what}");
+                assert!(!out.used_fallback_checkpoint, "{what}");
+                assert_eq!(agg_bits(&out.aggregate), agg_bits(&clean.aggregate), "{what}");
+                // The killed run's deliveries plus the resumed run's
+                // deliveries must reproduce the clean stream exactly: no
+                // user replayed, none dropped, every f64 bit-identical.
+                let mut combined = first_users.clone();
+                combined.extend_from_slice(&rest_users);
+                assert_eq!(combined, clean_users, "{what}: sink stream");
+
+                cleanup(&[&ckpt, &prev_of(&ckpt)]);
+            }
+            cleanup(&[&trace]);
+        }
+    }
+}
+
+/// A torn checkpoint write (crash mid-write) leaves the newest generation
+/// unreadable; resume must fall back to `<path>.prev` and still converge to
+/// the clean answer, merely replaying one extra chunk.
+#[test]
+fn torn_checkpoint_write_falls_back_to_previous_generation() {
+    let (_, market) = markets().remove(0);
+    let spec = PolicySpec::Randomized { window: 16, seed: 7 };
+    let trace = make_trace("torn", 21, 400, 0xFEED, 4);
+    let mut chunked = ChunkedPopulation::open(&trace).expect("open trace");
+
+    let clean = for_each_user_chunked_recoverable(
+        &mut chunked,
+        &market,
+        &spec,
+        2,
+        &RecoveryOptions::default(),
+        |_| {},
+    )
+    .expect("clean run");
+
+    // Checkpoints land after chunks 0..=3 with next_chunk 1..=4; tear the
+    // one keyed next_chunk=4 (written after chunk 3), then kill.
+    let ckpt = tmp_path("torn_ckpt");
+    let plan = FaultPlan::new()
+        .script(site::CKPT_WRITE, 4, u32::MAX, Fault::TornWrite { keep: 10 })
+        .script(site::FLEET_AFTER_CHUNK, 3, u32::MAX, Fault::Kill);
+    let opts = RecoveryOptions {
+        checkpoint_path: Some(&ckpt),
+        checkpoint_every: 1,
+        faults: Some(&plan),
+        ..Default::default()
+    };
+    let err = for_each_user_chunked_recoverable(&mut chunked, &market, &spec, 2, &opts, |_| {})
+        .expect_err("kill after torn write");
+    assert!(err.downcast_ref::<KillPoint>().is_some(), "expected kill-point, got {err:#}");
+    assert!(ckpt.exists() && prev_of(&ckpt).exists(), "both generations on disk");
+
+    let opts = RecoveryOptions {
+        checkpoint_path: Some(&ckpt),
+        checkpoint_every: 1,
+        resume: true,
+        ..Default::default()
+    };
+    let out = for_each_user_chunked_recoverable(&mut chunked, &market, &spec, 2, &opts, |_| {})
+        .expect("resume via fallback");
+    assert!(out.used_fallback_checkpoint, "newest is torn, .prev must be used");
+    // .prev was written after chunk 2 (next_chunk=3): chunk 3 is replayed
+    // a second time, which is safe — its users were never folded twice
+    // because the torn generation's aggregate was discarded with it.
+    assert_eq!(out.resumed_from_chunk, Some(3));
+    assert_eq!(agg_bits(&out.aggregate), agg_bits(&clean.aggregate));
+
+    cleanup(&[&trace, &ckpt, &prev_of(&ckpt)]);
+}
+
+/// On-disk corruption under the default policy: abort, naming the chunk and
+/// the checksum failure — never a silent wrong answer.
+#[test]
+fn corrupt_chunk_aborts_by_default_with_chunk_context() {
+    let (_, market) = markets().remove(0);
+    let spec = PolicySpec::Deterministic { z: None, window: 0 };
+    let trace = make_trace("corrupt_fail", 21, 200, 3, 4);
+    let meta = ChunkedPopulation::open(&trace).expect("open").chunk_meta(2);
+    let mut bytes = std::fs::read(&trace).expect("read");
+    bytes[meta.offset as usize + 5] ^= 0x10;
+    std::fs::write(&trace, &bytes).expect("corrupt chunk 2 on disk");
+
+    let mut chunked = ChunkedPopulation::open(&trace).expect("index still intact");
+    let err = for_each_user_chunked_recoverable(
+        &mut chunked,
+        &market,
+        &spec,
+        2,
+        &RecoveryOptions::default(),
+        |_| {},
+    )
+    .expect_err("corruption must abort under OnCorrupt::Fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("chunk 2"), "error names the chunk: {msg}");
+    assert!(msg.contains("checksum"), "error names the cause: {msg}");
+
+    cleanup(&[&trace]);
+}
+
+/// The same corruption under `--on-corrupt skip`: the run completes, the
+/// chunk is quarantined with offsets/counts/cause, and the aggregate covers
+/// exactly the surviving users.
+#[test]
+fn corrupt_chunk_skip_quarantines_with_structured_report() {
+    let (_, market) = markets().remove(0);
+    let spec = PolicySpec::Deterministic { z: None, window: 0 };
+    let trace = make_trace("corrupt_skip", 21, 200, 3, 4);
+    let meta = ChunkedPopulation::open(&trace).expect("open").chunk_meta(2);
+    let mut bytes = std::fs::read(&trace).expect("read");
+    bytes[meta.offset as usize + 5] ^= 0x10;
+    std::fs::write(&trace, &bytes).expect("corrupt chunk 2 on disk");
+
+    let mut chunked = ChunkedPopulation::open(&trace).expect("index still intact");
+    let opts = RecoveryOptions { on_corrupt: OnCorrupt::Skip, ..Default::default() };
+    let out = for_each_user_chunked_recoverable(&mut chunked, &market, &spec, 2, &opts, |_| {})
+        .expect("skip mode completes");
+
+    assert_eq!(out.quarantined.len(), 1);
+    let q = &out.quarantined[0];
+    assert_eq!(q.chunk, 2);
+    assert_eq!(q.offset, meta.offset);
+    assert_eq!(q.byte_len, meta.byte_len);
+    assert_eq!(q.users_skipped, meta.users_in_chunk);
+    assert!(q.error.contains("checksum"), "quarantine records the cause: {}", q.error);
+    assert_eq!(out.aggregate.users(), 21 - meta.users_in_chunk as u64);
+    assert_eq!(out.chunks_replayed, chunked.n_chunks() as u64 - 1);
+
+    cleanup(&[&trace]);
+}
+
+/// An injected bit flip is deterministic, so it must NOT be retried: one
+/// injection, straight to quarantine as a checksum failure.
+#[test]
+fn injected_bit_flip_is_quarantined_without_retry() {
+    let (_, market) = markets().remove(0);
+    let spec = PolicySpec::Separate;
+    let trace = make_trace("bitflip", 21, 200, 3, 4);
+    let mut chunked = ChunkedPopulation::open(&trace).expect("open");
+
+    let plan = FaultPlan::new().script(
+        site::TRACE_READ,
+        1,
+        u32::MAX,
+        Fault::BitFlip { byte: 3, bit: 2 },
+    );
+    let opts = RecoveryOptions {
+        on_corrupt: OnCorrupt::Skip,
+        faults: Some(&plan),
+        ..Default::default()
+    };
+    let out = for_each_user_chunked_recoverable(&mut chunked, &market, &spec, 2, &opts, |_| {})
+        .expect("skip mode completes");
+
+    assert_eq!(out.quarantined.len(), 1);
+    assert_eq!(out.quarantined[0].chunk, 1);
+    assert!(out.quarantined[0].error.contains("checksum"));
+    let injected = plan.injected();
+    assert_eq!(injected.len(), 1, "deterministic corruption is not retried");
+    assert_eq!(injected[0].kind, "bit_flip");
+
+    cleanup(&[&trace]);
+}
+
+/// Transient read errors recover within the retry budget: the run succeeds,
+/// nothing is quarantined, and the result is bit-identical to a fault-free
+/// run. The injection log shows exactly the two failed attempts.
+#[test]
+fn transient_read_errors_are_retried_to_success() {
+    let (_, market) = markets().remove(0);
+    let spec = PolicySpec::Randomized { window: 0, seed: 11 };
+    let trace = make_trace("transient", 21, 200, 3, 4);
+    let mut chunked = ChunkedPopulation::open(&trace).expect("open");
+
+    let clean = for_each_user_chunked_recoverable(
+        &mut chunked,
+        &market,
+        &spec,
+        2,
+        &RecoveryOptions::default(),
+        |_| {},
+    )
+    .expect("clean run");
+
+    // Attempts 0 and 1 on chunk 0 fail; attempt 2 (the last allowed by
+    // max_read_retries=2) reads clean.
+    let plan = FaultPlan::new().script(site::TRACE_READ, 0, 1, Fault::ReadError);
+    let opts = RecoveryOptions { retry_base_ms: 1, faults: Some(&plan), ..Default::default() };
+    let out = for_each_user_chunked_recoverable(&mut chunked, &market, &spec, 2, &opts, |_| {})
+        .expect("retries absorb the transient errors");
+
+    assert!(out.quarantined.is_empty());
+    assert_eq!(out.chunks_replayed, chunked.n_chunks() as u64);
+    assert_eq!(agg_bits(&out.aggregate), agg_bits(&clean.aggregate));
+    let injected = plan.injected();
+    assert_eq!(injected.len(), 2);
+    assert!(injected.iter().all(|f| f.kind == "read_error"));
+
+    cleanup(&[&trace]);
+}
+
+/// A read error that outlives the retry budget surfaces: abort under Fail,
+/// structured quarantine under Skip — in both cases naming the injected
+/// transient error, never a silent omission.
+#[test]
+fn exhausted_read_retries_fail_or_quarantine() {
+    let (_, market) = markets().remove(0);
+    let spec = PolicySpec::AllReserved;
+    let trace = make_trace("exhausted", 21, 200, 3, 4);
+    let mut chunked = ChunkedPopulation::open(&trace).expect("open");
+
+    let plan = FaultPlan::new().script(site::TRACE_READ, 2, u32::MAX, Fault::ReadError);
+    let opts = RecoveryOptions {
+        max_read_retries: 1,
+        retry_base_ms: 1,
+        faults: Some(&plan),
+        ..Default::default()
+    };
+    let err = for_each_user_chunked_recoverable(&mut chunked, &market, &spec, 2, &opts, |_| {})
+        .expect_err("persistent read error must abort under Fail");
+    assert!(format!("{err:#}").contains("injected transient read error"), "{err:#}");
+
+    let plan = FaultPlan::new().script(site::TRACE_READ, 2, u32::MAX, Fault::ReadError);
+    let opts = RecoveryOptions {
+        max_read_retries: 1,
+        retry_base_ms: 1,
+        on_corrupt: OnCorrupt::Skip,
+        faults: Some(&plan),
+        ..Default::default()
+    };
+    let out = for_each_user_chunked_recoverable(&mut chunked, &market, &spec, 2, &opts, |_| {})
+        .expect("skip mode completes");
+    assert_eq!(out.quarantined.len(), 1);
+    assert_eq!(out.quarantined[0].chunk, 2);
+    assert!(out.quarantined[0].error.contains("injected transient read error"));
+
+    cleanup(&[&trace]);
+}
+
+/// A checkpoint is bound to its (trace, market, policy) by fingerprints:
+/// resuming against anything else is rejected, naming the component.
+#[test]
+fn resume_rejects_mismatched_trace_market_or_policy() {
+    let markets = markets();
+    let spec = PolicySpec::Deterministic { z: None, window: 32 };
+    let trace = make_trace("mismatch_a", 21, 200, 3, 4);
+    let ckpt = tmp_path("mismatch_ckpt");
+
+    let mut chunked = ChunkedPopulation::open(&trace).expect("open");
+    let opts = RecoveryOptions { checkpoint_path: Some(&ckpt), ..Default::default() };
+    let out =
+        for_each_user_chunked_recoverable(&mut chunked, &markets[0].1, &spec, 2, &opts, |_| {})
+            .expect("checkpointed run");
+    assert_eq!(out.checkpoints_written, 1, "checkpoint_every=0 still writes the final one");
+
+    let resume = RecoveryOptions {
+        checkpoint_path: Some(&ckpt),
+        resume: true,
+        ..Default::default()
+    };
+
+    let err = for_each_user_chunked_recoverable(
+        &mut chunked,
+        &markets[0].1,
+        &PolicySpec::Randomized { window: 32, seed: 1 },
+        2,
+        &resume,
+        |_| {},
+    )
+    .expect_err("different policy must be rejected");
+    assert!(format!("{err:#}").contains("policy spec"), "{err:#}");
+
+    let err =
+        for_each_user_chunked_recoverable(&mut chunked, &markets[1].1, &spec, 2, &resume, |_| {})
+            .expect_err("different market must be rejected");
+    assert!(format!("{err:#}").contains("market"), "{err:#}");
+
+    let trace_b = make_trace("mismatch_b", 21, 200, 4, 4);
+    let mut other = ChunkedPopulation::open(&trace_b).expect("open other");
+    let err =
+        for_each_user_chunked_recoverable(&mut other, &markets[0].1, &spec, 2, &resume, |_| {})
+            .expect_err("different trace must be rejected");
+    assert!(format!("{err:#}").contains("trace"), "{err:#}");
+
+    cleanup(&[&trace, &trace_b, &ckpt, &prev_of(&ckpt)]);
+}
