@@ -9,7 +9,7 @@
 //!   paper's joint algorithm.
 
 use super::window::WindowScan;
-use super::{Decision, Policy, ResQueue, SaveState};
+use super::{Decision, Policy, RunQueue, SaveState};
 use crate::pricing::{ContractId, Pricing};
 use crate::util::state::{StateReader, StateWriter};
 
@@ -49,14 +49,14 @@ impl Policy for AllOnDemand {
 #[derive(Debug, Clone)]
 pub struct AllReserved {
     pricing: Pricing,
-    cover: ResQueue,
+    cover: RunQueue,
     t: usize,
     out: [(ContractId, u32); 1],
 }
 
 impl AllReserved {
     pub fn new(pricing: Pricing) -> AllReserved {
-        AllReserved { pricing, cover: ResQueue::default(), t: 0, out: [(0, 0)] }
+        AllReserved { pricing, cover: RunQueue::default(), t: 0, out: [(0, 0)] }
     }
 }
 
@@ -92,9 +92,7 @@ impl Policy for AllReserved {
         self.t += 1;
         let active = self.cover.active_at(t, self.pricing.tau);
         let reserve = demand.saturating_sub(active);
-        for _ in 0..reserve {
-            self.cover.push(t);
-        }
+        self.cover.push_n(t, reserve); // one coalesced run per purchase batch
         self.out = [(0, reserve)];
         Decision { on_demand: 0, reservations: &self.out[..usize::from(reserve > 0)] }
     }
@@ -104,17 +102,13 @@ impl Policy for AllReserved {
 #[derive(Debug, Clone)]
 struct Level {
     scan: WindowScan,
-    cover: ResQueue,
-    scan_res: std::collections::VecDeque<usize>,
+    cover: RunQueue,
+    scan_res: RunQueue,
 }
 
 impl Level {
     fn new() -> Level {
-        Level {
-            scan: WindowScan::new(),
-            cover: ResQueue::default(),
-            scan_res: std::collections::VecDeque::new(),
-        }
+        Level { scan: WindowScan::new(), cover: RunQueue::default(), scan_res: RunQueue::default() }
     }
 }
 
@@ -139,16 +133,13 @@ impl Separate {
         let beta = pricing.beta();
         level.scan.expire_before((t + 1).saturating_sub(tau));
         // x at insertion = reservations of THIS virtual user within range
-        while matches!(level.scan_res.front(), Some(&rt) if rt + tau <= t) {
-            level.scan_res.pop_front();
-        }
-        let x_ins = level.scan_res.len() as u32;
+        let x_ins = level.scan_res.active_at(t, tau);
         level.scan.insert(t, demand01, x_ins);
         let mut reserve = 0u32;
         while pricing.p * level.scan.violations() as f64 > beta + 1e-12 {
             level.scan.reserve();
             level.cover.push(t);
-            level.scan_res.push_back(t);
+            level.scan_res.push(t);
             reserve += 1;
         }
         let covered = level.cover.active_at(t, tau);
@@ -173,25 +164,21 @@ impl SaveState for Separate {
         for level in &self.levels {
             level.scan.save_state(w);
             level.cover.save_state(w);
-            w.usize(level.scan_res.len());
-            for &rt in &level.scan_res {
-                w.usize(rt);
-            }
+            level.scan_res.save_state(w);
         }
     }
 
     fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
         self.t = r.usize()?;
-        let n = r.usize()?;
+        // each level serializes at least an empty scan (16 bytes) plus two
+        // empty queues (8 bytes each), bounding the level count
+        let n = r.seq_len(32)?;
         self.levels.clear();
         for _ in 0..n {
             let mut level = Level::new();
             level.scan.restore_state(r)?;
             level.cover.restore_state(r)?;
-            let m = r.usize()?;
-            for _ in 0..m {
-                level.scan_res.push_back(r.usize()?);
-            }
+            level.scan_res.restore_state(r)?;
             self.levels.push(level);
         }
         self.out = [(0, 0)];

@@ -12,7 +12,7 @@
 //! (see that module for the uniform-increment argument).
 
 use super::window::WindowScan;
-use super::{Decision, Policy, ResQueue, SaveState};
+use super::{Decision, Policy, RunQueue, SaveState};
 use crate::pricing::{ContractId, Pricing};
 use crate::util::state::{StateReader, StateWriter};
 
@@ -26,11 +26,12 @@ pub struct Deterministic {
     /// Prediction window `w < τ`; 0 = purely online.
     w: usize,
     scan: WindowScan,
-    /// Actual reservations for coverage accounting (`x_t` in line 9).
-    cover: ResQueue,
+    /// Actual reservations for coverage accounting (`x_t` in line 9),
+    /// coalesced into `(time, count)` runs.
+    cover: RunQueue,
     /// Reservations counted for the scan-window left edge `t+w−τ+1`
     /// (a reservation influences slot `i` iff `|t'−i| ≤ τ−1`).
-    scan_res: std::collections::VecDeque<usize>,
+    scan_res: RunQueue,
     /// Next slot index to be fed (slots are implicit and consecutive).
     t: usize,
     /// Next window slot index to insert into the scan (`t + w` ahead).
@@ -64,8 +65,8 @@ impl Deterministic {
             z,
             w,
             scan: WindowScan::new(),
-            cover: ResQueue::default(),
-            scan_res: std::collections::VecDeque::new(),
+            cover: RunQueue::default(),
+            scan_res: RunQueue::default(),
             t: 0,
             next_scan_slot: 0,
             out: [(0, 0)],
@@ -91,17 +92,13 @@ impl Deterministic {
     /// whose influence range `[t'−τ+1, t'+τ−1]` covers `i`, i.e. those made
     /// at `t' ≥ i−τ+1` (reservation times never exceed the current `t ≤ i`).
     fn x_at_insert(&mut self, slot: usize) -> u32 {
-        let tau = self.pricing.tau;
-        while matches!(self.scan_res.front(), Some(&rt) if rt + tau <= slot) {
-            self.scan_res.pop_front();
-        }
-        self.scan_res.len() as u32
+        self.scan_res.active_at(slot, self.pricing.tau)
     }
 
     fn record_reservation(&mut self, t: usize) {
         self.scan.reserve();
         self.cover.push(t);
-        self.scan_res.push_back(t);
+        self.scan_res.push(t);
     }
 }
 
@@ -121,10 +118,7 @@ impl SaveState for Deterministic {
         w.f64_bits(self.z);
         self.scan.save_state(w);
         self.cover.save_state(w);
-        w.usize(self.scan_res.len());
-        for &rt in &self.scan_res {
-            w.usize(rt);
-        }
+        self.scan_res.save_state(w);
         w.usize(self.t);
         w.usize(self.next_scan_slot);
     }
@@ -135,11 +129,7 @@ impl SaveState for Deterministic {
         self.z = z;
         self.scan.restore_state(r)?;
         self.cover.restore_state(r)?;
-        let n = r.usize()?;
-        self.scan_res.clear();
-        for _ in 0..n {
-            self.scan_res.push_back(r.usize()?);
-        }
+        self.scan_res.restore_state(r)?;
         self.t = r.usize()?;
         self.next_scan_slot = r.usize()?;
         self.out = [(0, 0)];
@@ -397,6 +387,50 @@ mod tests {
             // Ledger::bill_slot errors if coverage is violated.
             let _ = run(&mut a, &demands, pricing);
         }
+    }
+
+    /// A checkpoint byte-crafted exactly as the pre-coalescing
+    /// implementation wrote it — threshold, scan `(slot, e)` pairs, then
+    /// `cover`/`scan_res` as **one usize key per purchased instance** —
+    /// must restore into the run-coalesced policy, re-serialize to the
+    /// identical bytes, and keep deciding consistently.
+    #[test]
+    fn pre_rewrite_checkpoint_blob_restores_byte_exactly() {
+        let pricing = pr(0.1, 0.0, 100); // beta = 1
+        let mut w = StateWriter::new();
+        w.f64_bits(1.0); // z = beta
+        w.i64(2); // scan.g: two compensating reservations
+        w.usize(3);
+        for &(slot, e) in &[(14usize, 1i64), (15, 3), (16, 4)] {
+            w.usize(slot);
+            w.i64(e);
+        }
+        for _ in 0..2 {
+            // cover then scan_res: two instances reserved at t = 12, one
+            // wire entry each (the old per-instance deque layout)
+            w.usize(2);
+            w.usize(12);
+            w.usize(12);
+        }
+        w.usize(17); // t
+        w.usize(17); // next_scan_slot
+        let blob = w.into_bytes();
+
+        let mut policy = Deterministic::online(pricing);
+        let mut r = StateReader::new(&blob);
+        policy.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+
+        let mut w2 = StateWriter::new();
+        policy.save_state(&mut w2);
+        assert_eq!(w2.into_bytes(), blob, "wire format must stay byte-identical");
+
+        // continuation: both reservations from t=12 still cover slot 17
+        // (12 + 100 > 17) and p·V = 0.2 stays under z, so demand 1 is
+        // fully covered with no new commitment.
+        let dec = policy.decide(1, &[]);
+        assert_eq!(dec.on_demand, 0);
+        assert_eq!(dec.total_reserved(), 0);
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Flat, branch-light kernels for the per-slot policy hot path.
+//!
+//! The menu policies run the same four k-contract sweeps every slot:
+//! expire each break-even scan, probe future coverage, pick the triggered
+//! contract with the best steady-state cost, and compensate covered scans
+//! after a purchase. Each sweep here iterates contiguous SoA arrays (the
+//! `terms` / `betas` / `steady` columns hoisted at construction) with no
+//! per-iteration branching on contract structs, so the compiler can keep
+//! the loops in registers and autovectorize the arithmetic. The `bench`
+//! subcommand measures them via the `kernels` section of BENCH.json.
+
+use crate::algos::window::WindowScan;
+use crate::algos::RunQueue;
+
+/// Expire every scan's window left edge for a lookahead ending at `right`:
+/// scan `j` keeps slots `≥ right + 1 − terms[j]`.
+#[inline]
+pub(crate) fn expire_scans(scans: &mut [WindowScan], terms: &[usize], right: usize) {
+    for (scan, &term) in scans.iter_mut().zip(terms) {
+        scan.expire_before((right + 1).saturating_sub(term));
+    }
+}
+
+/// Total instances covered by active reservations at the current slot `t`
+/// under expiry-slot keys, dropping expired runs.
+#[inline]
+pub(crate) fn covered_now(cover: &mut [RunQueue], t: usize) -> u32 {
+    let mut total = 0u32;
+    for q in cover.iter_mut() {
+        q.expire_before(t + 1);
+        total += q.total();
+    }
+    total
+}
+
+/// Instances still covered at the *future* slot `s` (strictly later expiry),
+/// without expiring anything — the lookahead probe of the windowed sweeps.
+#[inline]
+pub(crate) fn covered_at(cover: &[RunQueue], s: usize) -> u32 {
+    cover.iter().map(|q| q.count_after(s)).sum()
+}
+
+/// The steady-cost pick: among contracts whose uncompensated on-demand
+/// spend `p·V_j` exceeds the threshold, return the one with the lowest
+/// full-utilization cost per slot. Strict `<` keeps the earliest triggered
+/// contract on steady-cost ties, matching the pre-flat fold.
+#[inline]
+pub(crate) fn pick_triggered(
+    p: f64,
+    viol: &[u32],
+    thresholds: &[f64],
+    steady: &[f64],
+) -> Option<usize> {
+    debug_assert!(viol.len() == thresholds.len() && viol.len() == steady.len());
+    let k = viol.len().min(thresholds.len()).min(steady.len());
+    let (viol, thresholds, steady) = (&viol[..k], &thresholds[..k], &steady[..k]);
+    let mut best = usize::MAX;
+    let mut best_cost = f64::INFINITY;
+    for j in 0..k {
+        let triggered = p * viol[j] as f64 > thresholds[j] + 1e-12;
+        if triggered && steady[j] < best_cost {
+            best = j;
+            best_cost = steady[j];
+        }
+    }
+    (best != usize::MAX).then_some(best)
+}
+
+/// Refresh the violation-count column from the scans.
+#[inline]
+pub(crate) fn gather_violations(scans: &[WindowScan], viol: &mut [u32]) {
+    for (v, s) in viol.iter_mut().zip(scans) {
+        *v = s.violations();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_prefers_lowest_steady_cost_among_triggered() {
+        let viol = [10, 10, 10];
+        let thresholds = [5.0, 0.5, 0.5]; // contract 0 not triggered at p=0.1
+        let steady = [0.001, 0.03, 0.02];
+        assert_eq!(pick_triggered(0.1, &viol, &thresholds, &steady), Some(2));
+    }
+
+    #[test]
+    fn pick_keeps_earliest_on_steady_ties() {
+        let viol = [10, 10];
+        let thresholds = [0.5, 0.5];
+        let steady = [0.02, 0.02];
+        assert_eq!(pick_triggered(0.1, &viol, &thresholds, &steady), Some(0));
+    }
+
+    #[test]
+    fn pick_returns_none_when_nothing_triggers() {
+        let viol = [1, 0];
+        let thresholds = [0.5, 0.5];
+        let steady = [0.02, 0.01];
+        assert_eq!(pick_triggered(0.1, &viol, &thresholds, &steady), None);
+    }
+
+    #[test]
+    fn covered_probes_match_queue_contents() {
+        let mut cover = vec![RunQueue::default(), RunQueue::default()];
+        cover[0].push_n(5, 2); // expires after slot 4
+        cover[1].push_n(9, 3);
+        assert_eq!(covered_at(&cover, 3), 5);
+        assert_eq!(covered_at(&cover, 5), 3);
+        assert_eq!(covered_now(&mut cover, 4), 5); // keys > 4 survive
+        assert_eq!(covered_now(&mut cover, 5), 3);
+        assert_eq!(covered_now(&mut cover, 9), 0);
+    }
+
+    #[test]
+    fn expire_scans_uses_per_contract_terms() {
+        let mut scans = vec![WindowScan::new(), WindowScan::new()];
+        scans[0].insert(0, 1, 0);
+        scans[1].insert(0, 1, 0);
+        let terms = [2usize, 10];
+        expire_scans(&mut scans, &terms, 5); // keeps >= 4 resp. >= 0
+        assert_eq!(scans[0].violations(), 0);
+        assert_eq!(scans[1].violations(), 1);
+    }
+}

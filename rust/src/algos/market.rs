@@ -54,11 +54,9 @@
 //! multi-contract menus are open (the paper leaves the theory to future
 //! work); reports compare against `2 − α_max` empirically.
 
-use std::collections::VecDeque;
-
 use super::density::sample_z;
 use super::window::WindowScan;
-use super::{Decision, Policy, SaveState};
+use super::{kernels, Decision, Policy, RunQueue, SaveState};
 use crate::pricing::{ContractId, Market};
 use crate::util::rng::Rng;
 use crate::util::state::{StateReader, StateWriter};
@@ -84,13 +82,16 @@ pub struct MarketDeterministic {
     scans: Vec<WindowScan>,
     /// Times of the reservations that *compensated* contract j's scan and
     /// are still inside its window — the per-scan `x` bookkeeping at
-    /// insertion. A purchase of contract `c` lands here only for scans
-    /// with `β_j ≤ β_c` (cross-tier accounting).
-    res_times: Vec<VecDeque<usize>>,
-    /// Actual coverage: expiry slots (exclusive) per contract, FIFO.
-    cover: Vec<VecDeque<usize>>,
+    /// insertion, coalesced into `(time, count)` runs. A purchase of
+    /// contract `c` lands here only for scans with `β_j ≤ β_c` (cross-tier
+    /// accounting).
+    res_times: Vec<RunQueue>,
+    /// Actual coverage: expiry slots (exclusive) per contract, FIFO runs.
+    cover: Vec<RunQueue>,
     /// Scratch: reservations made this slot, per contract.
     counts: Vec<u32>,
+    /// Scratch: per-contract violation counts for the steady-cost pick.
+    viol: Vec<u32>,
     /// Reusable typed-decision buffer.
     out: Vec<(ContractId, u32)>,
     t: usize,
@@ -142,9 +143,10 @@ impl MarketDeterministic {
             betas,
             steady,
             scans: (0..k).map(|_| WindowScan::new()).collect(),
-            res_times: (0..k).map(|_| VecDeque::new()).collect(),
-            cover: (0..k).map(|_| VecDeque::new()).collect(),
+            res_times: (0..k).map(|_| RunQueue::default()).collect(),
+            cover: (0..k).map(|_| RunQueue::default()).collect(),
             counts: vec![0; k],
+            viol: vec![0; k],
             out: Vec::with_capacity(k),
             t: 0,
             next_scan_slot: 0,
@@ -167,25 +169,6 @@ impl MarketDeterministic {
         self.scans[j].violations()
     }
 
-    /// Active reservations (all contracts) covering slot `t`, dropping
-    /// entries expired at the current time.
-    fn covered(&mut self, t: usize) -> u32 {
-        let mut total = 0u32;
-        for q in self.cover.iter_mut() {
-            while matches!(q.front(), Some(&e) if e <= t) {
-                q.pop_front();
-            }
-            total += q.len() as u32;
-        }
-        total
-    }
-
-    /// Reservations (all contracts) whose term still covers the *future*
-    /// slot `s` — no popping: entries expired relative to `s` may still
-    /// cover earlier slots.
-    fn covered_at(&self, s: usize) -> u32 {
-        self.cover.iter().map(|q| q.iter().filter(|&&e| e > s).count() as u32).sum()
-    }
 }
 
 impl super::Reset for MarketDeterministic {
@@ -224,16 +207,10 @@ impl SaveState for MarketDeterministic {
             scan.save_state(w);
         }
         for q in &self.res_times {
-            w.usize(q.len());
-            for &rt in q {
-                w.usize(rt);
-            }
+            q.save_state(w);
         }
         for q in &self.cover {
-            w.usize(q.len());
-            for &e in q {
-                w.usize(e);
-            }
+            q.save_state(w);
         }
         w.usize(self.t);
         w.usize(self.next_scan_slot);
@@ -255,18 +232,10 @@ impl SaveState for MarketDeterministic {
             scan.restore_state(r)?;
         }
         for q in &mut self.res_times {
-            let n = r.usize()?;
-            q.clear();
-            for _ in 0..n {
-                q.push_back(r.usize()?);
-            }
+            q.restore_state(r)?;
         }
         for q in &mut self.cover {
-            let n = r.usize()?;
-            q.clear();
-            for _ in 0..n {
-                q.push_back(r.usize()?);
-            }
+            q.restore_state(r)?;
         }
         self.t = r.usize()?;
         self.next_scan_slot = r.usize()?;
@@ -308,24 +277,17 @@ impl Policy for MarketDeterministic {
         // compensation bookkeeping and the real coverage. (For a
         // single-contract menu both quantities coincide and this is
         // exactly Algorithm 1's — resp. Algorithm 3's — bookkeeping.)
-        let covered_now = self.covered(t);
+        let covered_now = kernels::covered_now(&mut self.cover, t);
         let right = t + self.w;
-        for j in 0..k {
-            let term = self.terms[j];
-            self.scans[j].expire_before((right + 1).saturating_sub(term));
-        }
+        kernels::expire_scans(&mut self.scans, &self.terms, right);
         let visible_end = t + self.w.min(future.len());
         while self.next_scan_slot <= visible_end {
             let s = self.next_scan_slot;
             let d_s = if s == t { demand } else { future[s - t - 1] };
-            let cov_s = if s == t { covered_now } else { self.covered_at(s) };
+            let cov_s = if s == t { covered_now } else { kernels::covered_at(&self.cover, s) };
             for j in 0..k {
-                let term = self.terms[j];
-                let times = &mut self.res_times[j];
-                while matches!(times.front(), Some(&rt) if rt + term <= s) {
-                    times.pop_front();
-                }
-                let x_ins = (times.len() as u32).max(cov_s);
+                let own = self.res_times[j].active_at(s, self.terms[j]);
+                let x_ins = own.max(cov_s);
                 self.scans[j].insert(s, d_s, x_ins);
             }
             self.next_scan_slot += 1;
@@ -344,32 +306,28 @@ impl Policy for MarketDeterministic {
             *c = 0;
         }
         let mut cov = covered_now;
+        kernels::gather_violations(&self.scans, &mut self.viol);
         loop {
-            let mut pick: Option<ContractId> = None;
-            for j in 0..k {
-                if p * self.scans[j].violations() as f64 > self.thresholds[j] + 1e-12 {
-                    pick = match pick {
-                        Some(i) if self.steady[i] <= self.steady[j] => Some(i),
-                        _ => Some(j),
-                    };
-                }
-            }
-            let Some(j) = pick else { break };
+            let Some(j) = kernels::pick_triggered(p, &self.viol, &self.thresholds, &self.steady)
+            else {
+                break;
+            };
             // Algorithm 3's extra guard (Sec. VI): with a prediction
             // window, only commit while current demand exceeds coverage.
             if self.w > 0 && cov >= demand {
                 break;
             }
-            self.cover[j].push_back(t + self.terms[j]);
+            self.cover[j].push(t + self.terms[j]);
             cov += 1;
             self.counts[j] += 1;
             let cap = self.betas[j];
             for i in 0..k {
                 if self.betas[i] <= cap {
                     self.scans[i].reserve();
-                    self.res_times[i].push_back(t);
+                    self.res_times[i].push(t);
                 }
             }
+            kernels::gather_violations(&self.scans, &mut self.viol);
         }
 
         self.out.clear();
@@ -817,6 +775,58 @@ mod tests {
             assert_eq!(a.total.to_bits(), b.total.to_bits(), "seed {seed}");
             assert_eq!(a.reservations, b.reservations, "seed {seed}");
         }
+    }
+
+    /// A checkpoint byte-crafted exactly as the pre-coalescing menu policy
+    /// wrote it — contract count, thresholds, per-contract scans, then
+    /// `res_times`/`cover` as **one usize key per purchased instance** —
+    /// must restore into the run-coalesced policy, re-serialize to the
+    /// identical bytes, and keep deciding consistently.
+    #[test]
+    fn pre_rewrite_checkpoint_blob_restores_byte_exactly() {
+        let market = two_tier(); // betas: c0 = 2.0, c1 = 1.875
+        // State after buying two instances of contract 1 at t = 40: its
+        // purchase compensates only scans with β_i ≤ β_1, i.e. scan 1.
+        let mut w = StateWriter::new();
+        w.usize(2);
+        w.f64_bits(2.0);
+        w.f64_bits(1.875);
+        for g in [0i64, 2] {
+            w.i64(g);
+            w.usize(2);
+            for &(slot, e) in &[(40usize, 1i64), (41, 2)] {
+                w.usize(slot);
+                w.i64(e);
+            }
+        }
+        w.usize(0); // res_times[0]: contract 0's scan was not compensated
+        w.usize(2); // res_times[1]: one wire entry per instance
+        w.usize(40);
+        w.usize(40);
+        w.usize(0); // cover[0]
+        w.usize(2); // cover[1]: expiry slots 40 + 300, expanded per instance
+        w.usize(340);
+        w.usize(340);
+        w.usize(42); // t
+        w.usize(42); // next_scan_slot
+        let blob = w.into_bytes();
+
+        let mut policy = MarketDeterministic::new(market);
+        let mut r = StateReader::new(&blob);
+        policy.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+
+        let mut w2 = StateWriter::new();
+        policy.save_state(&mut w2);
+        assert_eq!(w2.into_bytes(), blob, "wire format must stay byte-identical");
+
+        // continuation: the two contract-1 instances cover slot 42, scan 0
+        // holds 2 violations (p·V = 0.1 ≤ β_0), nothing triggers.
+        let dec = policy.decide(1, &[]);
+        assert_eq!(dec.on_demand, 0);
+        assert_eq!(dec.total_reserved(), 0);
+        assert_eq!(policy.scan_violations(0), 2);
+        assert_eq!(policy.scan_violations(1), 0);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 pub mod baselines;
 pub mod density;
 pub mod deterministic;
+pub(crate) mod kernels;
 pub mod market;
 pub mod offline;
 pub mod randomized;
@@ -73,29 +74,77 @@ pub trait Policy: Send {
     }
 }
 
-/// Helper shared by policies: active *actual* reservations bookkeeping.
+/// Coalesced expiry bookkeeping shared by the policies and the ledger: a
+/// FIFO of `(key, count)` **runs** with nondecreasing keys, replacing one
+/// `VecDeque` entry per purchased instance. Keys are slot indices — either
+/// reservation times (expire when `key + τ ≤ t`) or precomputed expiry
+/// slots (expire when `key ≤ t`); each holder picks one convention. A
+/// purchase batch of `n` instances is one run, so expiry loops walk runs,
+/// not instances, and the cached total makes the common "how many are
+/// active" probe O(1) after expiry.
 #[derive(Debug, Clone, Default)]
-pub(crate) struct ResQueue {
-    times: std::collections::VecDeque<usize>,
+pub(crate) struct RunQueue {
+    runs: std::collections::VecDeque<(usize, u32)>,
+    total: u32,
 }
 
-impl ResQueue {
-    /// Count of reservations still active at slot `t` (made in `[t−τ+1, t]`),
-    /// dropping expired entries.
-    fn active_at(&mut self, t: usize, tau: usize) -> u32 {
-        while matches!(self.times.front(), Some(&rt) if rt + tau <= t) {
-            self.times.pop_front();
+impl RunQueue {
+    /// Append `n` entries with key `key`. Keys must be pushed in
+    /// nondecreasing order (they are event times); equal keys coalesce into
+    /// the trailing run.
+    pub(crate) fn push_n(&mut self, key: usize, n: u32) {
+        if n == 0 {
+            return;
         }
-        self.times.len() as u32
+        debug_assert!(
+            !matches!(self.runs.back(), Some(&(k, _)) if k > key),
+            "keys must be nondecreasing"
+        );
+        match self.runs.back_mut() {
+            Some((k, c)) if *k == key => *c += n,
+            _ => self.runs.push_back((key, n)),
+        }
+        self.total += n;
     }
 
-    fn push(&mut self, t: usize) {
-        self.times.push_back(t);
+    pub(crate) fn push(&mut self, key: usize) {
+        self.push_n(key, 1);
+    }
+
+    /// Drop runs with `key < min_keep`. O(runs dropped), not instances.
+    pub(crate) fn expire_before(&mut self, min_keep: usize) {
+        while matches!(self.runs.front(), Some(&(k, _)) if k < min_keep) {
+            let (_, c) = self.runs.pop_front().unwrap();
+            self.total -= c;
+        }
+    }
+
+    /// Count of entries still active at slot `t` under reservation-time
+    /// keys (an entry from time `rt` with lifetime `τ` is active while
+    /// `rt + τ > t`), dropping expired runs. This is the one shared
+    /// phantom-reservation expiry helper — the policies' `res_times` /
+    /// `scan_res` / `cover` bookkeeping all route through it.
+    pub(crate) fn active_at(&mut self, t: usize, tau: usize) -> u32 {
+        self.expire_before((t + 1).saturating_sub(tau));
+        self.total
+    }
+
+    /// Entries currently held (after whatever expiry the holder ran).
+    pub(crate) fn total(&self) -> u32 {
+        self.total
+    }
+
+    /// Entries with `key > s`, without expiring anything — the
+    /// `covered_at` probe under expiry-slot keys. Runs are nondecreasing,
+    /// so the matching entries are a suffix.
+    pub(crate) fn count_after(&self, s: usize) -> u32 {
+        self.runs.iter().rev().take_while(|&&(k, _)| k > s).map(|&(_, c)| c).sum()
     }
 
     /// Drop all entries, keeping the allocation.
-    fn clear(&mut self) {
-        self.times.clear();
+    pub(crate) fn clear(&mut self) {
+        self.runs.clear();
+        self.total = 0;
     }
 }
 
@@ -124,19 +173,31 @@ pub(crate) trait SaveState {
     fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()>;
 }
 
-impl SaveState for ResQueue {
+impl SaveState for RunQueue {
+    /// Runs are expanded back to one key per instance on the wire, exactly
+    /// the sequence the pre-coalescing per-instance deques serialized — so
+    /// every policy and ledger checkpoint format stays byte-identical.
     fn save_state(&self, w: &mut StateWriter) {
-        w.usize(self.times.len());
-        for &t in &self.times {
-            w.usize(t);
+        w.usize(self.total as usize);
+        for &(k, c) in &self.runs {
+            for _ in 0..c {
+                w.usize(k);
+            }
         }
     }
 
     fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
-        let n = r.usize()?;
-        self.times.clear();
-        for _ in 0..n {
-            self.times.push_back(r.usize()?);
+        let n = r.seq_len(8)?;
+        self.clear();
+        let mut prev = 0usize;
+        for i in 0..n {
+            let k = r.usize()?;
+            anyhow::ensure!(
+                i == 0 || k >= prev,
+                "reservation queue state: keys must be nondecreasing (entry {i}: {k} after {prev})"
+            );
+            prev = k;
+            self.push_n(k, 1);
         }
         Ok(())
     }
@@ -159,8 +220,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn res_queue_expiry() {
-        let mut q = ResQueue::default();
+    fn run_queue_expiry() {
+        let mut q = RunQueue::default();
         q.push(0);
         q.push(2);
         assert_eq!(q.active_at(2, 3), 2); // res@0 active t=0,1,2
@@ -170,21 +231,61 @@ mod tests {
     }
 
     #[test]
-    fn res_queue_save_restore_round_trip() {
-        let mut q = ResQueue::default();
+    fn run_queue_coalesces_equal_keys() {
+        let mut q = RunQueue::default();
+        q.push_n(4, 3);
+        q.push(4);
+        q.push_n(7, 2);
+        assert_eq!(q.runs.len(), 2, "equal keys must share one run");
+        assert_eq!(q.total(), 6);
+        assert_eq!(q.count_after(4), 2);
+        assert_eq!(q.count_after(3), 6);
+        q.expire_before(5);
+        assert_eq!(q.total(), 2);
+        q.expire_before(8);
+        assert_eq!(q.total(), 0);
+    }
+
+    #[test]
+    fn run_queue_save_restore_round_trip() {
+        let mut q = RunQueue::default();
         q.push(3);
-        q.push(9);
+        q.push_n(9, 2);
         q.push(14);
         let mut w = StateWriter::new();
         q.save_state(&mut w);
         let bytes = w.into_bytes();
+        // the wire format expands runs: 4 per-instance keys
+        assert_eq!(bytes.len(), 8 + 4 * 8);
 
-        let mut restored = ResQueue::default();
+        let mut restored = RunQueue::default();
         restored.push(777); // stale content must be discarded
         let mut r = StateReader::new(&bytes);
         restored.restore_state(&mut r).unwrap();
         r.finish().unwrap();
-        assert_eq!(restored.times, q.times);
+        assert_eq!(restored.runs, q.runs);
+        assert_eq!(restored.total(), q.total());
+    }
+
+    #[test]
+    fn run_queue_restore_rejects_decreasing_keys() {
+        let mut w = StateWriter::new();
+        w.usize(2);
+        w.usize(9);
+        w.usize(3); // out of order — not a state any run produces
+        let bytes = w.into_bytes();
+        let mut q = RunQueue::default();
+        let err = q.restore_state(&mut StateReader::new(&bytes)).unwrap_err();
+        assert!(err.to_string().contains("nondecreasing"), "{err}");
+    }
+
+    #[test]
+    fn run_queue_restore_rejects_oversized_length() {
+        let mut w = StateWriter::new();
+        w.usize(1 << 50); // claims ~10^15 entries in an empty payload
+        let bytes = w.into_bytes();
+        let mut q = RunQueue::default();
+        assert!(q.restore_state(&mut StateReader::new(&bytes)).is_err());
     }
 
     #[test]

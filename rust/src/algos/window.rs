@@ -21,24 +21,57 @@
 //! violation condition `d_i > x_i` is simply `e_i > G`. Since `G` only
 //! grows, a slot that is not violating at insertion can never become
 //! violating — so only violating slots are stored at all.
-
-use std::collections::{HashMap, VecDeque};
+//!
+//! ## Flat layout (no hashing on the per-slot path)
+//!
+//! Violating slots live in a flat power-of-two **ring** (parallel `slot` /
+//! `e` arrays), and the currently-counted excesses live in a **dense
+//! rotating-base array** instead of a `HashMap<i64, u32>`. The excess
+//! `e − g` at insertion equals `demand − x_at_insert`, so it is bounded by
+//! the peak demand; and since `g` only grows, every *active* violation
+//! satisfies `g < e < g + cap` once `cap` exceeds the peak excess seen.
+//! Bucketing by `e mod cap` (`cap` a power of two) therefore gives every
+//! active excess a distinct bucket, and the base rotates implicitly as `g`
+//! advances: `reserve()` pops the single bucket whose offset just reached
+//! zero (calendar-queue style, O(1)), and growth re-counts the ring
+//! (amortized O(1) per insert). Entries cleared by `reserve()` stay in the
+//! ring until expiry, exactly like the old lazily-cleared deque entries —
+//! which keeps the `SaveState` wire format byte-identical.
 
 use crate::algos::SaveState;
 use crate::util::state::{StateReader, StateWriter};
+
+/// Smallest ring capacity allocated (entries).
+const RING_MIN: usize = 8;
+/// Smallest dense-histogram capacity allocated (buckets). Kept deliberately
+/// small so the growth path is exercised by ordinary tests.
+const DENSE_MIN: usize = 16;
+/// Largest per-entry excess `e − g` accepted from a checkpoint. Restoring
+/// allocates O(max excess) histogram buckets, so an unvalidated corrupt
+/// blob could demand an unbounded allocation; real excesses equal
+/// `demand − x_at_insert` per user-slot and sit orders of magnitude below
+/// this envelope.
+const MAX_RESTORE_EXCESS: i64 = 1 << 24;
 
 /// Incremental tracker of `V = #{i in window : d_i > x_i}`.
 #[derive(Debug, Clone, Default)]
 pub struct WindowScan {
     /// Total reservations made so far (the uniform offset `G`).
     g: i64,
-    /// Violating slots in insertion (= time) order: `(slot_index, e)`.
-    /// Entries whose `e <= g` have already been cleared from `v`/`hist`
-    /// and are removed lazily on expiry.
-    viol: VecDeque<(usize, i64)>,
-    /// Histogram of `e` values among *currently counted* violations.
-    hist: HashMap<i64, u32>,
-    /// Current violation count `V`.
+    /// Flat FIFO ring of violating slots in insertion (= time) order:
+    /// parallel `slot` / `e` arrays, power-of-two capacity. Entries whose
+    /// `e <= g` have already been cleared from `v`/`dense` and are removed
+    /// lazily on expiry.
+    ring_slot: Vec<usize>,
+    ring_e: Vec<i64>,
+    head: usize,
+    len: usize,
+    /// Dense rotating-base histogram: `dense[e mod cap]` counts the
+    /// *currently counted* violations with excess value `e`. Invariant:
+    /// every counted entry satisfies `g < e < g + dense.len()`, so buckets
+    /// are collision-free.
+    dense: Vec<u32>,
+    /// Current violation count `V` (== sum of `dense`).
     v: u32,
 }
 
@@ -63,26 +96,74 @@ impl WindowScan {
     /// its demand, and `x_at_insert` the bookkeeping reservation count
     /// `x_slot` at insertion time (= number of reservations whose ±(τ−1)
     /// influence range covers `slot`, i.e. those made at `t' ≥ slot−τ+1`).
+    #[inline]
     pub fn insert(&mut self, slot: usize, demand: u32, x_at_insert: u32) {
         let e = demand as i64 - x_at_insert as i64 + self.g;
         if e > self.g {
-            self.viol.push_back((slot, e));
-            *self.hist.entry(e).or_insert(0) += 1;
-            self.v += 1;
+            self.push_violation(slot, e);
         }
+    }
+
+    fn push_violation(&mut self, slot: usize, e: i64) {
+        // excess offset is `demand − x_at_insert ∈ [1, peak demand]`
+        let off = (e - self.g) as usize;
+        if off >= self.dense.len() {
+            self.grow_dense(off);
+        }
+        self.dense[(e as u64 as usize) & (self.dense.len() - 1)] += 1;
+        self.v += 1;
+        if self.len == self.ring_slot.len() {
+            self.grow_ring();
+        }
+        let idx = (self.head + self.len) & (self.ring_slot.len() - 1);
+        self.ring_slot[idx] = slot;
+        self.ring_e[idx] = e;
+        self.len += 1;
+    }
+
+    /// Reallocate the histogram so offsets up to `min_off` fit, re-counting
+    /// the ring. The entry being inserted must not be in the ring yet.
+    fn grow_dense(&mut self, min_off: usize) {
+        let cap = (min_off + 1).next_power_of_two().max(DENSE_MIN).max(self.dense.len() * 2);
+        let mut dense = vec![0u32; cap];
+        let ring_mask = self.ring_slot.len().wrapping_sub(1);
+        for i in 0..self.len {
+            let e = self.ring_e[(self.head + i) & ring_mask];
+            if e > self.g {
+                dense[(e as u64 as usize) & (cap - 1)] += 1;
+            }
+        }
+        self.dense = dense;
+    }
+
+    fn grow_ring(&mut self) {
+        let old_cap = self.ring_slot.len();
+        let cap = (old_cap * 2).max(RING_MIN);
+        let mut slots = vec![0usize; cap];
+        let mut es = vec![0i64; cap];
+        for i in 0..self.len {
+            let j = (self.head + i) & (old_cap.wrapping_sub(1));
+            slots[i] = self.ring_slot[j];
+            es[i] = self.ring_e[j];
+        }
+        self.ring_slot = slots;
+        self.ring_e = es;
+        self.head = 0;
     }
 
     /// Expire slots with index < `oldest_kept` (the window's left edge).
     pub fn expire_before(&mut self, oldest_kept: usize) {
-        while matches!(self.viol.front(), Some(&(s, _)) if s < oldest_kept) {
-            let (_, e) = self.viol.pop_front().unwrap();
+        while self.len > 0 {
+            let mask = self.ring_slot.len() - 1;
+            if self.ring_slot[self.head] >= oldest_kept {
+                break;
+            }
+            let e = self.ring_e[self.head];
+            self.head = (self.head + 1) & mask;
+            self.len -= 1;
             if e > self.g {
                 // still counted as a violation — remove from the count
-                let c = self.hist.get_mut(&e).expect("hist entry for active violation");
-                *c -= 1;
-                if *c == 0 {
-                    self.hist.remove(&e);
-                }
+                self.dense[(e as u64 as usize) & (self.dense.len() - 1)] -= 1;
                 self.v -= 1;
             }
         }
@@ -90,56 +171,98 @@ impl WindowScan {
 
     /// Record one new reservation: `x_i += 1` uniformly over the window
     /// (actual forward coverage + phantom history — Algorithm 1 lines 5–7).
+    /// Slots whose excess just reached zero occupy exactly the bucket whose
+    /// rotating offset hit 0 — one pop, no hashing.
+    #[inline]
     pub fn reserve(&mut self) {
         self.g += 1;
-        if let Some(c) = self.hist.remove(&self.g) {
-            // slots whose excess just reached zero stop violating
-            self.v -= c;
+        if !self.dense.is_empty() {
+            let idx = (self.g as u64 as usize) & (self.dense.len() - 1);
+            self.v -= self.dense[idx];
+            self.dense[idx] = 0;
         }
     }
 
     /// Number of slots currently buffered (diagnostics / memory tests).
     pub fn buffered(&self) -> usize {
-        self.viol.len()
+        self.len
     }
 
     /// Reset to the freshly-constructed state, keeping allocations (the
     /// fleet engine reuses one scan across every user in a shard).
     pub fn clear(&mut self) {
+        if self.v != 0 {
+            // sum(dense) == v, so a zero count means the buckets are clean
+            self.dense.fill(0);
+        }
         self.g = 0;
-        self.viol.clear();
-        self.hist.clear();
+        self.head = 0;
+        self.len = 0;
         self.v = 0;
     }
 }
 
 impl SaveState for WindowScan {
-    /// Serializes `g` plus the full `viol` deque — including entries whose
-    /// `e <= g` that are only removed lazily on expiry — and rebuilds
-    /// `hist`/`v` on restore by counting `e > g`. This reproduces the saved
-    /// instance exactly (lazy entries and all) without serializing the
-    /// `HashMap`, whose iteration order is nondeterministic.
+    /// Serializes `g` plus the full ring — including entries whose `e <= g`
+    /// that are only removed lazily on expiry — and rebuilds `dense`/`v` on
+    /// restore by counting `e > g`. This is the same logical `(slot, e)`
+    /// sequence the pre-flat implementation wrote, so existing
+    /// `cloudreserve-ckpt/v1` checkpoints restore unchanged.
     fn save_state(&self, w: &mut StateWriter) {
         w.i64(self.g);
-        w.usize(self.viol.len());
-        for &(slot, e) in &self.viol {
-            w.usize(slot);
-            w.i64(e);
+        w.usize(self.len);
+        let mask = self.ring_slot.len().wrapping_sub(1);
+        for i in 0..self.len {
+            let j = (self.head + i) & mask;
+            w.usize(self.ring_slot[j]);
+            w.i64(self.ring_e[j]);
         }
     }
 
     fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
-        self.g = r.i64()?;
-        let n = r.usize()?;
-        self.viol.clear();
-        self.hist.clear();
+        let g = r.i64()?;
+        anyhow::ensure!(g >= 0, "WindowScan state: negative reservation count {g}");
+        // each entry is 16 bytes (slot + e), so the length field is bounded
+        // by the bytes actually present — a corrupt count cannot force an
+        // unbounded allocation
+        let n = r.seq_len(16)?;
+        if self.v != 0 {
+            self.dense.fill(0);
+        }
+        self.g = g;
+        self.head = 0;
+        self.len = 0;
         self.v = 0;
-        for _ in 0..n {
+        if self.ring_slot.len() < n {
+            let cap = n.next_power_of_two().max(RING_MIN);
+            self.ring_slot = vec![0; cap];
+            self.ring_e = vec![0; cap];
+        }
+        let mut max_off = 0i64;
+        for i in 0..n {
             let slot = r.usize()?;
             let e = r.i64()?;
-            self.viol.push_back((slot, e));
-            if e > self.g {
-                *self.hist.entry(e).or_insert(0) += 1;
+            if e > g {
+                let off = e - g;
+                anyhow::ensure!(
+                    off <= MAX_RESTORE_EXCESS,
+                    "WindowScan state: entry {i} (slot {slot}) has excess {off}, \
+                     beyond the restore envelope {MAX_RESTORE_EXCESS}"
+                );
+                max_off = max_off.max(off);
+            }
+            self.ring_slot[i] = slot;
+            self.ring_e[i] = e;
+        }
+        self.len = n;
+        if max_off as usize >= self.dense.len() {
+            self.dense = vec![0u32; (max_off as usize + 1).next_power_of_two().max(DENSE_MIN)];
+        }
+        let dense_mask = self.dense.len() - 1;
+        for i in 0..n {
+            let e = self.ring_e[i];
+            if e > g {
+                self.dense[(e as u64 as usize) & dense_mask] += 1;
                 self.v += 1;
             }
         }
@@ -174,9 +297,10 @@ impl NaiveScan {
     /// Violations over window ending at `end` (inclusive), width tau.
     pub fn violations(&self, end: usize) -> u32 {
         let lo = (end + 1).saturating_sub(self.tau);
-        (lo..=end)
-            .filter(|&i| i < self.d.len() && self.d[i] > self.x[i])
-            .count() as u32
+        // clamp once instead of bounds-checking every element: `x` is kept
+        // at least as long as `d`, so only the upper edge needs the clamp
+        let hi = (end + 1).min(self.d.len());
+        (lo..hi).filter(|&i| self.d[i] > self.x[i]).count() as u32
     }
 
     /// Reserve at time `t`: x_i += 1 for i in [t-tau+1, t+tau-1].
@@ -196,6 +320,7 @@ impl NaiveScan {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+    use std::collections::VecDeque;
 
     /// Drive WindowScan and NaiveScan side by side with random demands and
     /// random interleaved reservations; counts must agree at every step.
@@ -242,6 +367,81 @@ mod tests {
         }
     }
 
+    /// Same driver at large τ with peak demands well past `DENSE_MIN`, so
+    /// the dense histogram must grow and its base must rotate many times;
+    /// includes a mid-stream save/restore swap that the remaining replay
+    /// must not notice.
+    #[test]
+    fn matches_naive_reference_large_tau_and_growth() {
+        let mut rng = Rng::new(0xB16B00);
+        for &tau in &[16usize, 64, 350] {
+            let t_len = 600;
+            let mut fast = WindowScan::new();
+            let mut naive = NaiveScan::new(tau);
+            let mut res_times: VecDeque<usize> = VecDeque::new();
+            for t in 0..t_len {
+                // mostly small demands with occasional spikes >= DENSE_MIN
+                let d =
+                    if rng.chance(0.15) { 16 + rng.below(200) as u32 } else { rng.below(6) as u32 };
+                naive.insert(d);
+                while matches!(res_times.front(), Some(&rt) if rt + tau <= t) {
+                    res_times.pop_front();
+                }
+                let x_ins = res_times.len() as u32;
+                fast.expire_before((t + 1).saturating_sub(tau));
+                fast.insert(t, d, x_ins);
+                assert_eq!(fast.violations(), naive.violations(t), "t={t} tau={tau}");
+                let n_res = if rng.chance(0.4) { rng.below(4) as u32 } else { 0 };
+                for _ in 0..n_res {
+                    fast.reserve();
+                    naive.reserve(t);
+                    res_times.push_back(t);
+                    assert_eq!(fast.violations(), naive.violations(t), "t={t} tau={tau}");
+                }
+                if t == t_len / 2 {
+                    // mid-stream round trip: swap in a restored copy
+                    let mut w = StateWriter::new();
+                    fast.save_state(&mut w);
+                    let bytes = w.into_bytes();
+                    let mut copy = WindowScan::new();
+                    copy.insert(0, 999, 0); // stale state must be discarded
+                    let mut r = StateReader::new(&bytes);
+                    copy.restore_state(&mut r).unwrap();
+                    r.finish().unwrap();
+                    assert_eq!(copy.violations(), fast.violations());
+                    assert_eq!(copy.buffered(), fast.buffered());
+                    fast = copy;
+                }
+            }
+        }
+    }
+
+    /// The excess histogram starts empty, grows to the peak offset, and the
+    /// rotating base walks far past the capacity without aliasing buckets.
+    #[test]
+    fn dense_growth_and_base_rotation() {
+        let mut w = WindowScan::new();
+        w.insert(0, 40, 0); // excess 40 >= DENSE_MIN forces a grow
+        assert_eq!(w.violations(), 1);
+        for k in 1..40 {
+            w.reserve();
+            assert_eq!(w.violations(), 1, "still short after {k} reservations");
+        }
+        w.reserve(); // 40th: excess reaches zero
+        assert_eq!(w.violations(), 0);
+        // rotate the base far past any power-of-two capacity
+        for _ in 0..1000 {
+            w.reserve();
+        }
+        w.insert(1, 3, 0); // e = 3 + g, offset 3 in the rotated base
+        assert_eq!(w.violations(), 1);
+        w.reserve();
+        w.reserve();
+        assert_eq!(w.violations(), 1);
+        w.reserve();
+        assert_eq!(w.violations(), 0);
+    }
+
     #[test]
     fn nonviolating_slots_are_not_buffered() {
         let mut w = WindowScan::new();
@@ -280,7 +480,7 @@ mod tests {
     fn expiry_of_cleared_violation_is_noop() {
         let mut w = WindowScan::new();
         w.insert(0, 1, 0);
-        w.reserve(); // clears it from the count but not the deque
+        w.reserve(); // clears it from the count but not the ring
         assert_eq!(w.violations(), 0);
         w.expire_before(5); // lazy removal must not underflow
         assert_eq!(w.violations(), 0);
@@ -340,5 +540,76 @@ mod tests {
         assert_eq!(w.violations(), 1);
         w.reserve(); // g=3, clears e=3
         assert_eq!(w.violations(), 0);
+    }
+
+    /// A blob byte-crafted exactly as the pre-flat (hash-map) implementation
+    /// wrote it — `g`, entry count, then `(slot, e)` pairs in insertion
+    /// order including a lazily-cleared entry — must restore into the flat
+    /// scan and re-serialize to the identical bytes.
+    #[test]
+    fn pre_rewrite_blob_restores_byte_exactly() {
+        let mut w = StateWriter::new();
+        w.i64(3); // g: three reservations made
+        w.usize(4);
+        for &(slot, e) in &[(7usize, 2i64), (8, 5), (9, 4), (10, 12)] {
+            w.usize(slot);
+            w.i64(e);
+        }
+        let blob = w.into_bytes();
+
+        let mut scan = WindowScan::new();
+        let mut r = StateReader::new(&blob);
+        scan.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(scan.reservations(), 3);
+        assert_eq!(scan.buffered(), 4);
+        assert_eq!(scan.violations(), 3); // e in {5, 4, 12} > g=3; e=2 was cleared
+
+        let mut w2 = StateWriter::new();
+        scan.save_state(&mut w2);
+        assert_eq!(w2.into_bytes(), blob, "wire format must stay byte-identical");
+
+        // and the restored scan behaves: g=4 clears e=4, g=5 clears e=5
+        scan.reserve();
+        assert_eq!(scan.violations(), 2);
+        scan.reserve();
+        assert_eq!(scan.violations(), 1);
+        scan.expire_before(11); // drops everything but (10, 12)
+        assert_eq!(scan.violations(), 1);
+        assert_eq!(scan.buffered(), 1);
+    }
+
+    #[test]
+    fn restore_rejects_oversized_length_field() {
+        let mut w = StateWriter::new();
+        w.i64(0);
+        w.usize(1 << 60); // claims ~10^18 entries in an 8-byte payload
+        let blob = w.into_bytes();
+        let mut scan = WindowScan::new();
+        let err = scan.restore_state(&mut StateReader::new(&blob)).unwrap_err();
+        assert!(err.to_string().contains("length"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn restore_rejects_excess_beyond_envelope() {
+        let mut w = StateWriter::new();
+        w.i64(0);
+        w.usize(1);
+        w.usize(0);
+        w.i64(1 << 40); // excess would demand a terabyte-scale histogram
+        let blob = w.into_bytes();
+        let mut scan = WindowScan::new();
+        let err = scan.restore_state(&mut StateReader::new(&blob)).unwrap_err();
+        assert!(err.to_string().contains("excess"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn restore_rejects_negative_reservation_count() {
+        let mut w = StateWriter::new();
+        w.i64(-1);
+        w.usize(0);
+        let blob = w.into_bytes();
+        let mut scan = WindowScan::new();
+        assert!(scan.restore_state(&mut StateReader::new(&blob)).is_err());
     }
 }

@@ -20,9 +20,7 @@
 //! via [`Market::single`]; that path is bit-identical to the v1 billing
 //! arithmetic (`upfront = 1`, `rate = α·p`).
 
-use std::collections::VecDeque;
-
-use crate::algos::{Decision, SaveState};
+use crate::algos::{Decision, RunQueue, SaveState};
 use crate::pricing::{ContractId, Market, Pricing};
 use crate::util::state::{StateReader, StateWriter};
 
@@ -106,10 +104,12 @@ impl CostReport {
 #[derive(Debug, Clone)]
 pub struct Ledger {
     market: Market,
-    /// Expiry slot (exclusive) of each active reservation, one FIFO queue
+    /// Expiry slots (exclusive) of active reservations, one FIFO run queue
     /// per contract id — reservations of a contract are acquired in time
-    /// order, so each queue's front expires first.
-    active: Vec<VecDeque<usize>>,
+    /// order, so each queue's front run expires first, and a purchase batch
+    /// of `n` instances occupies one `(expiry, n)` run instead of `n`
+    /// entries.
+    active: Vec<RunQueue>,
     /// Next slot to bill (slots must be billed consecutively from 0).
     t: usize,
     report: CostReport,
@@ -120,7 +120,7 @@ impl Ledger {
         let k = market.len();
         Ledger {
             market,
-            active: (0..k).map(|_| VecDeque::new()).collect(),
+            active: (0..k).map(|_| RunQueue::default()).collect(),
             t: 0,
             report: CostReport::default(),
         }
@@ -142,10 +142,8 @@ impl Ledger {
         let t = self.t;
         let mut total = 0u32;
         for q in self.active.iter_mut() {
-            while matches!(q.front(), Some(&e) if e <= t) {
-                q.pop_front();
-            }
-            total += q.len() as u32;
+            q.expire_before(t + 1);
+            total += q.total();
         }
         total
     }
@@ -184,9 +182,7 @@ impl Ledger {
         let mut new_count = 0u64;
         for &(cid, n) in decision.reservations {
             let c = self.market.contract(cid);
-            for _ in 0..n {
-                self.active[cid].push_back(t + c.term);
-            }
+            self.active[cid].push_n(t + c.term, n); // one run per purchase batch
             fees += n as f64 * c.upfront;
             new_count += n as u64;
         }
@@ -201,7 +197,7 @@ impl Ledger {
             if rem == 0 {
                 break;
             }
-            let avail = self.active[cid].len() as u32;
+            let avail = self.active[cid].total();
             let take = rem.min(avail);
             ru += self.market.contract(cid).rate * take as f64;
             rem -= take;
@@ -261,10 +257,7 @@ impl SaveState for Ledger {
     fn save_state(&self, w: &mut StateWriter) {
         w.usize(self.active.len());
         for q in &self.active {
-            w.usize(q.len());
-            for &e in q {
-                w.usize(e);
-            }
+            q.save_state(w);
         }
         w.usize(self.t);
         let r = &self.report;
@@ -289,11 +282,7 @@ impl SaveState for Ledger {
             self.active.len()
         );
         for q in &mut self.active {
-            let n = r.usize()?;
-            q.clear();
-            for _ in 0..n {
-                q.push_back(r.usize()?);
-            }
+            q.restore_state(r)?;
         }
         self.t = r.usize()?;
         self.report = CostReport {
@@ -526,6 +515,53 @@ mod tests {
         }
         assert_eq!(copy.report().total.to_bits(), orig.report().total.to_bits());
         assert_eq!(copy.report(), orig.report());
+    }
+
+    /// A checkpoint byte-crafted exactly as the pre-coalescing ledger wrote
+    /// it — **one usize expiry key per active instance** — must restore
+    /// into the run-coalesced queues, re-serialize to the identical bytes,
+    /// and keep billing with the same expiry schedule.
+    #[test]
+    fn pre_rewrite_blob_restores_byte_exactly() {
+        // tau = 3; two instances bought at t=2 (expiry key 5) and one at
+        // t=3 (key 6), now at t=4 — the old layout wrote each instance.
+        let mut w = StateWriter::new();
+        w.usize(1); // contract count
+        w.usize(3); // active instances, expanded per instance
+        w.usize(5);
+        w.usize(5);
+        w.usize(6);
+        w.usize(4); // t
+        w.f64_bits(3.45); // total = fees 3.0 + usage 0.25 + on-demand 0.2
+        w.f64_bits(3.0);
+        w.f64_bits(0.2);
+        w.f64_bits(0.25);
+        w.u64(3); // reservations
+        w.u64(2); // on_demand_slots
+        w.u64(5); // reserved_slots
+        w.u64(7); // demand_slots
+        w.u32(3); // peak_active
+        w.usize(4); // slots
+        let blob = w.into_bytes();
+
+        let mut l = Ledger::single(pricing());
+        let mut r = StateReader::new(&blob);
+        l.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+
+        let mut w2 = StateWriter::new();
+        l.save_state(&mut w2);
+        assert_eq!(w2.into_bytes(), blob, "wire format must stay byte-identical");
+
+        // continuation follows the recorded expiry schedule: 3 active at
+        // t=4, 1 at t=5 (the t=2 pair lapses), 0 at t=6.
+        assert_eq!(l.active_now(), 3);
+        l.bill_slot(3, 0, 0).unwrap();
+        assert_eq!(l.active_now(), 1);
+        l.bill_slot(1, 0, 0).unwrap();
+        assert_eq!(l.active_now(), 0);
+        l.bill_slot(1, 0, 1).unwrap();
+        assert_eq!(l.report().reservations, 3);
     }
 
     #[test]

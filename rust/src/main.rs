@@ -488,8 +488,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 /// the seed per-user path, verifying bit-identical results and recording
 /// the speedup; (b) offline-DP solve times over a (D, τ) grid, plus the
 /// joint multi-contract DP over a (D, terms) grid; (c) per-policy decide
-/// latency. Writes everything to `--out` (default `BENCH.json`) so every
-/// future PR has a trajectory to beat.
+/// latency and the flat hot-path kernel timings (`kernels`: WindowScan,
+/// ledger billing, menu sweep). Writes everything to `--out` (default
+/// `BENCH.json`) so every future PR has a trajectory to beat.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use cloudreserve::sim::engine::{run_fleet_flat, FleetPolicy};
     use cloudreserve::sim::fleet::{run_fleet_reference, suite_specs};
@@ -716,6 +717,108 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ]));
     }
 
+    // (c') flat hot-path kernels (PERF.md §Flat kernels): the dense
+    // rotating-base WindowScan, coalesced-run ledger billing, and the menu
+    // policy's per-slot k-contract sweep. The end-to-end suite numbers
+    // would bury a data-structure regression under trace generation and
+    // dispatch; these watch the rewritten structures directly and feed the
+    // CI perf gate's `kernels` checks.
+    eprintln!("bench: hot-path kernels...");
+    let kernel_slots = if quick { 5_000usize } else { 50_000 };
+    let ktau = 300usize;
+    let mut krng = Rng::new(7);
+    let kdemands: Vec<u32> = (0..kernel_slots).map(|_| krng.below(6) as u32).collect();
+
+    let scan_res = bencher.run("kernels/window_scan", || {
+        let mut scan = cloudreserve::algos::window::WindowScan::new();
+        let mut acc = 0u32;
+        for (t, &d) in kdemands.iter().enumerate() {
+            scan.expire_before((t + 1).saturating_sub(ktau));
+            scan.insert(t, d, 0);
+            // drain violations in bursts so reserve() rotates the base
+            while scan.violations() > 48 {
+                scan.reserve();
+            }
+            acc = acc.wrapping_add(scan.violations());
+        }
+        acc
+    });
+    let scan_ops_per_s = scan_res.throughput(kernel_slots as f64);
+    println!(
+        "kernel    window_scan                  {:>8.1} ns/slot  ({:.2} M slots/s)",
+        scan_res.median_ns() / kernel_slots as f64,
+        scan_ops_per_s / 1e6
+    );
+
+    let lpricing = Pricing::normalized(0.08, 0.4, 200);
+    let ledger_res = bencher.run("kernels/ledger_bill_slot", || {
+        // the All-reserved billing pattern: always feasible, always active
+        let mut l = cloudreserve::ledger::Ledger::single(lpricing);
+        for &d in &kdemands {
+            let active = l.active_now();
+            l.bill_slot(d, d.saturating_sub(active), 0).unwrap();
+        }
+        l.report().total
+    });
+    println!(
+        "kernel    ledger_bill_slot             {:>8.1} ns/slot  ({:.2} M slots/s)",
+        ledger_res.median_ns() / kernel_slots as f64,
+        ledger_res.throughput(kernel_slots as f64) / 1e6
+    );
+
+    let kmenu = Market::new(
+        0.01,
+        vec![
+            cloudreserve::pricing::Contract { upfront: 1.0, rate: 0.004, term: 600 },
+            cloudreserve::pricing::Contract { upfront: 1.5, rate: 0.002, term: 1800 },
+        ],
+    );
+    let kk = kmenu.len();
+    let market_res = bencher.run("kernels/market_sweep", || {
+        let mut p = cloudreserve::algos::market::MarketDeterministic::new(kmenu.clone());
+        let mut acc = 0u32;
+        for &d in &kdemands {
+            let dec = p.decide(d, &[]);
+            acc = acc.wrapping_add(dec.total_reserved() ^ dec.on_demand);
+        }
+        acc
+    });
+    println!(
+        "kernel    market_sweep (k={kk})          {:>8.1} ns/contract-slot",
+        market_res.median_ns() / (kernel_slots * kk) as f64
+    );
+    let kernels_json = Json::obj(vec![
+        ("slots", Json::Num(kernel_slots as f64)),
+        (
+            "window_scan",
+            Json::obj(vec![
+                ("ops_per_s", Json::Num(scan_ops_per_s)),
+                ("ns_per_slot", Json::Num(scan_res.median_ns() / kernel_slots as f64)),
+                ("detail", scan_res.to_json()),
+            ]),
+        ),
+        (
+            "ledger_bill_slot",
+            Json::obj(vec![
+                ("ns_per_slot", Json::Num(ledger_res.median_ns() / kernel_slots as f64)),
+                ("slots_per_s", Json::Num(ledger_res.throughput(kernel_slots as f64))),
+                ("detail", ledger_res.to_json()),
+            ]),
+        ),
+        (
+            "market_sweep",
+            Json::obj(vec![
+                ("contracts", Json::Num(kk as f64)),
+                (
+                    "ns_per_contract_slot",
+                    Json::Num(market_res.median_ns() / (kernel_slots * kk) as f64),
+                ),
+                ("slots_per_s", Json::Num(market_res.throughput(kernel_slots as f64))),
+                ("detail", market_res.to_json()),
+            ]),
+        ),
+    ]);
+
     // (d) fleet-scale grid: stream-generate a chunked trace to disk, then
     // replay it through the bounded-memory chunked path (never holding more
     // than one chunk of users resident), recording wall time, throughput,
@@ -841,6 +944,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("offline_dp", Json::Arr(dp_rows)),
         ("offline_dp_joint", Json::Arr(joint_rows)),
         ("decide_ns", Json::Arr(decide_rows)),
+        ("kernels", kernels_json),
         ("fleet_scale", fleet_json),
     ]);
     std::fs::write(&out, doc.dump_pretty())?;

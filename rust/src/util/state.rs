@@ -140,6 +140,24 @@ impl<'a> StateReader<'a> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    /// Read a sequence length whose items occupy at least `bytes_per_item`
+    /// bytes each, rejecting counts larger than the remaining payload could
+    /// possibly hold. Restore paths size allocations from these counts, so
+    /// an unvalidated length in a corrupt checkpoint would otherwise demand
+    /// an unbounded allocation before the truncation was ever noticed.
+    pub fn seq_len(&mut self, bytes_per_item: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let cap = self.remaining() / bytes_per_item.max(1);
+        ensure!(
+            n <= cap,
+            "state sequence length {n} exceeds remaining capacity \
+             ({} bytes / {} per item)",
+            self.remaining(),
+            bytes_per_item
+        );
+        Ok(n)
+    }
+
     pub fn blob(&mut self) -> Result<&'a [u8]> {
         let n = self.usize()?;
         ensure!(
@@ -212,6 +230,28 @@ mod tests {
         let mut r = StateReader::new(&bytes[..5]);
         let err = r.u64().unwrap_err().to_string();
         assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn seq_len_bounds_by_remaining_payload() {
+        let mut w = StateWriter::new();
+        w.usize(3);
+        w.u64(1);
+        w.u64(2);
+        w.u64(3);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        assert_eq!(r.seq_len(8).unwrap(), 3);
+
+        let mut w = StateWriter::new();
+        w.usize(4); // claims one item more than the payload holds
+        w.u64(1);
+        w.u64(2);
+        w.u64(3);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        let err = r.seq_len(8).unwrap_err().to_string();
+        assert!(err.contains("length"), "{err}");
     }
 
     #[test]

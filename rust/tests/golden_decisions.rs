@@ -1,0 +1,133 @@
+//! Golden decision-stream fixture: per-slot `(on_demand, reservations)`
+//! sequences recorded from the pre-rewrite bookkeeping (hash-map excess
+//! histogram, one queue entry per purchased instance) for every
+//! [`PolicySpec`] on four committed markets — the two paper-scale menus
+//! plus two short-term markets whose reservations expire inside the trace.
+//!
+//! The flat hot-path rewrite (dense rotating-base `WindowScan`, coalesced
+//! `RunQueue` runs, SoA market sweeps) must reproduce every stream
+//! bit-exactly. Regenerate with `python3 tests/fixtures/gen_golden.py`,
+//! which re-derives the streams from its own port of the old layout and
+//! cross-checks them against a port of the flat structures first.
+
+use cloudreserve::sim::fleet::PolicySpec;
+use cloudreserve::util::json::{parse, Json};
+use cloudreserve::{Contract, Market, Policy, Pricing};
+
+const FIXTURE: &str = include_str!("fixtures/golden_decisions.json");
+
+fn market_from(desc: &Json) -> Market {
+    let p = desc.get("p").as_f64().unwrap();
+    match desc.get("kind").as_str().unwrap() {
+        "single" => {
+            let alpha = desc.get("alpha").as_f64().unwrap();
+            let tau = desc.get("tau").as_usize().unwrap();
+            Market::single(Pricing::normalized(p, alpha, tau))
+        }
+        "menu" => {
+            let contracts = desc
+                .get("contracts")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|c| {
+                    let c = c.as_arr().unwrap();
+                    Contract {
+                        upfront: c[0].as_f64().unwrap(),
+                        rate: c[1].as_f64().unwrap(),
+                        term: c[2].as_usize().unwrap(),
+                    }
+                })
+                .collect();
+            Market::new(p, contracts)
+        }
+        other => panic!("unknown market kind {other}"),
+    }
+}
+
+fn spec_from(spec: &Json) -> PolicySpec {
+    match spec.get("kind").as_str().unwrap() {
+        "AllOnDemand" => PolicySpec::AllOnDemand,
+        "AllReserved" => PolicySpec::AllReserved,
+        "Separate" => PolicySpec::Separate,
+        "Deterministic" => {
+            PolicySpec::Deterministic { z: None, window: spec.get("window").as_usize().unwrap() }
+        }
+        "Randomized" => PolicySpec::Randomized {
+            window: spec.get("window").as_usize().unwrap(),
+            seed: spec.get("seed").as_usize().unwrap() as u64,
+        },
+        other => panic!("unknown spec kind {other}"),
+    }
+}
+
+#[test]
+fn every_policy_reproduces_the_recorded_streams() {
+    let fixture = parse(FIXTURE).expect("fixture parses");
+    let user_id = fixture.get("user_id").as_usize().unwrap() as u32;
+    let markets = fixture.get("markets").as_obj().unwrap();
+    let demands_of = |name: &str| -> Vec<u32> {
+        let (_, desc) = markets.iter().find(|(k, _)| k == name).unwrap();
+        desc.get("demands")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap() as u32)
+            .collect()
+    };
+
+    let cases = fixture.get("cases").as_arr().unwrap();
+    assert!(cases.len() >= 28, "fixture unexpectedly small: {} cases", cases.len());
+    let mut pinned_reservations = 0u32;
+    for case in cases {
+        let mname = case.get("market").as_str().unwrap();
+        let (_, desc) = markets.iter().find(|(k, _)| k == mname).unwrap();
+        let market = market_from(desc);
+        let spec = spec_from(case.get("spec"));
+        let demands = demands_of(mname);
+        let want_od: Vec<u32> = case
+            .get("od")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap() as u32)
+            .collect();
+        let want_res: Vec<(usize, usize, u32)> = case
+            .get("reservations")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| {
+                let r = r.as_arr().unwrap();
+                (
+                    r[0].as_usize().unwrap(),
+                    r[1].as_usize().unwrap(),
+                    r[2].as_usize().unwrap() as u32,
+                )
+            })
+            .collect();
+        assert_eq!(want_od.len(), demands.len(), "{mname}/{}", spec.name());
+
+        let mut policy = spec.build(&market, user_id);
+        let w = policy.window();
+        let mut got_res = Vec::new();
+        for (t, &d) in demands.iter().enumerate() {
+            let hi = (t + 1 + w).min(demands.len());
+            let fut = if w == 0 { &[][..] } else { &demands[t + 1..hi] };
+            let dec = policy.decide(d, fut);
+            assert_eq!(
+                dec.on_demand,
+                want_od[t],
+                "on-demand diverged: market={mname} spec={} t={t}",
+                spec.name()
+            );
+            for &(cid, n) in dec.reservations {
+                got_res.push((t, cid, n));
+                pinned_reservations += n;
+            }
+        }
+        assert_eq!(got_res, want_res, "reservations diverged: market={mname} spec={}", spec.name());
+    }
+    // the fixture must genuinely exercise the reservation machinery
+    assert!(pinned_reservations > 50, "only {pinned_reservations} reservations replayed");
+}
