@@ -4,7 +4,12 @@
 //! (L1 Pallas window scan through the AOT artifact) every N slots.
 //!
 //! This is the paper's system as a downstream user would deploy it:
-//! no oracle, no offline pass — pure online operation.
+//! no oracle, no offline pass — pure online operation. Every user is
+//! billed in isolation, which makes this the "isolated users" baseline
+//! for the shared-portfolio broker (`cloudreserve::broker`, CLI
+//! subcommand `broker`): the same fleet run through the aggregate
+//! portfolio realizes a multiplexing gain over the per-user total
+//! reported here.
 //!
 //! Run: `cargo run --release --example broker_service -- --users 96 --slots 4000`
 

@@ -1,0 +1,190 @@
+//! Demand aggregation: fold a fleet of per-user demand curves into one
+//! aggregate curve the broker buys for, plus the per-user usage totals the
+//! settlement schemes split the realized cost over.
+//!
+//! Aggregation is pure integer addition (`u64` per slot), so the streaming
+//! chunk-at-a-time fold over a [`ChunkedPopulation`] is *bit-identical* to
+//! the in-RAM [`FlatPopulation`] fold for any chunk size — pinned by
+//! `tests/broker_props.rs` across chunk sizes 1/4/23/64. The `u64`
+//! accumulator means 10⁵+ users at u32 demand levels cannot overflow; the
+//! conversion back to the `u32` curve the policies replay is checked and
+//! fails loudly if an aggregate slot exceeds `u32::MAX`.
+
+use anyhow::{ensure, Result};
+
+use crate::trace::io::ChunkedPopulation;
+use crate::trace::FlatPopulation;
+
+/// Per-user usage totals collected during aggregation — everything the
+/// settlement schemes need: total instance-slots (the proportional weight)
+/// and the peak (reported, and a cheap sanity signal for cap schemes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UserUsage {
+    pub user_id: u32,
+    /// Total instance-slots requested (Σ_t d_t).
+    pub demand_slots: u64,
+    /// Peak concurrent instances.
+    pub peak: u32,
+}
+
+/// The aggregate demand curve of a fleet plus per-user usage, built by
+/// folding users in one at a time (any source: in-RAM flat populations or
+/// streamed trace chunks).
+#[derive(Debug, Clone, Default)]
+pub struct AggregateDemand {
+    /// Aggregate demand per slot, `u64` so no realistic fleet overflows.
+    slots: Vec<u64>,
+    /// Usage of every folded user, in fold order.
+    users: Vec<UserUsage>,
+}
+
+impl AggregateDemand {
+    pub fn new() -> AggregateDemand {
+        AggregateDemand::default()
+    }
+
+    /// Fold one user's demand curve into the aggregate.
+    pub fn fold_user(&mut self, user_id: u32, demand: &[u32]) {
+        if demand.len() > self.slots.len() {
+            self.slots.resize(demand.len(), 0);
+        }
+        let mut total = 0u64;
+        let mut peak = 0u32;
+        for (slot, &d) in self.slots.iter_mut().zip(demand) {
+            *slot += d as u64;
+            total += d as u64;
+            peak = peak.max(d);
+        }
+        self.users.push(UserUsage { user_id, demand_slots: total, peak });
+    }
+
+    /// Fold a whole columnar population, user by user in store order.
+    pub fn fold_flat(&mut self, flat: &FlatPopulation) {
+        for i in 0..flat.len() {
+            self.fold_user(flat.user_id(i), flat.demand(i));
+        }
+    }
+
+    /// Build from an in-RAM columnar population.
+    pub fn from_flat(flat: &FlatPopulation) -> AggregateDemand {
+        let mut agg = AggregateDemand::new();
+        agg.fold_flat(flat);
+        agg
+    }
+
+    /// Build by streaming a chunked v2 trace, one chunk resident at a time.
+    /// Bit-identical to [`AggregateDemand::from_flat`] on the same users in
+    /// the same order (integer folds commute with chunking).
+    pub fn from_chunked(chunked: &mut ChunkedPopulation) -> Result<AggregateDemand> {
+        let mut agg = AggregateDemand::new();
+        let mut buf = FlatPopulation::default();
+        for i in 0..chunked.n_chunks() {
+            chunked.read_chunk_into(i, &mut buf)?;
+            agg.fold_flat(&buf);
+        }
+        Ok(agg)
+    }
+
+    /// Number of users folded so far.
+    pub fn n_users(&self) -> usize {
+        self.users.len()
+    }
+
+    /// Aggregate horizon in slots (longest user curve).
+    pub fn horizon(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Per-user usage, in fold order.
+    pub fn users(&self) -> &[UserUsage] {
+        &self.users
+    }
+
+    /// Raw `u64` aggregate curve.
+    pub fn slots(&self) -> &[u64] {
+        &self.slots
+    }
+
+    /// Total instance-slots across the whole fleet.
+    pub fn total_demand(&self) -> u64 {
+        self.users.iter().map(|u| u.demand_slots).sum()
+    }
+
+    /// Peak aggregate demand.
+    pub fn peak(&self) -> u64 {
+        self.slots.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The `u32` curve the online policies replay. Errors if any slot
+    /// exceeds `u32::MAX` (rather than silently truncating a fleet).
+    pub fn curve(&self) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for (t, &d) in self.slots.iter().enumerate() {
+            ensure!(
+                d <= u32::MAX as u64,
+                "aggregate demand {d} at slot {t} exceeds u32::MAX; \
+                 the policy replay cannot represent this fleet"
+            );
+            out.push(d as u32);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(users: &[(u32, &[u32])]) -> FlatPopulation {
+        let mut f = FlatPopulation::default();
+        for &(id, d) in users {
+            f.push_user(id, d);
+        }
+        f
+    }
+
+    #[test]
+    fn folds_ragged_curves_to_the_longest_horizon() {
+        let f = flat(&[(0, &[1, 2, 3]), (1, &[4]), (2, &[0, 5])]);
+        let agg = AggregateDemand::from_flat(&f);
+        assert_eq!(agg.n_users(), 3);
+        assert_eq!(agg.horizon(), 3);
+        assert_eq!(agg.slots(), &[5, 7, 3]);
+        assert_eq!(agg.curve().unwrap(), vec![5, 7, 3]);
+        assert_eq!(agg.total_demand(), 15);
+        assert_eq!(agg.peak(), 7);
+    }
+
+    #[test]
+    fn per_user_usage_is_collected_in_fold_order() {
+        let f = flat(&[(7, &[2, 0, 1]), (9, &[0, 0, 0]), (11, &[3])]);
+        let agg = AggregateDemand::from_flat(&f);
+        assert_eq!(
+            agg.users(),
+            &[
+                UserUsage { user_id: 7, demand_slots: 3, peak: 2 },
+                UserUsage { user_id: 9, demand_slots: 0, peak: 0 },
+                UserUsage { user_id: 11, demand_slots: 3, peak: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn curve_rejects_u32_overflow() {
+        let mut agg = AggregateDemand::new();
+        agg.fold_user(0, &[u32::MAX]);
+        agg.fold_user(1, &[1]);
+        assert_eq!(agg.slots()[0], u32::MAX as u64 + 1);
+        let err = agg.curve().unwrap_err().to_string();
+        assert!(err.contains("u32::MAX"), "{err}");
+    }
+
+    #[test]
+    fn empty_aggregate_is_well_formed() {
+        let agg = AggregateDemand::new();
+        assert_eq!(agg.n_users(), 0);
+        assert_eq!(agg.horizon(), 0);
+        assert_eq!(agg.peak(), 0);
+        assert!(agg.curve().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,335 @@
+//! Shared-portfolio reservation broker: aggregate a fleet's demand, buy
+//! one reservation portfolio for everyone, settle the realized cost back
+//! to users.
+//!
+//! The paper's guarantees (2−α deterministic, e/(e−1+α) randomized) are
+//! per-user; a broker that folds many users' curves into one aggregate
+//! curve and runs the *same* online policies on it exploits statistical
+//! multiplexing — one user's trough absorbs another's burst, so shared
+//! reservations stay utilized where per-user reservations would idle
+//! (the provider-side counterpart is analyzed in arXiv:1611.07379).
+//!
+//! Pipeline ([`BrokerRun`]):
+//!
+//! 1. **Aggregate** ([`aggregate`]) — fold per-user demand streams into
+//!    one `u64` curve plus per-user usage totals. Streaming
+//!    chunk-at-a-time over v2 traces, so 10⁵+-user fleets stay O(one
+//!    chunk) resident; bit-identical to the in-RAM fold.
+//! 2. **Portfolio** ([`portfolio`]) — replay any [`PolicySpec`] over the
+//!    aggregate curve against a single shared [`Ledger`](crate::Ledger),
+//!    recording the per-contract portfolio composition.
+//! 3. **Settle** ([`settlement`]) — split the broker's realized cost into
+//!    per-user bills through a pluggable [`Settlement`] scheme. Σ bills
+//!    reproduces the ledger total **bit-exactly** under plain `f64`
+//!    summation in any order (quantized largest-remainder apportionment —
+//!    see the module docs), and the `od-capped` scheme guarantees no user
+//!    pays more than their standalone all-on-demand cost.
+//!
+//! The outcome carries the "isolated users" baseline alongside: every
+//! user's standalone deterministic cost (the per-user path that
+//! `coordinator::broker` / `examples/broker_service.rs` serve), whose sum
+//! minus the broker's aggregate cost is the **multiplexing gain**. The
+//! offline joint DP on the aggregate curve, when tractable, sandwiches the
+//! broker cost from below. `tests/broker_props.rs` pins all three
+//! invariants across randomized fleets and menus.
+
+pub mod aggregate;
+pub mod portfolio;
+pub mod settlement;
+
+pub use aggregate::{AggregateDemand, UserUsage};
+pub use portfolio::{run_portfolio, ContractUse, PortfolioOutcome};
+pub use settlement::{
+    settlement_from_name, OnDemandCapped, ProportionalUsage, Settlement, SettlementError,
+    SETTLEMENT_NAMES,
+};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::algos::offline::{self, OfflineSolution};
+use crate::pricing::Market;
+use crate::sim::engine::run_fleet_flat;
+use crate::sim::fleet::{PolicySpec, UserResult};
+use crate::trace::io::ChunkedPopulation;
+use crate::trace::FlatPopulation;
+
+/// The standalone per-user baseline every broker run compares against:
+/// windowless `A_β` (the paper's deterministic policy), one instance per
+/// user — "what the fleet would pay without the broker".
+pub const STANDALONE_SPEC: PolicySpec = PolicySpec::Deterministic { z: None, window: 0 };
+
+/// One user's share of the broker outcome.
+#[derive(Debug, Clone)]
+pub struct UserBill {
+    pub user_id: u32,
+    /// What the settlement scheme charges this user.
+    pub amount: f64,
+    /// Total instance-slots the user requested (the proportional weight).
+    pub usage_slots: u64,
+    /// The user's standalone deterministic cost (isolated-users baseline).
+    pub standalone_cost: f64,
+    /// The user's standalone all-on-demand cost `p·usage_slots` (the
+    /// od-capped scheme's ceiling).
+    pub on_demand_cost: f64,
+}
+
+/// Everything a broker run produces.
+#[derive(Debug, Clone)]
+pub struct BrokerOutcome {
+    pub users: usize,
+    /// Aggregate horizon in slots.
+    pub slots: usize,
+    pub policy: String,
+    pub settlement: String,
+    /// The shared portfolio's replay result (the broker's realized cost).
+    pub aggregate: PortfolioOutcome,
+    /// Σ per-user standalone deterministic costs (sequential sum in user
+    /// order — the order the bills conserve in).
+    pub standalone_total: f64,
+    /// Σ per-user all-on-demand costs.
+    pub on_demand_total: f64,
+    /// `standalone_total − aggregate cost`: what multiplexing saved.
+    pub multiplexing_gain: f64,
+    /// Per-user bills, in trace order. Σ amounts == aggregate cost,
+    /// bit-exactly.
+    pub bills: Vec<UserBill>,
+    /// Offline joint DP on the aggregate curve (the sandwich floor), when
+    /// requested and tractable.
+    pub offline: Option<OfflineSolution>,
+}
+
+/// A configured broker run: market + policy + settlement (+ threads for
+/// the standalone baseline sweep, + whether to attempt the offline floor).
+pub struct BrokerRun<'a> {
+    pub market: &'a Market,
+    pub policy: PolicySpec,
+    pub settlement: &'a dyn Settlement,
+    pub threads: usize,
+    pub offline: bool,
+}
+
+impl BrokerRun<'_> {
+    /// Run over an in-RAM columnar population.
+    pub fn run_flat(&self, flat: &FlatPopulation) -> Result<BrokerOutcome> {
+        let agg = AggregateDemand::from_flat(flat);
+        let standalone = run_fleet_flat(flat, self.market, &STANDALONE_SPEC, self.threads);
+        self.finish(agg, standalone.per_user)
+    }
+
+    /// Run streaming over a chunked v2 trace: only one chunk of demand is
+    /// resident at a time; the per-user state kept across the whole run is
+    /// O(users) bills/usage, never the demand itself.
+    pub fn run_chunked(&self, chunked: &mut ChunkedPopulation) -> Result<BrokerOutcome> {
+        let mut agg = AggregateDemand::new();
+        let mut standalone: Vec<UserResult> = Vec::with_capacity(chunked.n_users());
+        let mut buf = FlatPopulation::default();
+        for i in 0..chunked.n_chunks() {
+            chunked
+                .read_chunk_into(i, &mut buf)
+                .with_context(|| format!("reading trace chunk {i}"))?;
+            agg.fold_flat(&buf);
+            let res = run_fleet_flat(&buf, self.market, &STANDALONE_SPEC, self.threads);
+            standalone.extend(res.per_user);
+        }
+        self.finish(agg, standalone)
+    }
+
+    fn finish(
+        &self,
+        agg: AggregateDemand,
+        standalone: Vec<UserResult>,
+    ) -> Result<BrokerOutcome> {
+        ensure!(agg.n_users() > 0, "broker run needs at least one user");
+        ensure!(
+            standalone.len() == agg.n_users(),
+            "standalone baseline covered {} users, aggregate folded {}",
+            standalone.len(),
+            agg.n_users()
+        );
+        // The fleet engine returns results sorted by user id; the usage
+        // vector is in trace order. Requiring ascending ids keeps the two
+        // positionally aligned without a join.
+        for (u, s) in agg.users().iter().zip(&standalone) {
+            ensure!(
+                u.user_id == s.user_id,
+                "broker runs require traces with ascending user ids \
+                 (usage order has user {}, baseline order has {})",
+                u.user_id,
+                s.user_id
+            );
+        }
+
+        let curve = agg.curve()?;
+        let pf = run_portfolio(&curve, self.market, &self.policy)
+            .map_err(|e| anyhow!("aggregate portfolio replay: {e}"))?;
+
+        let p = self.market.p();
+        let standalone_total: f64 = standalone.iter().map(|u| u.absolute_cost).sum();
+        let on_demand_total: f64 =
+            agg.users().iter().map(|u| p * u.demand_slots as f64).sum();
+        let amounts = self.settlement.settle(pf.report.total, agg.users(), p)?;
+
+        let bills = agg
+            .users()
+            .iter()
+            .zip(&standalone)
+            .zip(&amounts)
+            .map(|((u, s), &amount)| UserBill {
+                user_id: u.user_id,
+                amount,
+                usage_slots: u.demand_slots,
+                standalone_cost: s.absolute_cost,
+                on_demand_cost: p * u.demand_slots as f64,
+            })
+            .collect();
+
+        let offline = if self.offline {
+            let terms: Vec<usize> =
+                self.market.contracts().iter().map(|c| c.term).collect();
+            let d_max = curve.iter().copied().max().unwrap_or(0);
+            if offline::dp_joint_tractable(d_max, &terms) {
+                offline::optimal_market_joint(&curve, self.market)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+
+        let multiplexing_gain = standalone_total - pf.report.total;
+        Ok(BrokerOutcome {
+            users: agg.n_users(),
+            slots: agg.horizon(),
+            policy: pf.policy.clone(),
+            settlement: self.settlement.name().to_string(),
+            aggregate: pf,
+            standalone_total,
+            on_demand_total,
+            multiplexing_gain,
+            bills,
+            offline,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pricing::Contract;
+
+    fn menu() -> Market {
+        Market::new(
+            0.08,
+            vec![
+                Contract { upfront: 0.1333, rate: 0.039, term: 4 },
+                Contract { upfront: 0.3, rate: 0.031, term: 12 },
+            ],
+        )
+    }
+
+    /// Phase-shifted bursts: each user busy in its own 12-slot window, so
+    /// the aggregate is constant 1 — maximal multiplexing.
+    fn rotating_fleet(users: usize, burst: usize) -> FlatPopulation {
+        let slots = users * burst;
+        let mut flat = FlatPopulation::default();
+        for u in 0..users {
+            let demand: Vec<u32> =
+                (0..slots).map(|t| u32::from(t / burst == u)).collect();
+            flat.push_user(u as u32, &demand);
+        }
+        flat
+    }
+
+    fn run(flat: &FlatPopulation, settlement: &dyn Settlement) -> BrokerOutcome {
+        BrokerRun {
+            market: &menu(),
+            policy: PolicySpec::Deterministic { z: None, window: 0 },
+            settlement,
+            threads: 2,
+            offline: true,
+        }
+        .run_flat(flat)
+        .unwrap()
+    }
+
+    #[test]
+    fn multiplexing_gain_on_rotating_bursts() {
+        let flat = rotating_fleet(8, 12);
+        let out = run(&flat, &ProportionalUsage);
+        assert_eq!(out.users, 8);
+        assert_eq!(out.slots, 96);
+        // aggregate is constant 1: the broker reserves; isolated users see
+        // only their own 12-slot burst and pay far more in total
+        assert!(out.aggregate.report.reservations >= 1);
+        assert!(
+            out.multiplexing_gain > 0.0,
+            "gain {} (aggregate {} vs standalone {})",
+            out.multiplexing_gain,
+            out.aggregate.report.total,
+            out.standalone_total
+        );
+        // offline floor sandwiches the broker cost
+        let off = out.offline.expect("constant unit curve is joint-DP tractable");
+        assert!(off.cost <= out.aggregate.report.total + 1e-9);
+    }
+
+    #[test]
+    fn bills_conserve_bitwise_and_align_with_users() {
+        let flat = rotating_fleet(8, 12);
+        for s in [&ProportionalUsage as &dyn Settlement, &OnDemandCapped] {
+            let out = run(&flat, s);
+            let total: f64 = out.bills.iter().map(|b| b.amount).sum();
+            assert_eq!(
+                total.to_bits(),
+                out.aggregate.report.total.to_bits(),
+                "{} drifted",
+                s.name()
+            );
+            for (i, b) in out.bills.iter().enumerate() {
+                assert_eq!(b.user_id, i as u32);
+                assert_eq!(b.usage_slots, 12);
+            }
+        }
+    }
+
+    #[test]
+    fn od_capped_bills_stay_under_the_cap() {
+        let flat = rotating_fleet(8, 12);
+        let out = run(&flat, &OnDemandCapped);
+        for b in &out.bills {
+            assert!(b.amount <= b.on_demand_cost, "user {} over cap", b.user_id);
+        }
+    }
+
+    #[test]
+    fn streaming_run_matches_flat_run_bitwise() {
+        let flat = rotating_fleet(6, 9);
+        let pop = crate::trace::Population {
+            users: (0..flat.len())
+                .map(|i| crate::trace::UserTrace::new(flat.user_id(i), flat.demand(i).to_vec()))
+                .collect(),
+        };
+        let dir = std::env::temp_dir().join("cldrsv_broker_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.cld2");
+        crate::trace::io::write_chunked(&pop, &path, 4).unwrap();
+        let mut chunked = ChunkedPopulation::open(&path).unwrap();
+        let market = menu();
+        let run = BrokerRun {
+            market: &market,
+            policy: PolicySpec::Deterministic { z: None, window: 0 },
+            settlement: &ProportionalUsage,
+            threads: 2,
+            offline: false,
+        };
+        let a = run.run_flat(&flat).unwrap();
+        let b = run.run_chunked(&mut chunked).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(a.aggregate.report.total.to_bits(), b.aggregate.report.total.to_bits());
+        assert_eq!(a.standalone_total.to_bits(), b.standalone_total.to_bits());
+        for (x, y) in a.bills.iter().zip(&b.bills) {
+            assert_eq!(x.amount.to_bits(), y.amount.to_bits());
+            assert_eq!(x.standalone_cost.to_bits(), y.standalone_cost.to_bits());
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! The shared reservation portfolio: run one online policy over the
+//! *aggregate* demand curve, billing every slot through a single
+//! [`Ledger`] that owns the broker's whole reservation book.
+//!
+//! The replay loop is bit-identical to
+//! [`run_policy_market`](crate::sim::run_policy_market) (same oracle
+//! future-window slices, same typed decisions, same ledger arithmetic) —
+//! it is unrolled here only to additionally record the *portfolio
+//! composition*: how many reservations of each contract the broker bought
+//! and what it spent on their upfront fees, which the broker report
+//! surfaces per contract label.
+
+use crate::ledger::{CostReport, Ledger, LedgerError};
+use crate::pricing::Market;
+use crate::sim::fleet::PolicySpec;
+
+/// How much of the portfolio one contract accounts for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContractUse {
+    pub label: String,
+    pub reservations: u64,
+    pub upfront_spend: f64,
+}
+
+/// Outcome of running one policy on the aggregate curve against the shared
+/// ledger.
+#[derive(Debug, Clone)]
+pub struct PortfolioOutcome {
+    /// Display name of the policy that drove the portfolio.
+    pub policy: String,
+    /// The shared ledger's cost report (the broker's realized cost).
+    pub report: CostReport,
+    /// Purchases broken down by contract, in menu order.
+    pub per_contract: Vec<ContractUse>,
+}
+
+/// Replay `spec` over the aggregate `curve`, billing through one shared
+/// [`Ledger`]. Window policies see oracle futures borrowed from the curve
+/// (Sec. VI semantics, exactly as the per-user runners do). Randomized
+/// policies draw from the spec seed itself (broker user id 0).
+pub fn run_portfolio(
+    curve: &[u32],
+    market: &Market,
+    spec: &PolicySpec,
+) -> Result<PortfolioOutcome, LedgerError> {
+    let mut policy = spec.build(market, 0);
+    let w = policy.window();
+    let mut ledger = Ledger::new(market.clone());
+    let mut reservations = vec![0u64; market.len()];
+    let mut upfront = vec![0f64; market.len()];
+    for (t, &d) in curve.iter().enumerate() {
+        let fut: &[u32] = if w == 0 {
+            &[]
+        } else {
+            let hi = (t + 1 + w).min(curve.len());
+            &curve[(t + 1).min(hi)..hi]
+        };
+        let dec = policy.decide(d, fut);
+        ledger.bill(d, &dec)?;
+        for &(cid, n) in dec.reservations {
+            reservations[cid] += n as u64;
+            upfront[cid] += n as f64 * market.contract(cid).upfront;
+        }
+    }
+    let per_contract = (0..market.len())
+        .map(|cid| ContractUse {
+            label: market.label(cid).to_string(),
+            reservations: reservations[cid],
+            upfront_spend: upfront[cid],
+        })
+        .collect();
+    Ok(PortfolioOutcome { policy: spec.name(), report: ledger.report(), per_contract })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pricing::{Contract, Pricing};
+    use crate::sim::run_policy_market;
+
+    fn menu() -> Market {
+        Market::new(
+            0.08,
+            vec![
+                Contract { upfront: 0.1333, rate: 0.039, term: 4 },
+                Contract { upfront: 0.3, rate: 0.031, term: 12 },
+            ],
+        )
+    }
+
+    fn curve() -> Vec<u32> {
+        (0..240).map(|t| 1 + ((t / 17) % 3) as u32).collect()
+    }
+
+    #[test]
+    fn matches_run_policy_market_bitwise() {
+        let m = menu();
+        let c = curve();
+        for spec in [
+            PolicySpec::AllOnDemand,
+            PolicySpec::Deterministic { z: None, window: 0 },
+            PolicySpec::Deterministic { z: None, window: 3 },
+            PolicySpec::Randomized { window: 0, seed: 42 },
+        ] {
+            let pf = run_portfolio(&c, &m, &spec).unwrap();
+            let mut p = spec.build(&m, 0);
+            let reference = run_policy_market(p.as_mut(), &c, &m).unwrap();
+            assert_eq!(pf.report.total.to_bits(), reference.total.to_bits(), "{}", spec.name());
+            assert_eq!(pf.report, reference);
+        }
+    }
+
+    #[test]
+    fn per_contract_composition_sums_to_the_report() {
+        let m = menu();
+        let pf =
+            run_portfolio(&curve(), &m, &PolicySpec::Deterministic { z: None, window: 0 }).unwrap();
+        let total_res: u64 = pf.per_contract.iter().map(|c| c.reservations).sum();
+        assert_eq!(total_res, pf.report.reservations);
+        let total_fees: f64 = pf.per_contract.iter().map(|c| c.upfront_spend).sum();
+        assert!((total_fees - pf.report.reservation_fees).abs() < 1e-9);
+        assert_eq!(pf.per_contract.len(), 2);
+        assert!(total_res >= 1, "a stable curve must trigger reservations");
+    }
+
+    #[test]
+    fn single_contract_markets_run_the_classic_policies() {
+        let m = Market::single(Pricing::normalized(0.1, 0.5, 10));
+        let c: Vec<u32> = vec![2; 60];
+        let pf = run_portfolio(&c, &m, &PolicySpec::Deterministic { z: None, window: 0 }).unwrap();
+        assert!(pf.report.reservations >= 1);
+        assert_eq!(pf.per_contract.len(), 1);
+    }
+}

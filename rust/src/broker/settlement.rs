@@ -1,0 +1,363 @@
+//! Settlement: split the broker's realized portfolio cost back into
+//! per-user bills, conserving the total **bit-exactly**.
+//!
+//! Floating-point proportional splits cannot promise `Σ bills == total` to
+//! the last bit, so the schemes here never divide money in `f64`. Instead
+//! the total is decomposed as `total = m · q` with `m ≤ 2^53` the exact
+//! integer mantissa and `q` a power of two (the *quantum*); the `m` quanta
+//! are apportioned among users by the largest-remainder method in exact
+//! `u128` integer arithmetic over integer usage weights, and user `i`'s
+//! bill is `units_i · q`. Every bill and every partial sum of bills is an
+//! integer `≤ 2^53` times the same power of two — exactly representable —
+//! so plain sequential `f64` summation of the bills, **in any order**,
+//! reproduces `total` bit-for-bit. `tests/broker_props.rs` pins this.
+//!
+//! Two schemes ship (the [`Settlement`] trait is open for more):
+//!
+//! * [`ProportionalUsage`] — quanta proportional to each user's total
+//!   instance-slots.
+//! * [`OnDemandCapped`] — the marginal-cost-style scheme: proportional,
+//!   but no user pays more than their standalone all-on-demand cost
+//!   `p·Σd_t`; surplus quanta water-fill over the uncapped users. If the
+//!   broker somehow realizes more than the sum of caps (no settlement can
+//!   respect the caps), it fails loudly instead of silently violating them.
+
+use super::aggregate::UserUsage;
+use crate::util::cli::expected_one_of;
+
+/// Errors surfaced by settlement (Display/Error hand-written — `thiserror`
+/// is not in the offline vendor set).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SettlementError {
+    /// The broker total is not a finite non-negative amount.
+    BadTotal { total: f64 },
+    /// The caps cannot absorb the broker total (od-capped scheme).
+    TotalExceedsCaps { total: f64, cap_total: f64 },
+}
+
+impl std::fmt::Display for SettlementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            SettlementError::BadTotal { total } => {
+                write!(f, "settlement: broker total {total} is not a finite non-negative cost")
+            }
+            SettlementError::TotalExceedsCaps { total, cap_total } => write!(
+                f,
+                "settlement: broker total {total} exceeds the sum of on-demand caps \
+                 {cap_total}; no cap-respecting settlement exists"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SettlementError {}
+
+/// A pluggable settlement scheme: split the broker's realized `total`
+/// across the users whose usage built the aggregate curve. Returns one
+/// bill per user, aligned with `usage`; implementations must conserve the
+/// total bit-exactly under plain `f64` summation (see the module docs for
+/// the quantization recipe that makes this possible).
+pub trait Settlement: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `p` is the market's on-demand rate (used by cap schemes for the
+    /// standalone all-on-demand cost `p·demand_slots`).
+    fn settle(
+        &self,
+        total: f64,
+        usage: &[UserUsage],
+        p: f64,
+    ) -> Result<Vec<f64>, SettlementError>;
+}
+
+/// Valid scheme names for [`settlement_from_name`] (and CLI error text).
+pub const SETTLEMENT_NAMES: &[&str] = &["proportional", "od-capped"];
+
+/// Look up a settlement scheme by its spec/CLI name.
+pub fn settlement_from_name(name: &str) -> anyhow::Result<Box<dyn Settlement>> {
+    match name {
+        "proportional" => Ok(Box::new(ProportionalUsage)),
+        "od-capped" => Ok(Box::new(OnDemandCapped)),
+        other => Err(anyhow::anyhow!(expected_one_of("settlement", other, SETTLEMENT_NAMES))),
+    }
+}
+
+/// Decompose a positive finite `total` into `(m, q)` with `m ≤ 2^53` an
+/// integer, `q` a power of two, and `total == m as f64 * q` exactly. Both
+/// the mantissa extraction and the division are exact IEEE operations.
+fn quantum(total: f64) -> (u64, f64) {
+    debug_assert!(total > 0.0 && total.is_finite());
+    let bits = total.to_bits();
+    let exp = (bits >> 52) & 0x7ff;
+    let frac = bits & ((1u64 << 52) - 1);
+    let m = if exp == 0 { frac } else { frac | (1u64 << 52) };
+    // m is exactly representable (≤ 2^53) and total / m is a power of two,
+    // so the quotient is exact.
+    (m, total / m as f64)
+}
+
+/// Hamilton / largest-remainder apportionment of `m` quanta over integer
+/// `weights`, in exact `u128` arithmetic. `Σ result == m` whenever
+/// `Σ weights > 0`; ties go to the lower index (deterministic).
+fn apportion(m: u64, weights: &[u128]) -> Vec<u64> {
+    let w_total: u128 = weights.iter().sum();
+    let mut units = vec![0u64; weights.len()];
+    if m == 0 || w_total == 0 {
+        return units;
+    }
+    let mut assigned = 0u64;
+    let mut rema: Vec<(u128, usize)> = Vec::with_capacity(weights.len());
+    for (i, &w) in weights.iter().enumerate() {
+        // m ≤ 2^53 and w ≤ 2^64, so the product fits u128 with headroom.
+        let prod = m as u128 * w;
+        let floor = (prod / w_total) as u64;
+        units[i] = floor;
+        assigned += floor;
+        rema.push((prod % w_total, i));
+    }
+    let leftover = (m - assigned) as usize;
+    rema.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, i) in rema.iter().take(leftover) {
+        units[i] += 1;
+    }
+    units
+}
+
+/// Turn per-user quantum counts into bills. Each bill (and any partial sum
+/// of bills) is an integer ≤ 2^53 times the power-of-two quantum `q`, so
+/// every `f64` operation here and in downstream summation is exact.
+fn bills_from_units(units: &[u64], q: f64) -> Vec<f64> {
+    units.iter().map(|&u| u as f64 * q).collect()
+}
+
+/// Shared entry guard: zero totals settle to all-zero bills; negative or
+/// non-finite totals are rejected.
+fn check_total(total: f64, n: usize) -> Result<Option<Vec<f64>>, SettlementError> {
+    if !total.is_finite() || total < 0.0 {
+        return Err(SettlementError::BadTotal { total });
+    }
+    if total == 0.0 {
+        return Ok(Some(vec![0.0; n]));
+    }
+    Ok(None)
+}
+
+/// Proportional-to-usage settlement: quanta ∝ total instance-slots. Users
+/// with zero usage pay nothing (unless *every* user has zero usage, in
+/// which case the cost is split evenly — a degenerate fleet should still
+/// conserve).
+pub struct ProportionalUsage;
+
+impl Settlement for ProportionalUsage {
+    fn name(&self) -> &'static str {
+        "proportional"
+    }
+
+    fn settle(
+        &self,
+        total: f64,
+        usage: &[UserUsage],
+        _p: f64,
+    ) -> Result<Vec<f64>, SettlementError> {
+        if let Some(zeros) = check_total(total, usage.len())? {
+            return Ok(zeros);
+        }
+        let (m, q) = quantum(total);
+        let mut weights: Vec<u128> = usage.iter().map(|u| u.demand_slots as u128).collect();
+        if weights.iter().all(|&w| w == 0) {
+            weights.iter_mut().for_each(|w| *w = 1);
+        }
+        Ok(bills_from_units(&apportion(m, &weights), q))
+    }
+}
+
+/// Proportional settlement capped at each user's standalone all-on-demand
+/// cost `p·demand_slots`: surplus quanta from capped users water-fill over
+/// the remaining users (still usage-proportional) until everything is
+/// placed. Guarantees `bill_i ≤ p·d_i` *exactly* (each cap is
+/// `⌊od_i / q⌋` quanta, and `q`-divisions are exact), on top of the
+/// bit-exact conservation shared by all schemes.
+pub struct OnDemandCapped;
+
+impl Settlement for OnDemandCapped {
+    fn name(&self) -> &'static str {
+        "od-capped"
+    }
+
+    fn settle(
+        &self,
+        total: f64,
+        usage: &[UserUsage],
+        p: f64,
+    ) -> Result<Vec<f64>, SettlementError> {
+        if let Some(zeros) = check_total(total, usage.len())? {
+            return Ok(zeros);
+        }
+        let (m, q) = quantum(total);
+        let n = usage.len();
+        let weights: Vec<u128> = usage.iter().map(|u| u.demand_slots as u128).collect();
+        // Cap in quanta: ⌊(p·d_i) / q⌋. The division by a power of two is
+        // exact, so the floor never rounds a cap-respecting bill away.
+        let caps: Vec<u64> = usage
+            .iter()
+            .map(|u| {
+                let od = p * u.demand_slots as f64;
+                let c = (od / q).floor();
+                if c >= u64::MAX as f64 {
+                    u64::MAX
+                } else {
+                    c as u64
+                }
+            })
+            .collect();
+        let cap_total: u128 = caps.iter().map(|&c| c as u128).sum();
+        if (m as u128) > cap_total {
+            let cap_sum: f64 = usage.iter().map(|u| p * u.demand_slots as f64).sum();
+            return Err(SettlementError::TotalExceedsCaps { total, cap_total: cap_sum });
+        }
+
+        // Water-fill: fix violators at their caps, re-apportion the rest
+        // over the uncapped set. Each round either finishes or caps at
+        // least one more user, so it terminates in ≤ n rounds.
+        let mut units = vec![0u64; n];
+        let mut capped = vec![false; n];
+        let mut remaining = m;
+        loop {
+            if remaining == 0 {
+                break;
+            }
+            let mut ws = vec![0u128; n];
+            let mut any_weight = false;
+            for i in 0..n {
+                if !capped[i] {
+                    ws[i] = weights[i];
+                    any_weight |= weights[i] > 0;
+                }
+            }
+            if !any_weight {
+                // only zero-usage users left uncapped: spread by headroom
+                for i in 0..n {
+                    if !capped[i] {
+                        ws[i] = (caps[i] - units[i]) as u128;
+                    }
+                }
+            }
+            let share = apportion(remaining, &ws);
+            let mut violated = false;
+            for i in 0..n {
+                if !capped[i] && share[i] > caps[i] {
+                    units[i] = caps[i];
+                    capped[i] = true;
+                    remaining -= caps[i];
+                    violated = true;
+                }
+            }
+            if !violated {
+                for i in 0..n {
+                    if !capped[i] {
+                        units[i] = share[i];
+                    }
+                }
+                break;
+            }
+        }
+        Ok(bills_from_units(&units, q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn usage(slots: &[u64]) -> Vec<UserUsage> {
+        slots
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| UserUsage { user_id: i as u32, demand_slots: d, peak: 1 })
+            .collect()
+    }
+
+    fn assert_conserves(bills: &[f64], total: f64) {
+        let fwd: f64 = bills.iter().sum();
+        let rev: f64 = bills.iter().rev().sum();
+        assert_eq!(fwd.to_bits(), total.to_bits(), "forward sum drifted");
+        assert_eq!(rev.to_bits(), total.to_bits(), "reverse sum drifted");
+    }
+
+    #[test]
+    fn quantum_reconstructs_exactly() {
+        for &t in &[0.1, 1.0, 3.5, 1e-12, 7.25e9, 0.08 * 41_760.0] {
+            let (m, q) = quantum(t);
+            assert!(m <= 1u64 << 53);
+            assert_eq!((m as f64 * q).to_bits(), t.to_bits(), "total {t}");
+        }
+    }
+
+    #[test]
+    fn apportion_is_exact_and_deterministic() {
+        let units = apportion(10, &[1, 1, 1]);
+        assert_eq!(units.iter().sum::<u64>(), 10);
+        // 10/3 → floors 3,3,3; equal remainders, leftover goes to index 0
+        assert_eq!(units, vec![4, 3, 3]);
+        assert_eq!(apportion(0, &[5, 5]), vec![0, 0]);
+        assert_eq!(apportion(7, &[0, 0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn proportional_conserves_bitwise() {
+        let u = usage(&[100, 33, 0, 67]);
+        let total = 12.3456789;
+        let bills = ProportionalUsage.settle(total, &u, 0.1).unwrap();
+        assert_conserves(&bills, total);
+        assert_eq!(bills[2], 0.0, "zero-usage user pays nothing");
+        assert!(bills[0] > bills[1]);
+    }
+
+    #[test]
+    fn proportional_zero_total_and_zero_usage() {
+        let u = usage(&[0, 0]);
+        assert_eq!(ProportionalUsage.settle(0.0, &u, 0.1).unwrap(), vec![0.0, 0.0]);
+        // all-zero usage with positive total still conserves (even split)
+        let bills = ProportionalUsage.settle(1.0, &u, 0.1).unwrap();
+        assert_conserves(&bills, 1.0);
+    }
+
+    #[test]
+    fn od_capped_respects_caps_exactly() {
+        // user 0 dominates usage but its cap binds; user 1 absorbs surplus
+        let u = usage(&[10, 1000]);
+        let p = 0.01;
+        let total = 5.0; // user 0's cap: 0.1
+        let bills = OnDemandCapped.settle(total, &u, p).unwrap();
+        assert_conserves(&bills, total);
+        for (b, uu) in bills.iter().zip(&u) {
+            assert!(*b <= p * uu.demand_slots as f64, "bill {b} above cap");
+        }
+    }
+
+    #[test]
+    fn od_capped_rejects_infeasible_totals() {
+        let u = usage(&[1, 1]);
+        let err = OnDemandCapped.settle(10.0, &u, 0.1).unwrap_err();
+        assert!(matches!(err, SettlementError::TotalExceedsCaps { .. }), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_finite_totals() {
+        let u = usage(&[1]);
+        for bad in [f64::NAN, f64::INFINITY, -1.0] {
+            assert!(matches!(
+                ProportionalUsage.settle(bad, &u, 0.1),
+                Err(SettlementError::BadTotal { .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn from_name_lists_valid_names_on_error() {
+        assert_eq!(settlement_from_name("proportional").unwrap().name(), "proportional");
+        assert_eq!(settlement_from_name("od-capped").unwrap().name(), "od-capped");
+        let err = settlement_from_name("magic").unwrap_err().to_string();
+        assert!(err.contains("proportional") && err.contains("od-capped"), "{err}");
+    }
+}

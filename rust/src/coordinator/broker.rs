@@ -1,5 +1,13 @@
 //! The brokerage service: sharded worker threads running per-user policy
 //! state machines with billing, fed by a streaming demand API.
+//!
+//! Every user here is **isolated**: each session owns its own policy and
+//! its own [`Ledger`], so the fleet's cost is exactly the sum of per-user
+//! standalone costs. That makes this the "no multiplexing" baseline for
+//! the shared-portfolio broker in [`crate::broker`], which instead folds
+//! the fleet into one aggregate demand curve, buys a single shared
+//! reservation portfolio, and settles the (typically smaller) realized
+//! cost back to users bit-exactly.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};

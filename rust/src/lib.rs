@@ -18,6 +18,12 @@
 //! (Offline builds link a stub `xla` backend — see `rust/vendor/xla` — and
 //! degrade to the pure-Rust paths.)
 //!
+//! The [`broker`] module is the shared-portfolio layer on top: it folds a
+//! fleet's demand into one aggregate curve, buys a single reservation
+//! portfolio with the same online policies, and settles the realized cost
+//! back to users bit-exactly (the multiplexing counterpart to the
+//! per-user [`coordinator`] path).
+//!
 //! The evaluation hot path is the batched fleet engine ([`sim::engine`]):
 //! zero allocation per slot, monomorphic policy dispatch, columnar trace
 //! storage ([`trace::FlatPopulation`]). Its measured baseline and the
@@ -26,6 +32,7 @@
 
 pub mod algos;
 pub mod analysis;
+pub mod broker;
 pub mod coordinator;
 pub mod forecast;
 pub mod ledger;

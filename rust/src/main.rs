@@ -13,6 +13,11 @@
 //! * `scenario`      — run a declarative JSON scenario (market menu +
 //!                     trace source + policy set) through the engine and
 //!                     emit a comparable normalized-cost report.
+//! * `broker`        — run a shared-portfolio broker scenario
+//!                     (`"mode": "broker"`): fold the fleet into one
+//!                     aggregate demand curve, buy a single reservation
+//!                     portfolio with an online policy, and settle the
+//!                     realized cost back into per-user bills.
 //! * `fleet`         — stream one policy over a chunked trace with
 //!                     crash-recovery: periodic checkpoints, `--resume`,
 //!                     corrupt-chunk quarantine, and deterministic fault
@@ -30,10 +35,10 @@ use cloudreserve::coordinator::{AnalyticsEngine, Broker, BrokerConfig, DemandEve
 use cloudreserve::pricing::catalog::{ec2_small_compressed, render_table1};
 use cloudreserve::pricing::{Market, Pricing};
 use cloudreserve::sim::fleet::run_benchmark_suite;
-use cloudreserve::sim::scenario::{self, ScenarioSpec};
+use cloudreserve::sim::scenario::{self, ParsedScenario};
 use cloudreserve::trace::synth::{generate, SynthConfig};
 use cloudreserve::trace::{io as trace_io, Population};
-use cloudreserve::util::cli::Args;
+use cloudreserve::util::cli::{expected_one_of, Args};
 
 fn main() {
     let args = Args::from_env();
@@ -45,11 +50,12 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("offline") => cmd_offline(&args),
         Some("scenario") => cmd_scenario(&args),
+        Some("broker") => cmd_broker(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline|scenario|fleet|bench> [--options]\n\
+                "usage: cloudreserve <pricing-table|gen-traces|classify|simulate|serve|offline|scenario|broker|fleet|bench> [--options]\n\
                  \n\
                  gen-traces --users N --slots N --seed S --out FILE [--csv] [--chunk-users N] [--plot-user U]\n\
                  classify   [--traces FILE | --users N --slots N --seed S]\n\
@@ -57,6 +63,7 @@ fn main() {
                  serve      --users N --slots N --shards N --tick N [--artifacts DIR]\n\
                  offline    --tau N --p F --alpha F d1 d2 d3 ...\n\
                  scenario   --spec FILE [--threads N] [--json-out FILE]\n\
+                 broker     --spec FILE [--threads N] [--json-out FILE] [--settlement proportional|od-capped]\n\
                  fleet      --trace FILE [--market single|menu2] [--policy NAME --window N --policy-seed S]\n\
                  fleet      [--threads N] [--checkpoint FILE --checkpoint-every N] [--resume [FILE]]\n\
                  fleet      [--on-corrupt fail|skip --read-retries N] [--report FILE]\n\
@@ -310,7 +317,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
                 cloudreserve::pricing::Contract { upfront: 1.5, rate: 0.002, term: 1800 },
             ],
         ),
-        other => anyhow::bail!("unknown --market '{other}' (expected single|menu2)"),
+        other => anyhow::bail!(expected_one_of("--market", other, &["single", "menu2"])),
     };
 
     let window = args.usize_or("window", 0);
@@ -322,10 +329,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "separate" => PolicySpec::Separate,
         "deterministic" => PolicySpec::Deterministic { z: None, window },
         "randomized" => PolicySpec::Randomized { window, seed: policy_seed },
-        other => anyhow::bail!(
-            "unknown --policy '{other}' \
-             (expected all-on-demand|all-reserved|separate|deterministic|randomized)"
-        ),
+        other => anyhow::bail!(expected_one_of("--policy", other, scenario::POLICY_NAMES)),
     };
 
     let threads = args.usize_or(
@@ -347,7 +351,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let on_corrupt = match args.str_or("on-corrupt", "fail").as_str() {
         "fail" => OnCorrupt::Fail,
         "skip" => OnCorrupt::Skip,
-        other => anyhow::bail!("unknown --on-corrupt '{other}' (expected fail|skip)"),
+        other => anyhow::bail!(expected_one_of("--on-corrupt", other, &["fail", "skip"])),
     };
 
     let mut plan = FaultPlan::new();
@@ -489,8 +493,11 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 /// the speedup; (b) offline-DP solve times over a (D, τ) grid, plus the
 /// joint multi-contract DP over a (D, terms) grid; (c) per-policy decide
 /// latency and the flat hot-path kernel timings (`kernels`: WindowScan,
-/// ledger billing, menu sweep). Writes everything to `--out` (default
-/// `BENCH.json`) so every future PR has a trajectory to beat.
+/// ledger billing, menu sweep); (d) optionally the fleet-scale streaming
+/// grid (`--fleet-scale`); (e) the shared-portfolio broker pipeline
+/// (aggregate fold + settlement) at 10^3..10^5 users. Writes everything to
+/// `--out` (default `BENCH.json`) so every future PR has a trajectory to
+/// beat.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use cloudreserve::sim::engine::{run_fleet_flat, FleetPolicy};
     use cloudreserve::sim::fleet::{run_fleet_reference, suite_specs};
@@ -906,6 +913,82 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         Json::Null
     };
 
+    // (e) broker aggregate pipeline: stream-generate a chunked trace, then
+    // run the shared-portfolio broker over it end to end — chunked
+    // aggregate fold + standalone baseline sweep + portfolio replay +
+    // proportional settlement — recording aggregate user-slots/s per fleet
+    // size. Every cell re-checks the settlement conservation invariant
+    // (Σ bills bit-equals the portfolio total), so a perf run can never
+    // quietly record a broker that leaks cost.
+    eprintln!("bench: broker aggregate pipeline...");
+    let broker_json = {
+        use cloudreserve::broker::{BrokerRun, ProportionalUsage, STANDALONE_SPEC};
+        use cloudreserve::trace::io::ChunkedPopulation;
+        use cloudreserve::trace::synth::generate_chunked;
+
+        let chunk_users = args.usize_or("chunk-users", 4096) as u32;
+        anyhow::ensure!(chunk_users > 0, "--chunk-users must be positive");
+        let broker_slots = 3 * cloudreserve::trace::SLOTS_PER_DAY;
+        let grid: &[usize] = if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+        let broker_market = Market::single(ec2_small_compressed());
+        let settlement = ProportionalUsage;
+        let tmp_dir = std::env::temp_dir();
+        let hex = |v: f64| Json::Str(format!("{:#018x}", v.to_bits()));
+        let mut rows = Vec::new();
+        for &n in grid {
+            eprintln!("bench: broker {n} users x {broker_slots} slots (chunks of {chunk_users})...");
+            let path = tmp_dir.join(format!("cloudreserve_broker_{n}_{seed}.bin"));
+            let _scratch = TempFile(path.clone());
+            let cfg = SynthConfig { users: n, slots: broker_slots, seed, ..Default::default() };
+            let t0 = Instant::now();
+            generate_chunked(&cfg, &path, chunk_users)?;
+            let gen_wall_s = t0.elapsed().as_secs_f64();
+
+            let mut chunked = ChunkedPopulation::open(&path)?;
+            let cell_user_slots = chunked.total_slots() as f64;
+            let t0 = Instant::now();
+            let outcome = BrokerRun {
+                market: &broker_market,
+                policy: STANDALONE_SPEC,
+                settlement: &settlement,
+                threads,
+                offline: false,
+            }
+            .run_chunked(&mut chunked)?;
+            let pipeline_wall_s = t0.elapsed().as_secs_f64();
+            let bills_total: f64 = outcome.bills.iter().map(|b| b.amount).sum();
+            let bills_conserve =
+                bills_total.to_bits() == outcome.aggregate.report.total.to_bits();
+            anyhow::ensure!(
+                bills_conserve,
+                "broker bench: settlement failed to conserve cost at {n} users"
+            );
+            println!(
+                "broker    {n:>9} users  {:>9.3}s gen {:>9.3}s pipeline {:>10.2} M user-slots/s  gain {:.2}",
+                gen_wall_s,
+                pipeline_wall_s,
+                cell_user_slots / pipeline_wall_s / 1e6,
+                outcome.multiplexing_gain,
+            );
+            rows.push(Json::obj(vec![
+                ("users", Json::Num(n as f64)),
+                ("slots", Json::Num(broker_slots as f64)),
+                ("chunk_users", Json::Num(chunk_users as f64)),
+                ("policy", Json::Str(outcome.policy.clone())),
+                ("settlement", Json::Str(outcome.settlement.clone())),
+                ("gen_wall_s", Json::Num(gen_wall_s)),
+                ("pipeline_wall_s", Json::Num(pipeline_wall_s)),
+                ("user_slots_per_s", Json::Num(cell_user_slots / pipeline_wall_s)),
+                ("aggregate_cost", Json::Num(outcome.aggregate.report.total)),
+                ("aggregate_cost_bits", hex(outcome.aggregate.report.total)),
+                ("standalone_total", Json::Num(outcome.standalone_total)),
+                ("multiplexing_gain", Json::Num(outcome.multiplexing_gain)),
+                ("bills_conserve", Json::Bool(bills_conserve)),
+            ]));
+        }
+        Json::Arr(rows)
+    };
+
     let created_unix = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
@@ -946,33 +1029,84 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("decide_ns", Json::Arr(decide_rows)),
         ("kernels", kernels_json),
         ("fleet_scale", fleet_json),
+        ("broker", broker_json),
     ]);
     std::fs::write(&out, doc.dump_pretty())?;
     println!("wrote {out}");
     Ok(())
 }
 
-/// `scenario`: load a declarative JSON spec (market menu, trace source,
-/// policy set — see `sim::scenario` for the schema), run it through the
-/// batched engine, print the normalized-cost report, and optionally write
-/// the machine-readable `cloudreserve-scenario/v2` JSON.
-fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+/// Load and parse the `--spec FILE` JSON document into either scenario
+/// mode (`scenario` and `broker` share this, so a broker-mode spec handed
+/// to `scenario` still runs correctly, and vice versa gets a clear error).
+fn load_scenario(args: &Args) -> anyhow::Result<ParsedScenario> {
     let path = args
         .get("spec")
-        .ok_or_else(|| anyhow::anyhow!("scenario requires --spec FILE (a JSON scenario spec)"))?;
+        .ok_or_else(|| anyhow::anyhow!("requires --spec FILE (a JSON scenario spec)"))?;
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading spec {path}: {e}"))?;
     let doc = cloudreserve::util::json::parse(&text)
         .map_err(|e| anyhow::anyhow!("parsing spec {path}: {e}"))?;
-    let spec = ScenarioSpec::from_json(&doc)?;
+    scenario::parse_scenario(&doc)
+}
+
+fn threads_from(args: &Args) -> usize {
+    args.usize_or("threads", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+/// `scenario`: load a declarative JSON spec (market menu, trace source,
+/// policy set — see `sim::scenario` for the schema), run it through the
+/// batched engine, print the normalized-cost report, and optionally write
+/// the machine-readable `cloudreserve-scenario/v2` JSON. Broker-mode specs
+/// are dispatched to the broker runner.
+fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+    match load_scenario(args)? {
+        ParsedScenario::Policies(spec) => {
+            if let Some(d) = &spec.description {
+                eprintln!("{}: {d}", spec.name);
+            }
+            let report = scenario::run(&spec, threads_from(args))?;
+            print!("{}", report.render());
+            if let Some(out) = args.get("json-out") {
+                std::fs::write(out, report.to_json().dump_pretty())?;
+                eprintln!("wrote {out}");
+            }
+            Ok(())
+        }
+        ParsedScenario::Broker(spec) => run_broker_spec(args, spec),
+    }
+}
+
+/// `broker`: run a `"mode": "broker"` spec — aggregate the fleet's demand,
+/// buy one shared reservation portfolio with the configured online policy,
+/// settle the realized cost into per-user bills, and report the
+/// multiplexing gain over the isolated-users baseline
+/// (`cloudreserve-broker/v1` JSON via `--json-out`).
+fn cmd_broker(args: &Args) -> anyhow::Result<()> {
+    match load_scenario(args)? {
+        ParsedScenario::Broker(spec) => run_broker_spec(args, spec),
+        ParsedScenario::Policies(spec) => anyhow::bail!(
+            "spec '{}' is a policies-mode scenario; `broker` needs `\"mode\": \"broker\"` \
+             (run this one with `scenario --spec ...`)",
+            spec.name
+        ),
+    }
+}
+
+fn run_broker_spec(
+    args: &Args,
+    mut spec: cloudreserve::sim::scenario::BrokerScenarioSpec,
+) -> anyhow::Result<()> {
+    if let Some(s) = args.get("settlement") {
+        // Validate the override up front so a typo fails with the name
+        // list instead of after the (possibly long) aggregate run.
+        cloudreserve::broker::settlement_from_name(s)?;
+        spec.settlement = s.to_string();
+    }
     if let Some(d) = &spec.description {
         eprintln!("{}: {d}", spec.name);
     }
-    let threads = args.usize_or(
-        "threads",
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-    );
-    let report = scenario::run(&spec, threads)?;
+    let report = scenario::run_broker(&spec, threads_from(args))?;
     print!("{}", report.render());
     if let Some(out) = args.get("json-out") {
         std::fs::write(out, report.to_json().dump_pretty())?;

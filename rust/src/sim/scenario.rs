@@ -50,15 +50,49 @@
 //! `cloudreserve-scenario/v2` JSON ([`ScenarioReport::to_json`]) for CI
 //! trajectory tracking (v2 adds `offline.joint`, `offline.restricted_cost`
 //! and `deterministic_window_ratio` to v1).
+//!
+//! # Broker mode (`"mode": "broker"`)
+//!
+//! The same `market` + `trace` sections, but instead of a `policies` list
+//! a single `broker` object selects the policy that buys the *shared*
+//! reservation portfolio over the fleet's aggregate demand and the
+//! settlement scheme that splits the realized cost back to users
+//! ([`crate::broker`]):
+//!
+//! ```json
+//! {
+//!   "name": "broker-rotating-bursts",
+//!   "mode": "broker",
+//!   "market": { "...": "as above" },
+//!   "trace": { "...": "as above" },
+//!   "broker": {"policy": "deterministic", "window": 0,
+//!              "settlement": "proportional"},
+//!   "offline": true
+//! }
+//! ```
+//!
+//! `broker.settlement` is `"proportional"` or `"od-capped"`; `offline`
+//! solves the joint DP on the *aggregate* curve when tractable (the
+//! sandwich floor under the broker's cost). Reports serialize as
+//! `cloudreserve-broker/v1` ([`BrokerReport::to_json`]): aggregate cost,
+//! Σ standalone deterministic costs, the multiplexing gain, and the
+//! per-user bill vector — bit-exact fields carry `*_bits` hex-f64 twins.
+//! [`parse_scenario`] dispatches a spec document to its mode.
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::algos::offline;
+use crate::broker::{settlement_from_name, BrokerOutcome, BrokerRun};
 use crate::pricing::{Contract, Market};
 use crate::sim::engine::run_fleet_flat;
 use crate::sim::fleet::{FleetResult, PolicySpec};
 use crate::trace::{FlatPopulation, Population, UserTrace};
+use crate::util::cli::expected_one_of;
 use crate::util::json::Json;
+
+/// Valid policy names for spec/CLI parsing (and their error text).
+pub const POLICY_NAMES: &[&str] =
+    &["all-on-demand", "all-reserved", "separate", "deterministic", "randomized"];
 
 /// Where the demand trace comes from.
 #[derive(Debug, Clone, PartialEq)]
@@ -108,6 +142,166 @@ impl TraceSpec {
     }
 }
 
+/// Parse and validate `doc.market` into a pruned [`Market`]; returns how
+/// many contracts dominance pruning removed. Shared by both scenario
+/// modes.
+fn parse_market(doc: &Json) -> Result<(Market, usize)> {
+    let mj = doc.get("market");
+    let p = mj
+        .get("on_demand")
+        .as_f64()
+        .ok_or_else(|| anyhow!("market: missing number 'on_demand'"))?;
+    ensure!(p > 0.0, "market.on_demand must be positive");
+    let cj = mj
+        .get("contracts")
+        .as_arr()
+        .ok_or_else(|| anyhow!("market: missing array 'contracts'"))?;
+    let mut entries = Vec::with_capacity(cj.len());
+    for (i, c) in cj.iter().enumerate() {
+        let label = c
+            .get("label")
+            .as_str()
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("c{i}"));
+        let upfront = c
+            .get("upfront")
+            .as_f64()
+            .ok_or_else(|| anyhow!("contract '{label}': missing number 'upfront'"))?;
+        let rate = c
+            .get("rate")
+            .as_f64()
+            .ok_or_else(|| anyhow!("contract '{label}': missing number 'rate'"))?;
+        let term = c
+            .get("term")
+            .as_usize()
+            .filter(|&t| t >= 1)
+            .ok_or_else(|| anyhow!("contract '{label}': missing positive integer 'term'"))?;
+        ensure!(upfront > 0.0, "contract '{label}': upfront must be positive");
+        ensure!(rate >= 0.0, "contract '{label}': rate must be non-negative");
+        ensure!(rate <= p, "contract '{label}': rate {rate} exceeds on-demand rate {p}");
+        entries.push((label, Contract { upfront, rate, term }));
+    }
+    let n_input = entries.len();
+    let market = Market::with_labels(p, entries);
+    let pruned = n_input - market.len();
+    Ok((market, pruned))
+}
+
+/// Parse `doc.trace` into a [`TraceSpec`]. Shared by both scenario modes.
+fn parse_trace(doc: &Json) -> Result<TraceSpec> {
+    let tj = doc.get("trace");
+    let kind = tj.get("kind").as_str().unwrap_or("synthetic");
+    match kind {
+        "synthetic" => Ok(TraceSpec::Synthetic {
+            users: tj.get("users").as_usize().unwrap_or(50),
+            slots: tj.get("slots").as_usize().unwrap_or(5000),
+            seed: tj.get("seed").as_f64().unwrap_or(2013.0) as u64,
+        }),
+        "constant" => Ok(TraceSpec::Constant {
+            users: tj.get("users").as_usize().unwrap_or(1),
+            level: tj.get("level").as_usize().unwrap_or(1) as u32,
+            slots: tj
+                .get("slots")
+                .as_usize()
+                .ok_or_else(|| anyhow!("trace(constant): missing integer 'slots'"))?,
+        }),
+        "inline" => {
+            let rows = tj
+                .get("demands")
+                .as_arr()
+                .ok_or_else(|| anyhow!("trace(inline): missing array 'demands'"))?;
+            let mut demands = Vec::with_capacity(rows.len());
+            for (u, row) in rows.iter().enumerate() {
+                let row = row
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("trace(inline): demands[{u}] is not an array"))?;
+                demands.push(
+                    row.iter()
+                        .map(|d| {
+                            d.as_f64()
+                                .filter(|x| *x >= 0.0)
+                                .map(|x| x as u32)
+                                .ok_or_else(|| anyhow!("trace(inline): bad demand in row {u}"))
+                        })
+                        .collect::<Result<Vec<u32>>>()?,
+                );
+            }
+            ensure!(!demands.is_empty(), "trace(inline): at least one user row required");
+            Ok(TraceSpec::Inline { demands })
+        }
+        "file" => Ok(TraceSpec::File {
+            path: tj
+                .get("path")
+                .as_str()
+                .ok_or_else(|| anyhow!("trace(file): missing string 'path'"))?
+                .to_string(),
+            slots: tj.get("slots").as_usize().unwrap_or(crate::trace::TRACE_SLOTS),
+        }),
+        other => bail!(expected_one_of(
+            "trace.kind",
+            other,
+            &["synthetic", "constant", "inline", "file"]
+        )),
+    }
+}
+
+/// Parse one policy entry — a bare name string, or an object with
+/// `policy` (+ optional `z`, `window`). Shared by the `policies` list and
+/// the broker section.
+fn parse_policy_entry(item: &Json, default_window: usize, seed: u64) -> Result<PolicySpec> {
+    let (kind, z, w) = match (item.as_str(), item.as_obj()) {
+        (Some(s), _) => (s.to_string(), None, None),
+        (None, Some(_)) => (
+            item.get("policy")
+                .as_str()
+                .ok_or_else(|| anyhow!("policies: object needs 'policy'"))?
+                .to_string(),
+            item.get("z").as_f64(),
+            item.get("window").as_usize(),
+        ),
+        _ => bail!("policies: entries must be strings or objects"),
+    };
+    match kind.as_str() {
+        "all-on-demand" => Ok(PolicySpec::AllOnDemand),
+        "all-reserved" => Ok(PolicySpec::AllReserved),
+        "separate" => Ok(PolicySpec::Separate),
+        "deterministic" => Ok(PolicySpec::Deterministic { z, window: w.unwrap_or(default_window) }),
+        "randomized" => Ok(PolicySpec::Randomized { window: w.unwrap_or(default_window), seed }),
+        other => bail!(expected_one_of("policies: policy", other, POLICY_NAMES)),
+    }
+}
+
+/// Market-dependent validation shared by both modes: prediction windows
+/// are a feature path on any menu (Sec. VI semantics per contract); only
+/// `w ≥ min τ` is rejected, since no contract's check window could hold
+/// it. Custom thresholds remain single-contract (one `z` does not map
+/// onto a menu).
+fn validate_policy(market: &Market, spec: &PolicySpec) -> Result<()> {
+    if !market.is_single() {
+        ensure!(
+            !matches!(spec, PolicySpec::Deterministic { z: Some(_), .. }),
+            "policy '{}': custom z needs a single-contract market",
+            spec.name()
+        );
+    }
+    let w = match spec {
+        PolicySpec::Deterministic { window, .. } => *window,
+        PolicySpec::Randomized { window, .. } => *window,
+        _ => 0,
+    };
+    if w > 0 {
+        if let Some(tau) = market.contracts().iter().map(|c| c.term).min() {
+            ensure!(
+                w < tau,
+                "policy '{}': prediction window {w} must be shorter than the shortest \
+                 term on the menu ({tau})",
+                spec.name()
+            );
+        }
+    }
+    Ok(())
+}
+
 /// A parsed, validated scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
@@ -131,98 +325,8 @@ impl ScenarioSpec {
             .ok_or_else(|| anyhow!("spec: missing string field 'name'"))?
             .to_string();
         let description = doc.get("description").as_str().map(|s| s.to_string());
-
-        // --- market ---
-        let mj = doc.get("market");
-        let p = mj
-            .get("on_demand")
-            .as_f64()
-            .ok_or_else(|| anyhow!("market: missing number 'on_demand'"))?;
-        ensure!(p > 0.0, "market.on_demand must be positive");
-        let cj = mj
-            .get("contracts")
-            .as_arr()
-            .ok_or_else(|| anyhow!("market: missing array 'contracts'"))?;
-        let mut entries = Vec::with_capacity(cj.len());
-        for (i, c) in cj.iter().enumerate() {
-            let label = c
-                .get("label")
-                .as_str()
-                .map(|s| s.to_string())
-                .unwrap_or_else(|| format!("c{i}"));
-            let upfront = c
-                .get("upfront")
-                .as_f64()
-                .ok_or_else(|| anyhow!("contract '{label}': missing number 'upfront'"))?;
-            let rate = c
-                .get("rate")
-                .as_f64()
-                .ok_or_else(|| anyhow!("contract '{label}': missing number 'rate'"))?;
-            let term = c
-                .get("term")
-                .as_usize()
-                .filter(|&t| t >= 1)
-                .ok_or_else(|| anyhow!("contract '{label}': missing positive integer 'term'"))?;
-            ensure!(upfront > 0.0, "contract '{label}': upfront must be positive");
-            ensure!(rate >= 0.0, "contract '{label}': rate must be non-negative");
-            ensure!(rate <= p, "contract '{label}': rate {rate} exceeds on-demand rate {p}");
-            entries.push((label, Contract { upfront, rate, term }));
-        }
-        let n_input = entries.len();
-        let market = Market::with_labels(p, entries);
-        let pruned_contracts = n_input - market.len();
-
-        // --- trace ---
-        let tj = doc.get("trace");
-        let kind = tj.get("kind").as_str().unwrap_or("synthetic");
-        let trace = match kind {
-            "synthetic" => TraceSpec::Synthetic {
-                users: tj.get("users").as_usize().unwrap_or(50),
-                slots: tj.get("slots").as_usize().unwrap_or(5000),
-                seed: tj.get("seed").as_f64().unwrap_or(2013.0) as u64,
-            },
-            "constant" => TraceSpec::Constant {
-                users: tj.get("users").as_usize().unwrap_or(1),
-                level: tj.get("level").as_usize().unwrap_or(1) as u32,
-                slots: tj
-                    .get("slots")
-                    .as_usize()
-                    .ok_or_else(|| anyhow!("trace(constant): missing integer 'slots'"))?,
-            },
-            "inline" => {
-                let rows = tj
-                    .get("demands")
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("trace(inline): missing array 'demands'"))?;
-                let mut demands = Vec::with_capacity(rows.len());
-                for (u, row) in rows.iter().enumerate() {
-                    let row = row
-                        .as_arr()
-                        .ok_or_else(|| anyhow!("trace(inline): demands[{u}] is not an array"))?;
-                    demands.push(
-                        row.iter()
-                            .map(|d| {
-                                d.as_f64()
-                                    .filter(|x| *x >= 0.0)
-                                    .map(|x| x as u32)
-                                    .ok_or_else(|| anyhow!("trace(inline): bad demand in row {u}"))
-                            })
-                            .collect::<Result<Vec<u32>>>()?,
-                    );
-                }
-                ensure!(!demands.is_empty(), "trace(inline): at least one user row required");
-                TraceSpec::Inline { demands }
-            }
-            "file" => TraceSpec::File {
-                path: tj
-                    .get("path")
-                    .as_str()
-                    .ok_or_else(|| anyhow!("trace(file): missing string 'path'"))?
-                    .to_string(),
-                slots: tj.get("slots").as_usize().unwrap_or(crate::trace::TRACE_SLOTS),
-            },
-            other => bail!("trace: unknown kind '{other}' (synthetic|constant|inline|file)"),
-        };
+        let (market, pruned_contracts) = parse_market(doc)?;
+        let trace = parse_trace(doc)?;
 
         // --- policies ---
         let seed = doc.get("seed").as_f64().unwrap_or(1.0) as u64;
@@ -237,66 +341,13 @@ impl ScenarioSpec {
             }
             Some(items) => {
                 for item in items {
-                    let (kind, z, w) = match (item.as_str(), item.as_obj()) {
-                        (Some(s), _) => (s.to_string(), None, None),
-                        (None, Some(_)) => (
-                            item.get("policy")
-                                .as_str()
-                                .ok_or_else(|| anyhow!("policies: object needs 'policy'"))?
-                                .to_string(),
-                            item.get("z").as_f64(),
-                            item.get("window").as_usize(),
-                        ),
-                        _ => bail!("policies: entries must be strings or objects"),
-                    };
-                    let spec = match kind.as_str() {
-                        "all-on-demand" => PolicySpec::AllOnDemand,
-                        "all-reserved" => PolicySpec::AllReserved,
-                        "separate" => PolicySpec::Separate,
-                        "deterministic" => {
-                            PolicySpec::Deterministic { z, window: w.unwrap_or(window) }
-                        }
-                        "randomized" => {
-                            PolicySpec::Randomized { window: w.unwrap_or(window), seed }
-                        }
-                        other => bail!(
-                            "policies: unknown policy '{other}' \
-                             (all-on-demand|all-reserved|separate|deterministic|randomized)"
-                        ),
-                    };
-                    policies.push(spec);
+                    policies.push(parse_policy_entry(item, window, seed)?);
                 }
             }
         }
         ensure!(!policies.is_empty(), "policies: at least one policy required");
-        // Prediction windows are a feature path on any menu (Sec. VI
-        // semantics per contract); only `w ≥ min τ` is rejected, since no
-        // contract's check window could hold it. Custom thresholds remain
-        // single-contract (one `z` does not map onto a menu).
-        let min_term = market.contracts().iter().map(|c| c.term).min();
         for spec in &policies {
-            if !market.is_single() {
-                ensure!(
-                    !matches!(spec, PolicySpec::Deterministic { z: Some(_), .. }),
-                    "policy '{}': custom z needs a single-contract market",
-                    spec.name()
-                );
-            }
-            let w = match spec {
-                PolicySpec::Deterministic { window, .. } => *window,
-                PolicySpec::Randomized { window, .. } => *window,
-                _ => 0,
-            };
-            if w > 0 {
-                if let Some(tau) = min_term {
-                    ensure!(
-                        w < tau,
-                        "policy '{}': prediction window {w} must be shorter than the shortest \
-                         term on the menu ({tau})",
-                        spec.name()
-                    );
-                }
-            }
+            validate_policy(&market, spec)?;
         }
 
         let offline = matches!(*doc.get("offline"), Json::Bool(true));
@@ -310,6 +361,263 @@ impl ScenarioSpec {
             offline,
         })
     }
+}
+
+/// A parsed broker-mode scenario (`"mode": "broker"`): one policy drives
+/// the shared portfolio over the fleet's aggregate demand, one settlement
+/// scheme splits the realized cost back into per-user bills.
+#[derive(Debug, Clone)]
+pub struct BrokerScenarioSpec {
+    pub name: String,
+    pub description: Option<String>,
+    pub market: Market,
+    pub pruned_contracts: usize,
+    pub trace: TraceSpec,
+    /// The policy driving the shared portfolio.
+    pub policy: PolicySpec,
+    /// Settlement scheme name (validated at parse time; see
+    /// [`crate::broker::SETTLEMENT_NAMES`]).
+    pub settlement: String,
+    pub offline: bool,
+}
+
+impl BrokerScenarioSpec {
+    /// Parse a broker-mode spec: `market` and `trace` as in policy mode,
+    /// plus a `broker` object — `{"policy": "deterministic", "window": 0,
+    /// "settlement": "proportional"}` (policy defaults to deterministic,
+    /// settlement to proportional).
+    pub fn from_json(doc: &Json) -> Result<BrokerScenarioSpec> {
+        let name = doc
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("spec: missing string field 'name'"))?
+            .to_string();
+        let description = doc.get("description").as_str().map(|s| s.to_string());
+        let (market, pruned_contracts) = parse_market(doc)?;
+        let trace = parse_trace(doc)?;
+
+        let seed = doc.get("seed").as_f64().unwrap_or(1.0) as u64;
+        let window = doc.get("window").as_usize().unwrap_or(0);
+        let bj = doc.get("broker");
+        ensure!(bj.as_obj().is_some(), "broker mode: missing object 'broker'");
+        // The broker object *is* a policy entry (`policy` + optional
+        // `z`/`window`), so the policies-list parser handles it directly.
+        let policy = if matches!(*bj.get("policy"), Json::Null) {
+            PolicySpec::Deterministic { z: None, window }
+        } else {
+            parse_policy_entry(bj, window, seed)?
+        };
+        validate_policy(&market, &policy)?;
+        let settlement = bj.get("settlement").as_str().unwrap_or("proportional").to_string();
+        settlement_from_name(&settlement)?; // validate the name at parse time
+
+        let offline = matches!(*doc.get("offline"), Json::Bool(true));
+        Ok(BrokerScenarioSpec {
+            name,
+            description,
+            market,
+            pruned_contracts,
+            trace,
+            policy,
+            settlement,
+            offline,
+        })
+    }
+}
+
+/// A spec document of either mode, dispatched on its `mode` field.
+#[derive(Debug, Clone)]
+pub enum ParsedScenario {
+    Policies(ScenarioSpec),
+    Broker(BrokerScenarioSpec),
+}
+
+/// Parse a spec of either mode (`"mode": "policies"` — the default — or
+/// `"mode": "broker"`).
+pub fn parse_scenario(doc: &Json) -> Result<ParsedScenario> {
+    match doc.get("mode").as_str().unwrap_or("policies") {
+        "policies" => Ok(ParsedScenario::Policies(ScenarioSpec::from_json(doc)?)),
+        "broker" => Ok(ParsedScenario::Broker(BrokerScenarioSpec::from_json(doc)?)),
+        other => bail!(expected_one_of("mode", other, &["policies", "broker"])),
+    }
+}
+
+/// The complete broker scenario result: the broker outcome plus the
+/// market header fields every report carries.
+#[derive(Debug, Clone)]
+pub struct BrokerReport {
+    pub name: String,
+    pub market_contracts: usize,
+    pub pruned_contracts: usize,
+    pub alpha_max: f64,
+    pub outcome: BrokerOutcome,
+}
+
+impl BrokerReport {
+    /// Machine-readable report (`cloudreserve-broker/v1`). Costs that feed
+    /// bit-exact invariants carry `*_bits` hex-f64 twins so downstream
+    /// validation does not depend on decimal round-tripping.
+    pub fn to_json(&self) -> Json {
+        let hex = |v: f64| Json::Str(format!("{:#018x}", v.to_bits()));
+        let o = &self.outcome;
+        let r = &o.aggregate.report;
+        let per_contract = o
+            .aggregate
+            .per_contract
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("label", Json::Str(c.label.clone())),
+                    ("reservations", Json::Num(c.reservations as f64)),
+                    ("upfront_spend", Json::Num(c.upfront_spend)),
+                ])
+            })
+            .collect();
+        let bills = o
+            .bills
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("user_id", Json::Num(b.user_id as f64)),
+                    ("amount", Json::Num(b.amount)),
+                    ("amount_bits", hex(b.amount)),
+                    ("usage_slots", Json::Num(b.usage_slots as f64)),
+                    ("standalone_cost", Json::Num(b.standalone_cost)),
+                    ("on_demand_cost", Json::Num(b.on_demand_cost)),
+                ])
+            })
+            .collect();
+        // plain sequential sum — conserved bit-exactly by construction
+        let bills_total: f64 = o.bills.iter().map(|b| b.amount).sum();
+        let offline = match &o.offline {
+            None => Json::Null,
+            Some(s) => Json::obj(vec![
+                ("cost", Json::Num(s.cost)),
+                ("cost_bits", hex(s.cost)),
+                ("reservations", Json::Num(s.reservations as f64)),
+            ]),
+        };
+        let gain_fraction = if o.standalone_total > 0.0 {
+            o.multiplexing_gain / o.standalone_total
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("schema", Json::Str("cloudreserve-broker/v1".into())),
+            ("name", Json::Str(self.name.clone())),
+            ("users", Json::Num(o.users as f64)),
+            ("slots", Json::Num(o.slots as f64)),
+            ("market_contracts", Json::Num(self.market_contracts as f64)),
+            ("pruned_contracts", Json::Num(self.pruned_contracts as f64)),
+            ("alpha_max", Json::Num(self.alpha_max)),
+            ("policy", Json::Str(o.policy.clone())),
+            ("settlement", Json::Str(o.settlement.clone())),
+            ("aggregate_cost", Json::Num(r.total)),
+            ("aggregate_cost_bits", hex(r.total)),
+            (
+                "aggregate",
+                Json::obj(vec![
+                    ("reservations", Json::Num(r.reservations as f64)),
+                    ("peak_active", Json::Num(r.peak_active as f64)),
+                    ("reservation_fees", Json::Num(r.reservation_fees)),
+                    ("on_demand_cost", Json::Num(r.on_demand_cost)),
+                    ("reserved_usage_cost", Json::Num(r.reserved_usage_cost)),
+                    ("per_contract", Json::Arr(per_contract)),
+                ]),
+            ),
+            ("standalone_total", Json::Num(o.standalone_total)),
+            ("standalone_total_bits", hex(o.standalone_total)),
+            ("on_demand_total", Json::Num(o.on_demand_total)),
+            ("multiplexing_gain", Json::Num(o.multiplexing_gain)),
+            ("multiplexing_gain_bits", hex(o.multiplexing_gain)),
+            ("gain_fraction", Json::Num(gain_fraction)),
+            ("offline", offline),
+            ("bills_total_bits", hex(bills_total)),
+            ("bills", Json::Arr(bills)),
+        ])
+    }
+
+    /// Human-readable report (bills elided past the first dozen users).
+    pub fn render(&self) -> String {
+        let o = &self.outcome;
+        let r = &o.aggregate.report;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "broker '{}': {} users x {} slots, menu of {} contract(s) ({} pruned), alpha_max {:.4}\n",
+            self.name, o.users, o.slots, self.market_contracts, self.pruned_contracts, self.alpha_max
+        ));
+        out.push_str(&format!(
+            "policy {} + settlement {}\n",
+            o.policy, o.settlement
+        ));
+        out.push_str(&format!(
+            "aggregate portfolio: cost {:.4} ({} reservations, peak {} active)\n",
+            r.total, r.reservations, r.peak_active
+        ));
+        for c in &o.aggregate.per_contract {
+            out.push_str(&format!(
+                "  contract {:<12} {:>6} reservations, upfront spend {:.4}\n",
+                c.label, c.reservations, c.upfront_spend
+            ));
+        }
+        out.push_str(&format!(
+            "isolated users (standalone deterministic): {:.4}; all-on-demand: {:.4}\n",
+            o.standalone_total, o.on_demand_total
+        ));
+        out.push_str(&format!(
+            "multiplexing gain: {:.4} ({:.2}% of standalone)\n",
+            o.multiplexing_gain,
+            if o.standalone_total > 0.0 {
+                100.0 * o.multiplexing_gain / o.standalone_total
+            } else {
+                0.0
+            }
+        ));
+        if let Some(s) = &o.offline {
+            out.push_str(&format!(
+                "offline joint DP on the aggregate: {:.4} ({} reservations)\n",
+                s.cost, s.reservations
+            ));
+        }
+        out.push_str(&format!(
+            "{:<10} {:>12} {:>12} {:>14} {:>14}\n",
+            "user", "bill", "usage", "standalone", "on-demand cap"
+        ));
+        for b in o.bills.iter().take(12) {
+            out.push_str(&format!(
+                "{:<10} {:>12.4} {:>12} {:>14.4} {:>14.4}\n",
+                b.user_id, b.amount, b.usage_slots, b.standalone_cost, b.on_demand_cost
+            ));
+        }
+        if o.bills.len() > 12 {
+            out.push_str(&format!("... {} more users\n", o.bills.len() - 12));
+        }
+        out
+    }
+}
+
+/// Run a broker scenario: build the trace, aggregate it, buy the shared
+/// portfolio, settle, and compare against the isolated-users baseline.
+pub fn run_broker(spec: &BrokerScenarioSpec, threads: usize) -> Result<BrokerReport> {
+    let pop = spec.trace.build().context("building scenario trace")?;
+    ensure!(!pop.users.is_empty(), "scenario trace has no users");
+    let flat = FlatPopulation::from(&pop);
+    let settlement = settlement_from_name(&spec.settlement)?;
+    let outcome = BrokerRun {
+        market: &spec.market,
+        policy: spec.policy.clone(),
+        settlement: settlement.as_ref(),
+        threads,
+        offline: spec.offline,
+    }
+    .run_flat(&flat)?;
+    Ok(BrokerReport {
+        name: spec.name.clone(),
+        market_contracts: spec.market.len(),
+        pruned_contracts: spec.pruned_contracts,
+        alpha_max: spec.market.alpha_max(),
+        outcome,
+    })
 }
 
 /// One policy's scenario-level outcome.
@@ -674,6 +982,92 @@ mod tests {
           "policies": ["magic"]
         }"#;
         assert!(ScenarioSpec::from_json(&parse(text).unwrap()).is_err());
+    }
+
+    fn broker_spec_text(settlement: &str) -> String {
+        format!(
+            r#"{{
+          "name": "unit-broker",
+          "mode": "broker",
+          "market": {{
+            "on_demand": 0.08,
+            "contracts": [
+              {{"label": "1yr", "upfront": 0.1333, "rate": 0.039, "term": 4}},
+              {{"label": "3yr", "upfront": 0.3, "rate": 0.031, "term": 12}}
+            ]
+          }},
+          "trace": {{"kind": "inline", "demands": [
+            [1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0],
+            [0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0],
+            [0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1]
+          ]}},
+          "broker": {{"policy": "deterministic", "settlement": "{settlement}"}},
+          "offline": true
+        }}"#
+        )
+    }
+
+    #[test]
+    fn broker_mode_parses_runs_and_serializes() {
+        let doc = parse(&broker_spec_text("proportional")).unwrap();
+        let spec = match parse_scenario(&doc).unwrap() {
+            ParsedScenario::Broker(s) => s,
+            other => panic!("expected broker mode, got {other:?}"),
+        };
+        assert_eq!(spec.settlement, "proportional");
+        let report = run_broker(&spec, 2).unwrap();
+        let o = &report.outcome;
+        assert_eq!(o.users, 3);
+        assert_eq!(o.slots, 12);
+        // the aggregate is constant 1 -> the shared portfolio reserves
+        assert!(o.aggregate.report.reservations >= 1);
+        // bills conserve the aggregate cost bit-exactly
+        let total: f64 = o.bills.iter().map(|b| b.amount).sum();
+        assert_eq!(total.to_bits(), o.aggregate.report.total.to_bits());
+        // offline joint DP on the aggregate sandwiches the broker cost
+        let off = o.offline.as_ref().expect("unit aggregate is tractable");
+        assert!(off.cost <= o.aggregate.report.total + 1e-9);
+        // JSON round-trips and pins the bit-exact conservation
+        let text = report.to_json().dump_pretty();
+        let back = parse(&text).unwrap();
+        assert_eq!(back.get("schema").as_str(), Some("cloudreserve-broker/v1"));
+        assert_eq!(
+            back.get("bills_total_bits").as_str(),
+            back.get("aggregate_cost_bits").as_str()
+        );
+        assert_eq!(back.get("bills").as_arr().unwrap().len(), 3);
+        assert!(report.render().contains("multiplexing gain"));
+    }
+
+    #[test]
+    fn broker_mode_od_capped_respects_caps() {
+        let doc = parse(&broker_spec_text("od-capped")).unwrap();
+        let spec = BrokerScenarioSpec::from_json(&doc).unwrap();
+        let report = run_broker(&spec, 1).unwrap();
+        for b in &report.outcome.bills {
+            assert!(b.amount <= b.on_demand_cost, "user {} over cap", b.user_id);
+        }
+    }
+
+    #[test]
+    fn broker_mode_rejects_unknown_settlement_with_names() {
+        let doc = parse(&broker_spec_text("magic")).unwrap();
+        let err = format!("{:#}", BrokerScenarioSpec::from_json(&doc).unwrap_err());
+        assert!(err.contains("proportional") && err.contains("od-capped"), "{err}");
+    }
+
+    #[test]
+    fn unknown_mode_lists_valid_modes() {
+        let mut text = broker_spec_text("proportional");
+        text = text.replace("\"mode\": \"broker\"", "\"mode\": \"auction\"");
+        let err = format!("{:#}", parse_scenario(&parse(&text).unwrap()).unwrap_err());
+        assert!(err.contains("policies") && err.contains("broker"), "{err}");
+    }
+
+    #[test]
+    fn default_mode_is_policies() {
+        let spec = parse_scenario(&parse(two_term_spec_text()).unwrap()).unwrap();
+        assert!(matches!(spec, ParsedScenario::Policies(_)));
     }
 
     #[test]

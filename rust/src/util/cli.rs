@@ -79,6 +79,13 @@ impl Args {
     }
 }
 
+/// Error text for an unknown name-valued option: names the offending value
+/// and lists every valid name, so "unknown policy/settlement/…" errors are
+/// always actionable (CLI and spec parsers share this).
+pub fn expected_one_of(what: &str, got: &str, valid: &[&str]) -> String {
+    format!("{what}: unknown name '{got}' (expected one of: {})", valid.join("|"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,6 +125,13 @@ mod tests {
         let a = Args::parse(argv("run"));
         assert_eq!(a.f64_or("alpha", 0.5), 0.5);
         assert_eq!(a.str_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn expected_one_of_lists_names() {
+        let msg = expected_one_of("policy", "magic", &["a", "b", "c"]);
+        assert!(msg.contains("'magic'"));
+        assert!(msg.contains("a|b|c"));
     }
 
     #[test]

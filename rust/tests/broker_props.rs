@@ -1,0 +1,389 @@
+//! Property suite for the shared-portfolio broker (`cloudreserve::broker`).
+//!
+//! Three families of invariants:
+//!
+//! 1. **Settlement conserves cost bit-exactly.** For any realized total and
+//!    any usage vector, Σ bills reconstructs the total to the bit — summed
+//!    forward, backward, or in any other order (every bill is a multiple of
+//!    one power-of-two quantum `q = total / mantissa`, and all partial sums
+//!    stay ≤ 2⁵³·q, so f64 addition of bills is exact). The od-capped
+//!    scheme additionally never bills a user above their standalone
+//!    all-on-demand cost.
+//!
+//! 2. **The cost sandwich on sampled fleets.** Rotating-burst fleets are
+//!    generated in a regime where the broker provably wins: `n` users take
+//!    one-slot turns (the aggregate is a constant 1), the contract term
+//!    spans two full rotations (`τ = 2n`) so no user ever accumulates the
+//!    2.5-slot break-even inside a window alone (standalone = pure
+//!    on-demand), while the broker's constant aggregate re-reserves
+//!    profitably every `⌈β/p⌉ + τ` slots. On every sampled fleet:
+//!    `joint DP on aggregate ≤ broker aggregate cost < Σ standalone
+//!    deterministic costs` — the offline floor is a theorem of the
+//!    implementation (the DP searches a superset of the policy's feasible
+//!    schedules), the ceiling is the multiplexing gain the subsystem
+//!    exists to capture.
+//!
+//! 3. **Streaming == in-RAM.** The chunk-at-a-time broker pipeline over a
+//!    v2 trace is bit-identical to the in-RAM run for every chunk size
+//!    (aggregation is pure integer addition; the standalone baseline is
+//!    per-user independent), mirroring `tests/engine_parity.rs`.
+
+use cloudreserve::algos::offline;
+use cloudreserve::broker::{
+    BrokerRun, OnDemandCapped, ProportionalUsage, Settlement, UserUsage, STANDALONE_SPEC,
+};
+use cloudreserve::pricing::{Contract, Market, Pricing};
+use cloudreserve::trace::io::{write_chunked, ChunkedPopulation};
+use cloudreserve::trace::synth::{generate, SynthConfig};
+use cloudreserve::trace::{FlatPopulation, Population};
+use cloudreserve::util::prop::{check_no_shrink, Config};
+use cloudreserve::util::rng::Rng;
+
+/// Assert Σ `bills` reconstructs `total` to the bit in several summation
+/// orders (forward, reverse, sorted ascending by amount).
+fn assert_conserves(bills: &[f64], total: f64, what: &str) {
+    let fwd: f64 = bills.iter().sum();
+    assert_eq!(fwd.to_bits(), total.to_bits(), "{what}: forward sum {fwd} vs total {total}");
+    let rev: f64 = bills.iter().rev().sum();
+    assert_eq!(rev.to_bits(), total.to_bits(), "{what}: reverse sum {rev} vs total {total}");
+    let mut sorted = bills.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let asc: f64 = sorted.iter().sum();
+    assert_eq!(asc.to_bits(), total.to_bits(), "{what}: sorted sum {asc} vs total {total}");
+}
+
+// ---------------------------------------------------------------------------
+// 1. Settlement invariants on raw (total, usage) inputs
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct SettleCase {
+    total: f64,
+    p: f64,
+    usage: Vec<UserUsage>,
+}
+
+fn gen_settle_case(rng: &mut Rng) -> SettleCase {
+    let n = 1 + rng.below(40) as usize;
+    let p = 0.01 + rng.f64() * 0.4;
+    let usage: Vec<UserUsage> = (0..n)
+        .map(|i| UserUsage {
+            user_id: i as u32,
+            // Include zero-usage users; span six orders of magnitude.
+            demand_slots: rng.below(1_000_000),
+            peak: 1,
+        })
+        .collect();
+    let od_total: f64 = usage.iter().map(|u| p * u.demand_slots as f64).sum();
+    // Keep the total under the on-demand ceiling so od-capped is feasible
+    // (a broker whose realized cost exceeds Σ on-demand has no cap-respecting
+    // split — that rejection path is pinned in the settlement unit tests).
+    let total = rng.f64() * 0.8 * od_total;
+    SettleCase { total, p, usage }
+}
+
+#[test]
+fn settlement_conserves_cost_bit_exactly() {
+    let schemes: [&dyn Settlement; 2] = [&ProportionalUsage, &OnDemandCapped];
+    check_no_shrink(
+        &Config { cases: 96, ..Config::default() },
+        "settlement-conserves",
+        gen_settle_case,
+        |case| {
+            for scheme in schemes {
+                let bills = scheme
+                    .settle(case.total, &case.usage, case.p)
+                    .map_err(|e| format!("{}: settle failed: {e}", scheme.name()))?;
+                if bills.len() != case.usage.len() {
+                    return Err(format!("{}: {} bills for {} users", scheme.name(), bills.len(), case.usage.len()));
+                }
+                if bills.iter().any(|&b| !(b >= 0.0)) {
+                    return Err(format!("{}: negative or NaN bill in {bills:?}", scheme.name()));
+                }
+                assert_conserves(&bills, case.total, scheme.name());
+                if scheme.name() == "od-capped" {
+                    for (u, &b) in case.usage.iter().zip(&bills) {
+                        let od = case.p * u.demand_slots as f64;
+                        if b > od {
+                            return Err(format!(
+                                "od-capped billed user {} {b} above its on-demand cost {od}",
+                                u.user_id
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn settlement_degenerate_inputs() {
+    let schemes: [&dyn Settlement; 2] = [&ProportionalUsage, &OnDemandCapped];
+    for scheme in schemes {
+        // Zero total: everyone owes exactly zero.
+        let usage = vec![
+            UserUsage { user_id: 0, demand_slots: 5, peak: 1 },
+            UserUsage { user_id: 1, demand_slots: 0, peak: 0 },
+        ];
+        let bills = scheme.settle(0.0, &usage, 0.1).unwrap();
+        assert_eq!(bills, vec![0.0, 0.0], "{}", scheme.name());
+
+        // Single user: the whole total lands on them, to the bit.
+        let one = vec![UserUsage { user_id: 7, demand_slots: 400, peak: 3 }];
+        let total = 12.3456789;
+        let bills = scheme.settle(total, &one, 0.5).unwrap();
+        assert_eq!(bills.len(), 1);
+        assert_eq!(bills[0].to_bits(), total.to_bits(), "{}", scheme.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. The cost sandwich on rotating-burst fleets
+// ---------------------------------------------------------------------------
+
+/// Parameters of one rotating-burst fleet (see module docs): everything
+/// the broker run needs, in plain numbers so failures replay trivially.
+#[derive(Debug, Clone)]
+struct RotatingCase {
+    n_users: usize,
+    p: f64,
+    alpha: f64,
+    cycles: usize,
+}
+
+fn gen_rotating_case(rng: &mut Rng) -> RotatingCase {
+    RotatingCase {
+        n_users: 4 + rng.below(3) as usize,       // 4..=6
+        p: 0.05 + rng.f64() * 0.2,                // 0.05..0.25
+        alpha: 0.2 + rng.f64() * 0.4,             // 0.2..0.6
+        cycles: 12 + rng.below(9) as usize,       // 12..=20 rotations
+    }
+}
+
+impl RotatingCase {
+    /// Single contract with term `2n` and break-even at 2.5 on-demand
+    /// slots: a lone user sees at most 2 demanded slots per window (below
+    /// break-even), the aggregate sees all `2n`.
+    fn market(&self) -> Market {
+        let beta = 2.5 * self.p;
+        Market::new(
+            self.p,
+            vec![Contract {
+                upfront: beta * (1.0 - self.alpha),
+                rate: self.alpha * self.p,
+                term: 2 * self.n_users,
+            }],
+        )
+    }
+
+    /// User `u` is busy on slots `t ≡ u (mod n)`; the aggregate is 1
+    /// everywhere.
+    fn fleet(&self) -> FlatPopulation {
+        let slots = self.n_users * self.cycles;
+        let mut flat = FlatPopulation::default();
+        for u in 0..self.n_users {
+            let demand: Vec<u32> =
+                (0..slots).map(|t| u32::from(t % self.n_users == u)).collect();
+            flat.push_user(u as u32, &demand);
+        }
+        flat
+    }
+}
+
+#[test]
+fn broker_cost_is_sandwiched_on_rotating_fleets() {
+    check_no_shrink(
+        &Config { cases: 48, ..Config::default() },
+        "broker-sandwich",
+        gen_rotating_case,
+        |case| {
+            let market = case.market();
+            let flat = case.fleet();
+            let outcome = BrokerRun {
+                market: &market,
+                policy: STANDALONE_SPEC,
+                settlement: &ProportionalUsage,
+                threads: 2,
+                offline: true,
+            }
+            .run_flat(&flat)
+            .map_err(|e| format!("broker run failed: {e}"))?;
+
+            let broker = outcome.aggregate.report.total;
+            let standalone = outcome.standalone_total;
+
+            // Ceiling: aggregate broker cost < Σ standalone deterministic
+            // costs — the multiplexing gain this regime guarantees.
+            if !(outcome.multiplexing_gain > 0.0) {
+                return Err(format!(
+                    "no multiplexing gain: broker {broker} vs standalone {standalone}"
+                ));
+            }
+
+            // Floor: the joint DP on the aggregate curve (searches a
+            // superset of the policy's feasible schedules under identical
+            // ledger billing).
+            let floor = outcome
+                .offline
+                .as_ref()
+                .ok_or("offline floor missing on a tractable aggregate")?;
+            if floor.cost > broker + 1e-9 * (1.0 + broker) {
+                return Err(format!("offline floor {} above broker cost {broker}", floor.cost));
+            }
+
+            // The floor is independently reproducible from the constant
+            // aggregate curve.
+            let curve = vec![1u32; case.n_users * case.cycles];
+            let direct = offline::optimal_market_joint(&curve, &market)
+                .ok_or("constant unit curve must be joint-tractable")?;
+            if direct.cost.to_bits() != floor.cost.to_bits() {
+                return Err(format!(
+                    "offline floor {} diverges from direct joint DP {}",
+                    floor.cost, direct.cost
+                ));
+            }
+
+            assert_conserves(
+                &outcome.bills.iter().map(|b| b.amount).collect::<Vec<_>>(),
+                broker,
+                "proportional",
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn od_capped_broker_never_bills_above_on_demand_on_rotating_fleets() {
+    check_no_shrink(
+        &Config { cases: 32, ..Config::default() },
+        "broker-od-capped",
+        gen_rotating_case,
+        |case| {
+            let market = case.market();
+            let flat = case.fleet();
+            // Feasible by construction: the broker beats Σ standalone here,
+            // and standalone is pure on-demand in this regime.
+            let outcome = BrokerRun {
+                market: &market,
+                policy: STANDALONE_SPEC,
+                settlement: &OnDemandCapped,
+                threads: 2,
+                offline: false,
+            }
+            .run_flat(&flat)
+            .map_err(|e| format!("broker run failed: {e}"))?;
+            for b in &outcome.bills {
+                if b.amount > b.on_demand_cost {
+                    return Err(format!(
+                        "user {} billed {} above its on-demand cost {}",
+                        b.user_id, b.amount, b.on_demand_cost
+                    ));
+                }
+            }
+            assert_conserves(
+                &outcome.bills.iter().map(|b| b.amount).collect::<Vec<_>>(),
+                outcome.aggregate.report.total,
+                "od-capped",
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn single_user_broker_is_the_standalone_policy_exactly() {
+    // With one user the aggregate curve IS the user's curve, so the broker
+    // degenerates to the standalone deterministic run bit-for-bit, the one
+    // bill is the whole total, and the multiplexing gain is exactly zero.
+    let mut flat = FlatPopulation::default();
+    let demand: Vec<u32> = (0..200).map(|t| ((t / 13) % 3) as u32).collect();
+    flat.push_user(0, &demand);
+    let market = Market::single(Pricing::normalized(0.1, 0.45, 8));
+    let outcome = BrokerRun {
+        market: &market,
+        policy: STANDALONE_SPEC,
+        settlement: &ProportionalUsage,
+        threads: 1,
+        offline: false,
+    }
+    .run_flat(&flat)
+    .unwrap();
+    assert_eq!(outcome.users, 1);
+    assert_eq!(
+        outcome.aggregate.report.total.to_bits(),
+        outcome.standalone_total.to_bits(),
+        "one-user broker must equal the standalone run"
+    );
+    assert_eq!(outcome.multiplexing_gain, 0.0);
+    assert_eq!(outcome.bills.len(), 1);
+    assert_eq!(outcome.bills[0].amount.to_bits(), outcome.aggregate.report.total.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// 3. Streaming chunked pipeline == in-RAM pipeline, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chunked_broker_pipeline_is_bit_identical_to_in_ram() {
+    let pop = generate(&SynthConfig { users: 23, slots: 400, seed: 11, ..Default::default() });
+    let flat = pop.flatten();
+    let market = Market::single(Pricing::normalized(0.1, 0.4, 60));
+    let run = |settlement: &dyn Settlement| BrokerRun {
+        market: &market,
+        policy: STANDALONE_SPEC,
+        settlement,
+        threads: 3,
+        offline: false,
+    };
+    let in_ram = run(&ProportionalUsage).run_flat(&flat).unwrap();
+    assert_conserves(
+        &in_ram.bills.iter().map(|b| b.amount).collect::<Vec<_>>(),
+        in_ram.aggregate.report.total,
+        "in-ram",
+    );
+
+    let dir = std::env::temp_dir();
+    for chunk_users in [1u32, 4, 23, 64] {
+        let path =
+            dir.join(format!("cloudreserve_broker_props_{chunk_users}_{}.bin", std::process::id()));
+        write_chunked(&pop, &path, chunk_users).unwrap();
+        let mut chunked = ChunkedPopulation::open(&path).unwrap();
+        let streamed = run(&ProportionalUsage).run_chunked(&mut chunked).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let what = format!("chunk_users={chunk_users}");
+        assert_eq!(streamed.users, in_ram.users, "{what}");
+        assert_eq!(streamed.slots, in_ram.slots, "{what}");
+        assert_eq!(streamed.aggregate.report, in_ram.aggregate.report, "{what}");
+        assert_eq!(
+            streamed.standalone_total.to_bits(),
+            in_ram.standalone_total.to_bits(),
+            "{what}: standalone baseline"
+        );
+        assert_eq!(
+            streamed.multiplexing_gain.to_bits(),
+            in_ram.multiplexing_gain.to_bits(),
+            "{what}: gain"
+        );
+        assert_eq!(streamed.bills.len(), in_ram.bills.len(), "{what}");
+        for (a, b) in streamed.bills.iter().zip(&in_ram.bills) {
+            assert_eq!(a.user_id, b.user_id, "{what}");
+            assert_eq!(a.usage_slots, b.usage_slots, "{what}: user {}", a.user_id);
+            assert_eq!(
+                a.amount.to_bits(),
+                b.amount.to_bits(),
+                "{what}: bill of user {}",
+                a.user_id
+            );
+            assert_eq!(
+                a.standalone_cost.to_bits(),
+                b.standalone_cost.to_bits(),
+                "{what}: standalone of user {}",
+                a.user_id
+            );
+        }
+    }
+}

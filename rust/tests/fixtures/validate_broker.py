@@ -1,0 +1,333 @@
+#!/usr/bin/env python3
+"""Cross-validation of the shared-portfolio broker against an independent
+Python port.
+
+The Rust toolchain is not always available in the environments this repo
+grows in, so the broker subsystem's key invariants are re-derived here on
+top of the policy/market ports in ``gen_golden.py`` (which are pinned
+bit-identical to the Rust decision streams by ``tests/golden_decisions.rs``):
+
+* a faithful port of ``ledger::Ledger::bill`` (same float-op order, so
+  costs agree to the bit with the Rust replay);
+* ports of the settlement machinery in ``broker/settlement.rs``
+  (mantissa-quantum decomposition, exact-integer Hamilton apportionment,
+  od-capped water-fill);
+* the broker pipeline itself: aggregate fold, shared-portfolio replay,
+  standalone baseline, settlement.
+
+It then checks, in plain IEEE-754 Python floats:
+
+1. the committed ``examples/scenarios/broker_table1.json`` fleet has a
+   positive multiplexing gain (aggregate broker cost < Σ standalone
+   deterministic costs) and bills that conserve the broker cost bit-exactly;
+2. the exact rotating-burst case streams sampled by
+   ``tests/broker_props.rs`` (same xoshiro256** stream, same parameters)
+   satisfy gain > 0, bit-exact conservation in several summation orders,
+   and — for the od-capped scheme — the per-user on-demand ceiling.
+
+Run:  python3 rust/tests/fixtures/validate_broker.py
+"""
+
+import json
+import math
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from gen_golden import Contract, Market, Rng, RunQueue, build_policy  # noqa: E402
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", "..")
+)
+
+PROP_SEED = 0xC10D_5EED  # util::prop Config::default()
+
+
+def bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+# --------------------------------------------------- ledger/mod.rs port
+
+
+class Ledger:
+    """Port of Ledger::bill — identical float-op order."""
+
+    def __init__(self, market):
+        self.market = market
+        self.rate_order = sorted(
+            range(len(market.contracts)),
+            key=lambda i: (market.contracts[i].rate, i),
+        )
+        self.active = [RunQueue() for _ in market.contracts]
+        self.t = 0
+        self.total = 0.0
+        self.reservations = 0
+
+    def active_now(self):
+        total = 0
+        for q in self.active:
+            q.expire_before(self.t + 1)
+            total += q.total()
+        return total
+
+    def bill(self, demand, on_demand, reservations):
+        t = self.t
+        assert on_demand <= demand, f"slot {t}: on-demand {on_demand} > demand {demand}"
+        active = self.active_now() + sum(n for _, n in reservations)
+        reserved_use = demand - on_demand
+        assert reserved_use <= active, f"slot {t}: underprovisioned"
+        fees = 0.0
+        for cid, n in reservations:
+            c = self.market.contracts[cid]
+            self.active[cid].push_n(t + c.term, n)
+            fees += n * c.upfront
+            self.reservations += n
+        p = self.market.p
+        od = on_demand * p
+        ru = 0.0
+        rem = reserved_use
+        for cid in self.rate_order:
+            if rem == 0:
+                break
+            take = min(rem, self.active[cid].total())
+            ru += self.market.contracts[cid].rate * take
+            rem -= take
+        self.total += fees + od + ru
+        self.t += 1
+
+
+def billed_replay(market, spec, demands, user_id=0):
+    """run_policy_market: drive a policy over a trace, bill every slot."""
+    policy = build_policy(spec, market, user_id, True)
+    w = policy.window
+    ledger = Ledger(market)
+    for t, d in enumerate(demands):
+        fut = demands[t + 1 : min(t + 1 + w, len(demands))] if w > 0 else []
+        od, res = policy.decide(d, fut)
+        ledger.bill(d, od, res)
+    return ledger
+
+
+# --------------------------------------------- broker/settlement.rs port
+
+
+def quantum(total):
+    b = bits(total)
+    exp = (b >> 52) & 0x7FF
+    frac = b & ((1 << 52) - 1)
+    m = frac if exp == 0 else frac | (1 << 52)
+    return m, total / float(m)
+
+
+def apportion(m, weights):
+    w_total = sum(weights)
+    units = [0] * len(weights)
+    if m == 0 or w_total == 0:
+        return units
+    assigned = 0
+    rema = []
+    for i, w in enumerate(weights):
+        prod = m * w
+        units[i] = prod // w_total
+        assigned += units[i]
+        rema.append((prod % w_total, i))
+    rema.sort(key=lambda e: (-e[0], e[1]))
+    for _, i in rema[: m - assigned]:
+        units[i] += 1
+    return units
+
+
+def settle_proportional(total, usage_slots, p):
+    if total == 0.0:
+        return [0.0] * len(usage_slots)
+    m, q = quantum(total)
+    weights = list(usage_slots)
+    if all(w == 0 for w in weights):
+        weights = [1] * len(weights)
+    return [u * q for u in apportion(m, weights)]
+
+
+def settle_od_capped(total, usage_slots, p):
+    if total == 0.0:
+        return [0.0] * len(usage_slots)
+    m, q = quantum(total)
+    n = len(usage_slots)
+    caps = []
+    for d in usage_slots:
+        c = math.floor((p * float(d)) / q)
+        caps.append(2**64 - 1 if c >= 2.0**64 else c)
+    assert m <= sum(caps), "total exceeds the on-demand ceiling"
+    units = [0] * n
+    capped = [False] * n
+    remaining = m
+    while remaining > 0:
+        ws = [0] * n
+        for i in range(n):
+            if not capped[i]:
+                ws[i] = usage_slots[i]
+        if not any(ws):
+            for i in range(n):
+                if not capped[i]:
+                    ws[i] = caps[i] - units[i]
+        share = apportion(remaining, ws)
+        violated = False
+        for i in range(n):
+            if not capped[i] and share[i] > caps[i]:
+                units[i] = caps[i]
+                capped[i] = True
+                remaining -= caps[i]
+                violated = True
+        if not violated:
+            for i in range(n):
+                if not capped[i]:
+                    units[i] = share[i]
+            break
+    return [u * q for u in units]
+
+
+# ------------------------------------------------------ broker pipeline
+
+
+STANDALONE_SPEC = {"kind": "Deterministic", "window": 0}
+
+
+def run_broker(market, users, settle):
+    """Port of BrokerRun::run_flat: (uid, demand) list -> outcome dict."""
+    slots = max(len(d) for _, d in users)
+    curve = [0] * slots
+    usage = []
+    for _, demand in users:
+        for t, d in enumerate(demand):
+            curve[t] += d
+        usage.append(sum(demand))
+    portfolio = billed_replay(market, STANDALONE_SPEC, curve)
+    standalone = [
+        billed_replay(market, STANDALONE_SPEC, demand, uid).total for uid, demand in users
+    ]
+    standalone_total = 0.0
+    for c in standalone:
+        standalone_total += c
+    bills = settle(portfolio.total, usage, market.p)
+    return {
+        "total": portfolio.total,
+        "reservations": portfolio.reservations,
+        "standalone_total": standalone_total,
+        "gain": standalone_total - portfolio.total,
+        "usage": usage,
+        "bills": bills,
+    }
+
+
+def assert_conserves(bills, total, what):
+    for name, order in [
+        ("forward", bills),
+        ("reverse", list(reversed(bills))),
+        ("sorted", sorted(bills)),
+    ]:
+        s = 0.0
+        for b in order:
+            s += b
+        assert bits(s) == bits(total), f"{what}: {name} sum {s!r} != total {total!r}"
+
+
+# ----------------------------------------------------------- the checks
+
+
+def check_broker_table1():
+    path = os.path.join(REPO_ROOT, "examples", "scenarios", "broker_table1.json")
+    spec = json.load(open(path))
+    assert spec["mode"] == "broker", "broker_table1.json must be a broker-mode spec"
+    mj = spec["market"]
+    market = Market(
+        mj["on_demand"],
+        [Contract(c["upfront"], c["rate"], c["term"]) for c in mj["contracts"]],
+    )
+    assert len(market) == len(mj["contracts"]), "no contract may be pruned"
+    users = list(enumerate(spec["trace"]["demands"]))
+    out = run_broker(market, users, settle_proportional)
+    assert out["reservations"] >= 1, "the aggregate curve must trigger reservations"
+    assert out["gain"] > 0.0, (
+        f"broker_table1 must show multiplexing gain: aggregate {out['total']} "
+        f"vs standalone {out['standalone_total']}"
+    )
+    assert_conserves(out["bills"], out["total"], "broker_table1")
+    print(
+        f"  broker_table1: {len(users)} users, aggregate {out['total']:.6f} "
+        f"<= standalone {out['standalone_total']:.6f} "
+        f"(gain {out['gain']:.6f}, {out['reservations']} reservations) OK"
+    )
+
+
+def gen_rotating_case(rng):
+    """Mirror of gen_rotating_case in tests/broker_props.rs (field order!)."""
+    n_users = 4 + rng.below(3)
+    p = 0.05 + rng.f64() * 0.2
+    alpha = 0.2 + rng.f64() * 0.4
+    cycles = 12 + rng.below(9)
+    return n_users, p, alpha, cycles
+
+
+def rotating_market_and_fleet(n_users, p, alpha, cycles):
+    beta = 2.5 * p
+    market = Market(
+        p,
+        [Contract(beta * (1.0 - alpha), alpha * p, 2 * n_users)],
+    )
+    assert len(market) == 1, "the rotating contract must survive pruning"
+    slots = n_users * cycles
+    users = [
+        (u, [1 if t % n_users == u else 0 for t in range(slots)]) for u in range(n_users)
+    ]
+    return market, users
+
+
+def check_rotating_props():
+    # Same stream as `broker_cost_is_sandwiched_on_rotating_fleets`.
+    rng = Rng(PROP_SEED)
+    for case in range(48):
+        n_users, p, alpha, cycles = gen_rotating_case(rng)
+        market, users = rotating_market_and_fleet(n_users, p, alpha, cycles)
+        out = run_broker(market, users, settle_proportional)
+        what = f"sandwich case {case} (n={n_users}, p={p:.4f}, a={alpha:.4f}, c={cycles})"
+        assert out["gain"] > 0.0, f"{what}: no gain ({out['total']} vs {out['standalone_total']})"
+        assert_conserves(out["bills"], out["total"], what)
+    print("  rotating sandwich: 48 prop cases show gain > 0 and conserve OK")
+
+    # Same stream as `od_capped_broker_never_bills_above_on_demand_...`.
+    rng = Rng(PROP_SEED)
+    for case in range(32):
+        n_users, p, alpha, cycles = gen_rotating_case(rng)
+        market, users = rotating_market_and_fleet(n_users, p, alpha, cycles)
+        out = run_broker(market, users, settle_od_capped)
+        what = f"od-capped case {case} (n={n_users}, p={p:.4f}, a={alpha:.4f}, c={cycles})"
+        for d, b in zip(out["usage"], out["bills"]):
+            od = p * float(d)
+            assert b <= od, f"{what}: bill {b!r} above on-demand cost {od!r}"
+        assert_conserves(out["bills"], out["total"], what)
+    print("  rotating od-capped: 32 prop cases respect caps and conserve OK")
+
+
+def check_settlement_unit_cases():
+    # Single user takes the whole total, to the bit.
+    total = 12.3456789
+    for settle in (settle_proportional, settle_od_capped):
+        b = settle(total, [400], 0.5)
+        assert len(b) == 1 and bits(b[0]) == bits(total), settle.__name__
+    # Zero-usage fleets still conserve under the proportional fallback.
+    b = settle_proportional(1.25, [0, 0, 0], 0.1)
+    assert_conserves(b, 1.25, "zero-usage fallback")
+    print("  settlement unit cases OK")
+
+
+def main():
+    print("cross-validating the shared-portfolio broker against the Python port…")
+    check_settlement_unit_cases()
+    check_broker_table1()
+    check_rotating_props()
+    print("validate_broker.py: all checks passed")
+
+
+if __name__ == "__main__":
+    main()
