@@ -1,0 +1,641 @@
+//! Learning-augmented acquisition policies (ROADMAP "learning-augmented
+//! policy family", after Wu et al. arXiv:1607.05178).
+//!
+//! The paper's online algorithms are worst-case optimal but ignore
+//! everything a trace reveals about itself. The two policies here learn
+//! from the demand stream while staying behind the ordinary
+//! [`Policy`]/`decide` interface, so the fleet engine, checkpointing, and
+//! the differential harness drive them like any other policy:
+//!
+//! * [`UcbThreshold`] — keeps the deterministic machinery of
+//!   [`MarketDeterministic`] but **learns the reservation-trigger
+//!   threshold**: each contract's trigger is `m · β_j` for a multiplier
+//!   `m` drawn from a small arm grid centered on the deterministic seed
+//!   arm `m = 1` (Algorithm 1's `z = β`). Arms are switched between
+//!   fixed-length epochs by a UCB1 rule over a policy-side cost estimate.
+//! * [`AdaptiveWindow`] — reuses the `forecast/` AR model to synthesize a
+//!   prediction window (Sec. VI semantics) and **adapts the trusted
+//!   window length to the measured forecast error**, degrading to
+//!   (approximately) windowless Algorithm 1 behavior when the forecast is
+//!   bad.
+//!
+//! Neither policy carries the paper's `2 − α` guarantee — see PERF.md
+//! §"Learned policies" for what is and is not a theorem here. The
+//! differential harness pins the sanity sandwich `joint DP ≤ learned`
+//! and the scenario reports account per-policy **regret vs the joint DP**.
+
+use super::market::MarketDeterministic;
+use super::{Decision, Policy, Reset, SaveState};
+use crate::forecast::{ArForecaster, Forecaster};
+use crate::pricing::Market;
+use crate::util::rng::Rng;
+use crate::util::state::{StateReader, StateWriter};
+
+/// The threshold-multiplier arm grid, as fractions of each contract's
+/// break-even threshold `β_j`. Arm `1.0` reproduces the deterministic
+/// policy's trigger exactly (the "seeded from the deterministic z" arm);
+/// smaller multipliers reserve more eagerly, larger ones more lazily.
+pub const ARM_MULTIPLIERS: [f64; 5] = [0.5, 0.75, 1.0, 1.25, 1.5];
+
+const ARMS: usize = ARM_MULTIPLIERS.len();
+
+/// Index of the multiplier-`1.0` arm in [`ARM_MULTIPLIERS`]: always
+/// explored first so the policy starts as plain Algorithm 1 on the menu.
+const SEED_ARM: usize = 2;
+
+/// Epoch length bounds: long enough for a reservation decision to show up
+/// in the cost signal, short enough that short traces still switch arms.
+const EPOCH_MIN: usize = 8;
+const EPOCH_MAX: usize = 256;
+
+/// UCB threshold selection over [`MarketDeterministic`].
+///
+/// Time is split into fixed-length epochs (length derived from the menu's
+/// shortest term, clamped to `[EPOCH_MIN, EPOCH_MAX]`). At each epoch
+/// boundary an arm — a per-contract threshold multiplier — is chosen by
+/// UCB1 over the per-epoch reward `clamp(1 − cost_est/od_cost, −1, 1)`,
+/// where `cost_est` is a **policy-side estimate** (upfront fees plus
+/// on-demand spend plus reserved slots at the menu's cheapest rate) and
+/// `od_cost` is the all-on-demand cost of the epoch's demand. The estimate
+/// is a learning signal, not billing — the `Ledger` remains the only
+/// source of truth for cost.
+///
+/// The `seed` only permutes the initial exploration order of the non-seed
+/// arms; everything else is deterministic. `reseed` restores the
+/// freshly-constructed state for a new seed (the reseed-equals-fresh
+/// invariant the fleet engine relies on, like `MarketRandomized`).
+pub struct UcbThreshold {
+    inner: MarketDeterministic,
+    seed: u64,
+    epoch_len: usize,
+    /// Flat copies of menu facts consulted in `decide` while the
+    /// [`Decision`] still borrows `inner` (field-disjoint access).
+    p: f64,
+    upfronts: Vec<f64>,
+    min_rate: f64,
+    arm: usize,
+    slot_in_epoch: usize,
+    epochs_done: u64,
+    pulls: [u64; ARMS],
+    reward_sum: [f64; ARMS],
+    order: [usize; ARMS],
+    epoch_cost: f64,
+    epoch_od_cost: f64,
+}
+
+impl UcbThreshold {
+    pub fn new(market: Market, seed: u64) -> UcbThreshold {
+        let epoch_len = market
+            .contracts()
+            .iter()
+            .map(|c| c.term)
+            .min()
+            .unwrap_or(EPOCH_MAX)
+            .clamp(EPOCH_MIN, EPOCH_MAX);
+        let p = market.p();
+        let upfronts: Vec<f64> = market.contracts().iter().map(|c| c.upfront).collect();
+        let min_rate =
+            market.contracts().iter().map(|c| c.rate).fold(f64::INFINITY, f64::min).min(p);
+        let mut inner = MarketDeterministic::new(market);
+        inner.set_label("UCB");
+        let mut policy = UcbThreshold {
+            inner,
+            seed,
+            epoch_len,
+            p,
+            upfronts,
+            min_rate,
+            arm: SEED_ARM,
+            slot_in_epoch: 0,
+            epochs_done: 0,
+            pulls: [0; ARMS],
+            reward_sum: [0.0; ARMS],
+            order: [0; ARMS],
+            epoch_cost: 0.0,
+            epoch_od_cost: 0.0,
+        };
+        policy.reseed(seed);
+        policy
+    }
+
+    /// Exploration order: the deterministic seed arm first, then the
+    /// remaining arms in a seed-shuffled order.
+    fn exploration_order(seed: u64) -> [usize; ARMS] {
+        let mut rest: Vec<usize> = (0..ARMS).filter(|&a| a != SEED_ARM).collect();
+        Rng::new(seed).shuffle(&mut rest);
+        let mut order = [SEED_ARM; ARMS];
+        order[1..].copy_from_slice(&rest);
+        order
+    }
+
+    /// Redraw exploration order and wipe all learned statistics, restoring
+    /// the freshly-constructed state for `seed`.
+    pub fn reseed(&mut self, seed: u64) {
+        self.seed = seed;
+        self.order = Self::exploration_order(seed);
+        self.arm = self.order[0];
+        self.pulls = [0; ARMS];
+        self.reward_sum = [0.0; ARMS];
+        self.epochs_done = 0;
+        self.slot_in_epoch = 0;
+        self.epoch_cost = 0.0;
+        self.epoch_od_cost = 0.0;
+        self.inner.reset();
+        self.apply_arm();
+    }
+
+    /// Push the current arm's thresholds into the inner policy.
+    /// `MarketDeterministic::reset` deliberately leaves thresholds alone,
+    /// so every path that changes `arm` or resets `inner` re-applies.
+    fn apply_arm(&mut self) {
+        let mult = ARM_MULTIPLIERS[self.arm];
+        for j in 0..self.inner.market().len() {
+            let beta = self.inner.market().beta(j);
+            self.inner.set_threshold(j, mult * beta);
+        }
+    }
+
+    /// UCB1 over mean reward; unexplored arms first in `order`; ties break
+    /// to the lowest arm index (deterministic).
+    fn select_arm(&self) -> usize {
+        for &a in &self.order {
+            if self.pulls[a] == 0 {
+                return a;
+            }
+        }
+        let ln_n = (self.epochs_done as f64).ln();
+        let mut best = 0;
+        let mut best_idx = f64::NEG_INFINITY;
+        for a in 0..ARMS {
+            let mean = self.reward_sum[a] / self.pulls[a] as f64;
+            let idx = mean + (2.0 * ln_n / self.pulls[a] as f64).sqrt();
+            if idx > best_idx {
+                best_idx = idx;
+                best = a;
+            }
+        }
+        best
+    }
+
+    fn finish_epoch(&mut self) {
+        let reward = if self.epoch_od_cost > 0.0 {
+            (1.0 - self.epoch_cost / self.epoch_od_cost).clamp(-1.0, 1.0)
+        } else {
+            0.0
+        };
+        self.pulls[self.arm] += 1;
+        self.reward_sum[self.arm] += reward;
+        self.epochs_done += 1;
+        self.epoch_cost = 0.0;
+        self.epoch_od_cost = 0.0;
+        self.slot_in_epoch = 0;
+    }
+
+    /// Arm pull counts, in [`ARM_MULTIPLIERS`] order (diagnostics/tests).
+    pub fn pulls(&self) -> [u64; ARMS] {
+        self.pulls
+    }
+}
+
+impl Policy for UcbThreshold {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision<'_> {
+        if self.slot_in_epoch == 0 {
+            self.arm = self.select_arm();
+            self.apply_arm();
+        }
+        let dec = self.inner.decide(demand, &[]);
+        let mut fees = 0.0;
+        for &(j, n) in dec.reservations {
+            fees += self.upfronts[j] * n as f64;
+        }
+        let served_reserved = demand.saturating_sub(dec.on_demand);
+        self.epoch_cost +=
+            fees + self.p * dec.on_demand as f64 + self.min_rate * served_reserved as f64;
+        self.epoch_od_cost += self.p * demand as f64;
+        self.slot_in_epoch += 1;
+        if self.slot_in_epoch == self.epoch_len {
+            self.finish_epoch();
+        }
+        dec
+    }
+}
+
+impl Reset for UcbThreshold {
+    fn reset(&mut self) {
+        let seed = self.seed;
+        self.reseed(seed);
+    }
+}
+
+impl SaveState for UcbThreshold {
+    /// Wire: seed, arm, slot_in_epoch, epochs_done, arm table (count-
+    /// prefixed `(pulls u64, reward f64, order usize)` triples), epoch
+    /// accumulators, then the inner policy blob (which carries the live
+    /// thresholds, so restore does not re-apply the arm).
+    fn save_state(&self, w: &mut StateWriter) {
+        w.u64(self.seed);
+        w.usize(self.arm);
+        w.usize(self.slot_in_epoch);
+        w.u64(self.epochs_done);
+        w.usize(ARMS);
+        for a in 0..ARMS {
+            w.u64(self.pulls[a]);
+            w.f64_bits(self.reward_sum[a]);
+            w.usize(self.order[a]);
+        }
+        w.f64_bits(self.epoch_cost);
+        w.f64_bits(self.epoch_od_cost);
+        self.inner.save_state(w);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.seed = r.u64()?;
+        let arm = r.usize()?;
+        anyhow::ensure!(arm < ARMS, "UCB state: arm index {arm} out of range (grid has {ARMS})");
+        self.arm = arm;
+        let slot = r.usize()?;
+        anyhow::ensure!(
+            slot < self.epoch_len,
+            "UCB state: slot_in_epoch {slot} out of range (epoch length {})",
+            self.epoch_len
+        );
+        self.slot_in_epoch = slot;
+        self.epochs_done = r.u64()?;
+        let n = r.seq_len(8 + 8 + 8)?;
+        anyhow::ensure!(n == ARMS, "UCB state: checkpoint has {n} arms, grid has {ARMS}");
+        let mut seen = [false; ARMS];
+        for a in 0..ARMS {
+            self.pulls[a] = r.u64()?;
+            self.reward_sum[a] = r.f64_bits()?;
+            let o = r.usize()?;
+            anyhow::ensure!(
+                o < ARMS && !seen[o],
+                "UCB state: exploration order is not a permutation of 0..{ARMS}"
+            );
+            seen[o] = true;
+            self.order[a] = o;
+        }
+        self.epoch_cost = r.f64_bits()?;
+        self.epoch_od_cost = r.f64_bits()?;
+        anyhow::ensure!(
+            self.epoch_cost.is_finite() && self.epoch_od_cost.is_finite(),
+            "UCB state: non-finite epoch accumulators"
+        );
+        self.inner.restore_state(r)
+    }
+}
+
+/// AR forecaster shape for [`AdaptiveWindow`]: small-order model refit
+/// frequently on a bounded rolling history.
+const AR_K: usize = 3;
+const AR_REFIT: usize = 32;
+const AR_HISTORY: usize = 256;
+
+/// Slots of pure observation before the forecast is trusted at all.
+const WARMUP: usize = 32;
+/// EWMA smoothing for the relative one-step-ahead forecast error.
+const ERR_SMOOTH: f64 = 0.1;
+/// Error below which the full window is trusted.
+const ERR_FULL: f64 = 0.2;
+/// Error at or above which the policy degrades to the windowless fallback.
+const ERR_NONE: f64 = 0.6;
+/// Cap on the synthetic window length (beyond ~a few β's worth of slots
+/// the AR tail is noise anyway).
+const W_CAP: usize = 16;
+
+/// Forecast-driven adaptive prediction windows.
+///
+/// Wraps a windowed [`MarketDeterministic`] (`w_max = min(min τ − 1,
+/// W_CAP)`) and feeds it a **synthetic** prediction window built from the
+/// streaming AR forecaster instead of oracle demand. The trusted length
+/// `w_cur ∈ {0, w_max/2, w_max}` follows an EWMA of the relative one-step
+/// forecast error: accurate forecasts widen the window toward Sec. VI's
+/// Algorithm 3 behavior, inaccurate ones shrink it to 0, where the
+/// synthetic window is all zeros and the policy approximates windowless
+/// Algorithm 1 (the inner policy still applies the window guard, so the
+/// fallback is conservative, never over-reserving past current demand).
+///
+/// The inner policy is always fed exactly `w_max` slots — the `Policy`
+/// contract forbids shrinking the horizon mid-run — with slots beyond
+/// `w_cur` zeroed. To the driver this is an **online** policy
+/// (`window() == 0`): the engine hands it no oracle future and the
+/// forecast window is manufactured internally.
+pub struct AdaptiveWindow {
+    inner: MarketDeterministic,
+    forecaster: ArForecaster,
+    w_max: usize,
+    w_cur: usize,
+    err_ewma: f64,
+    last_pred: f64,
+    t: usize,
+    synth: Vec<u32>,
+    pred: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl AdaptiveWindow {
+    pub fn new(market: Market) -> AdaptiveWindow {
+        let w_max = market
+            .contracts()
+            .iter()
+            .map(|c| c.term - 1)
+            .min()
+            .unwrap_or(0)
+            .min(W_CAP);
+        let mut inner = if w_max == 0 {
+            MarketDeterministic::new(market)
+        } else {
+            MarketDeterministic::with_window(market, w_max)
+        };
+        inner.set_label("AdaptiveWindow");
+        AdaptiveWindow {
+            inner,
+            forecaster: ArForecaster::new(AR_K, AR_REFIT, AR_HISTORY),
+            w_max,
+            w_cur: 0,
+            err_ewma: 0.0,
+            last_pred: 0.0,
+            t: 0,
+            synth: Vec::with_capacity(w_max),
+            pred: Vec::with_capacity(w_max.max(1)),
+            scratch: Vec::with_capacity(AR_K + 1),
+        }
+    }
+
+    /// Current trusted window length (diagnostics/tests).
+    pub fn current_window(&self) -> usize {
+        self.w_cur
+    }
+
+    /// Current smoothed relative forecast error (diagnostics/tests).
+    pub fn forecast_error(&self) -> f64 {
+        self.err_ewma
+    }
+}
+
+impl Policy for AdaptiveWindow {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn decide(&mut self, demand: u32, _future: &[u32]) -> Decision<'_> {
+        // Score the forecast made one slot ago against what just arrived.
+        if self.t > 0 {
+            let rel = (self.last_pred - demand as f64).abs() / demand.max(1) as f64;
+            self.err_ewma = (1.0 - ERR_SMOOTH) * self.err_ewma + ERR_SMOOTH * rel;
+        }
+        self.forecaster.observe(demand);
+        self.t += 1;
+        self.w_cur = if self.w_max == 0 || self.t <= WARMUP || self.err_ewma >= ERR_NONE {
+            0
+        } else if self.err_ewma <= ERR_FULL {
+            self.w_max
+        } else {
+            self.w_max / 2
+        };
+        // Predict at least one step so the error tracker always has a
+        // forecast to score, even while the window is collapsed.
+        let horizon = self.w_max.max(1);
+        self.forecaster.predict_f64_into(horizon, &mut self.pred, &mut self.scratch);
+        self.last_pred = self.pred[0];
+        self.synth.clear();
+        for i in 0..self.w_max {
+            let v = if i < self.w_cur { self.pred[i].round().max(0.0) as u32 } else { 0 };
+            self.synth.push(v);
+        }
+        self.inner.decide(demand, &self.synth)
+    }
+}
+
+impl Reset for AdaptiveWindow {
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.forecaster.reset();
+        self.w_cur = 0;
+        self.err_ewma = 0.0;
+        self.last_pred = 0.0;
+        self.t = 0;
+        self.synth.clear();
+        self.pred.clear();
+        self.scratch.clear();
+    }
+}
+
+impl SaveState for AdaptiveWindow {
+    /// Wire: forecaster blob, error tracker (`err_ewma`, `last_pred`),
+    /// `w_cur`, `t`, then the inner policy blob. `w_max` is derived from
+    /// the constructor's market and cross-checked.
+    fn save_state(&self, w: &mut StateWriter) {
+        self.forecaster.save_state(w);
+        w.f64_bits(self.err_ewma);
+        w.f64_bits(self.last_pred);
+        w.usize(self.w_cur);
+        w.usize(self.t);
+        self.inner.save_state(w);
+    }
+
+    fn restore_state(&mut self, r: &mut StateReader<'_>) -> anyhow::Result<()> {
+        self.forecaster.restore_state(r)?;
+        self.err_ewma = r.f64_bits()?;
+        self.last_pred = r.f64_bits()?;
+        anyhow::ensure!(
+            self.err_ewma.is_finite() && self.err_ewma >= 0.0 && self.last_pred.is_finite(),
+            "adaptive-window state: corrupt error tracker"
+        );
+        let w_cur = r.usize()?;
+        anyhow::ensure!(
+            w_cur <= self.w_max,
+            "adaptive-window state: window {w_cur} exceeds maximum {}",
+            self.w_max
+        );
+        self.w_cur = w_cur;
+        self.t = r.usize()?;
+        self.inner.restore_state(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pricing::{Contract, Pricing};
+
+    fn menu() -> Market {
+        Market::new(
+            0.05,
+            vec![
+                Contract { upfront: 1.0, rate: 0.025, term: 100 },
+                Contract { upfront: 1.5, rate: 0.01, term: 300 },
+            ],
+        )
+    }
+
+    fn single() -> Market {
+        Market::single(Pricing::normalized(0.2, 0.2, 40))
+    }
+
+    fn demands(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(6) as u32).collect()
+    }
+
+    fn run_decisions(p: &mut dyn Policy, demands: &[u32]) -> Vec<(u32, Vec<(usize, u32)>)> {
+        demands
+            .iter()
+            .map(|&d| {
+                let dec = p.decide(d, &[]);
+                (dec.on_demand, dec.reservations.to_vec())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ucb_reseed_matches_fresh_instance() {
+        let ds = demands(700, 9);
+        let mut reused = UcbThreshold::new(menu(), 1);
+        run_decisions(&mut reused, &ds); // dirty it with a different seed
+        for seed in [0u64, 7, 42] {
+            reused.reseed(seed);
+            let mut fresh = UcbThreshold::new(menu(), seed);
+            assert_eq!(
+                run_decisions(&mut reused, &ds),
+                run_decisions(&mut fresh, &ds),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn ucb_explores_every_arm_on_long_traces() {
+        let ds = demands(ARMS * 300, 3);
+        let mut p = UcbThreshold::new(menu(), 5);
+        run_decisions(&mut p, &ds);
+        assert!(
+            p.pulls().iter().all(|&n| n > 0),
+            "every arm should be pulled at least once: {:?}",
+            p.pulls()
+        );
+    }
+
+    #[test]
+    fn ucb_save_restore_resumes_bit_identically() {
+        let ds = demands(900, 11);
+        let (head, tail) = ds.split_at(450);
+        let mut live = UcbThreshold::new(menu(), 13);
+        run_decisions(&mut live, head);
+        let mut w = StateWriter::new();
+        live.save_state(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut restored = UcbThreshold::new(menu(), 99); // wrong seed on purpose
+        run_decisions(&mut restored, &ds[..100]); // and dirty state
+        let mut r = StateReader::new(&bytes);
+        restored.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(run_decisions(&mut live, tail), run_decisions(&mut restored, tail));
+    }
+
+    #[test]
+    fn ucb_restore_rejects_corrupt_arm_table() {
+        let mut w = StateWriter::new();
+        w.u64(1); // seed
+        w.usize(0); // arm
+        w.usize(0); // slot_in_epoch
+        w.u64(0); // epochs
+        w.usize(1 << 50); // claims ~10^15 arms in an empty payload
+        let bytes = w.into_bytes();
+        let mut p = UcbThreshold::new(menu(), 1);
+        let err = p.restore_state(&mut StateReader::new(&bytes)).unwrap_err();
+        assert!(err.to_string().contains("exceeds remaining capacity"), "{err}");
+    }
+
+    #[test]
+    fn ucb_restore_rejects_bad_order_permutation() {
+        let mut w = StateWriter::new();
+        w.u64(1);
+        w.usize(0);
+        w.usize(0);
+        w.u64(0);
+        w.usize(ARMS);
+        for _ in 0..ARMS {
+            w.u64(0);
+            w.f64_bits(0.0);
+            w.usize(0); // every arm claims order slot 0
+        }
+        w.f64_bits(0.0);
+        w.f64_bits(0.0);
+        let bytes = w.into_bytes();
+        let mut p = UcbThreshold::new(menu(), 1);
+        let err = p.restore_state(&mut StateReader::new(&bytes)).unwrap_err();
+        assert!(err.to_string().contains("permutation"), "{err}");
+    }
+
+    #[test]
+    fn ucb_on_single_contract_market_runs() {
+        let ds = demands(300, 21);
+        let mut p = UcbThreshold::new(single(), 4);
+        let out = run_decisions(&mut p, &ds);
+        assert_eq!(out.len(), ds.len());
+    }
+
+    #[test]
+    fn adaptive_window_reset_matches_fresh_instance() {
+        let ds = demands(500, 17);
+        let mut reused = AdaptiveWindow::new(menu());
+        run_decisions(&mut reused, &ds);
+        reused.reset();
+        let mut fresh = AdaptiveWindow::new(menu());
+        assert_eq!(run_decisions(&mut reused, &ds), run_decisions(&mut fresh, &ds));
+    }
+
+    #[test]
+    fn adaptive_window_save_restore_resumes_bit_identically() {
+        let ds = demands(600, 23);
+        let (head, tail) = ds.split_at(300);
+        let mut live = AdaptiveWindow::new(menu());
+        run_decisions(&mut live, head);
+        let mut w = StateWriter::new();
+        live.save_state(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut restored = AdaptiveWindow::new(menu());
+        run_decisions(&mut restored, &ds[..50]); // dirty state
+        let mut r = StateReader::new(&bytes);
+        restored.restore_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(run_decisions(&mut live, tail), run_decisions(&mut restored, tail));
+        assert!((live.forecast_error() - restored.forecast_error()).abs() == 0.0);
+    }
+
+    #[test]
+    fn adaptive_window_trusts_predictable_traces() {
+        // Perfectly periodic demand: the AR(3) forecaster locks on and the
+        // window should open up after warmup.
+        let ds: Vec<u32> = (0..400).map(|t| 2 + (t % 2) as u32).collect();
+        let mut p = AdaptiveWindow::new(menu());
+        run_decisions(&mut p, &ds);
+        assert!(
+            p.current_window() > 0,
+            "window stayed closed on a predictable trace (err={})",
+            p.forecast_error()
+        );
+    }
+
+    #[test]
+    fn adaptive_window_restore_rejects_oversized_history() {
+        let mut w = StateWriter::new();
+        w.usize(1 << 50); // forecaster history length bomb
+        let bytes = w.into_bytes();
+        let mut p = AdaptiveWindow::new(menu());
+        assert!(p.restore_state(&mut StateReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn learned_policies_keep_window_zero_for_the_driver() {
+        assert_eq!(UcbThreshold::new(menu(), 1).window(), 0);
+        assert_eq!(AdaptiveWindow::new(menu()).window(), 0);
+    }
+}

@@ -169,6 +169,25 @@ impl MarketDeterministic {
         self.scans[j].violations()
     }
 
+    /// Overwrite contract `j`'s reservation-trigger threshold **mid-run**
+    /// (market currency, like [`with_thresholds`](Self::with_thresholds)).
+    /// Thresholds enter only the trigger comparison `p·V_j > z_j` — no
+    /// scan, queue, or coverage state derives from them — so swapping them
+    /// between slots is safe and takes effect at the next `decide`. This is
+    /// the hook the learning-augmented policies
+    /// ([`crate::algos::learned`]) use to switch arms; note that
+    /// [`Reset`](super::Reset) deliberately does NOT restore thresholds, so
+    /// a learned wrapper's reset/reseed must re-set them itself.
+    pub(crate) fn set_threshold(&mut self, j: ContractId, z: f64) {
+        assert!(z >= 0.0, "threshold must be non-negative, got {z}");
+        self.thresholds[j] = z;
+    }
+
+    /// Rename the policy for reports (learned wrappers relabel their inner
+    /// machinery the same way [`MarketRandomized`] does).
+    pub(crate) fn set_label(&mut self, label: &'static str) {
+        self.label = label;
+    }
 }
 
 impl super::Reset for MarketDeterministic {

@@ -16,6 +16,7 @@ pub mod baselines;
 pub mod density;
 pub mod deterministic;
 pub(crate) mod kernels;
+pub mod learned;
 pub mod market;
 pub mod offline;
 pub mod randomized;

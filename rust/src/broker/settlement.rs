@@ -130,6 +130,30 @@ fn bills_from_units(units: &[u64], q: f64) -> Vec<f64> {
     units.iter().map(|&u| u as f64 * q).collect()
 }
 
+/// Saturating `f64 → u64` quantum-count conversion, for cap values that
+/// may exceed the integer range.
+///
+/// The boundary deserves spelling out: `u64::MAX as f64` rounds **up** to
+/// `2^64` (u64::MAX = 2^64 − 1 is not representable), so the obvious guard
+/// `c >= u64::MAX as f64` actually compares against `2^64` — it admits
+/// every representable f64 below `2^64`, the largest being
+/// `2^64 − 2048`, all of which convert losslessly. Rust's `as` cast has
+/// saturated on overflow since 1.45, so the behavior here is belt and
+/// braces; the point of the helper is that the boundary is now *named*,
+/// documented, and pinned by tests instead of re-derived at each call
+/// site. NaN and negative inputs map to 0 (a cap that cannot absorb
+/// anything), infinities and `≥ 2^64` to `u64::MAX`.
+fn saturating_quanta(c: f64) -> u64 {
+    if c.is_nan() || c <= 0.0 {
+        0
+    } else if c >= 18_446_744_073_709_551_616.0 {
+        // 2^64: the rounded value of `u64::MAX as f64`
+        u64::MAX
+    } else {
+        c as u64
+    }
+}
+
 /// Shared entry guard: zero totals settle to all-zero bills; negative or
 /// non-finite totals are rejected.
 fn check_total(total: f64, n: usize) -> Result<Option<Vec<f64>>, SettlementError> {
@@ -202,17 +226,17 @@ impl Settlement for OnDemandCapped {
             .iter()
             .map(|u| {
                 let od = p * u.demand_slots as f64;
-                let c = (od / q).floor();
-                if c >= u64::MAX as f64 {
-                    u64::MAX
-                } else {
-                    c as u64
-                }
+                saturating_quanta((od / q).floor())
             })
             .collect();
         let cap_total: u128 = caps.iter().map(|&c| c as u128).sum();
         if (m as u128) > cap_total {
-            let cap_sum: f64 = usage.iter().map(|u| p * u.demand_slots as f64).sum();
+            // Report the cap sum the comparison actually used: the exact
+            // integer quantum count scaled back to money. A float sum of
+            // the per-user `p·d_i` here could overflow to infinity (or
+            // round the other way) on extreme fleets and contradict the
+            // integer verdict above.
+            let cap_sum = cap_total as f64 * q;
             return Err(SettlementError::TotalExceedsCaps { total, cap_total: cap_sum });
         }
 
@@ -340,6 +364,68 @@ mod tests {
         let u = usage(&[1, 1]);
         let err = OnDemandCapped.settle(10.0, &u, 0.1).unwrap_err();
         assert!(matches!(err, SettlementError::TotalExceedsCaps { .. }), "{err}");
+    }
+
+    #[test]
+    fn saturating_quanta_pins_the_boundary() {
+        const TWO_POW_64: f64 = 18_446_744_073_709_551_616.0;
+        // the rounding fact the helper documents
+        assert_eq!(u64::MAX as f64, TWO_POW_64);
+        // largest f64 strictly below 2^64 converts losslessly
+        let below = f64::from_bits(TWO_POW_64.to_bits() - 1);
+        assert_eq!(below, 18_446_744_073_709_549_568.0); // 2^64 - 2048
+        assert_eq!(saturating_quanta(below), 18_446_744_073_709_549_568);
+        // at and above 2^64: saturate
+        assert_eq!(saturating_quanta(TWO_POW_64), u64::MAX);
+        assert_eq!(saturating_quanta(TWO_POW_64 * 2.0), u64::MAX);
+        assert_eq!(saturating_quanta(f64::INFINITY), u64::MAX);
+        // degenerate inputs absorb nothing
+        assert_eq!(saturating_quanta(f64::NAN), 0);
+        assert_eq!(saturating_quanta(-1.0), 0);
+        assert_eq!(saturating_quanta(0.0), 0);
+        assert_eq!(saturating_quanta(0.75), 0);
+        assert_eq!(saturating_quanta(3.0), 3);
+    }
+
+    #[test]
+    fn od_capped_survives_saturated_caps() {
+        // A cap near the u64 boundary: q is tiny (total ≈ 1), so od/q for a
+        // huge user overflows the quantum range and must saturate rather
+        // than wrap. The settlement still conserves and respects caps.
+        let u = usage(&[u64::MAX / 2, 4]);
+        let p = 1e6;
+        let total = 1.0;
+        let bills = OnDemandCapped.settle(total, &u, p).unwrap();
+        assert_conserves(&bills, total);
+        for (b, uu) in bills.iter().zip(&u) {
+            assert!(*b <= p * uu.demand_slots as f64, "bill {b} above cap");
+        }
+    }
+
+    #[test]
+    fn od_capped_error_reports_the_exact_cap_sum() {
+        // Caps are 10 quanta each of the total's quantum; the reported
+        // cap_total must be the integer quantum count scaled by q — i.e.
+        // exactly representable and strictly below the rejected total.
+        let u = usage(&[1, 1]);
+        let p = 0.1;
+        let total = 10.0;
+        let err = OnDemandCapped.settle(total, &u, p).unwrap_err();
+        match err {
+            SettlementError::TotalExceedsCaps { total: t, cap_total } => {
+                assert_eq!(t.to_bits(), total.to_bits());
+                assert!(cap_total < total, "cap_total {cap_total} not below total");
+                // consistent with the integer comparison: cap_total is a
+                // whole number of quanta
+                let (_, q) = quantum(total);
+                let units = cap_total / q;
+                assert_eq!(units.fract(), 0.0, "cap_total {cap_total} not quantum-aligned");
+                // and within one quantum per user of the float cap sum
+                let float_sum: f64 = u.iter().map(|x| p * x.demand_slots as f64).sum();
+                assert!((float_sum - cap_total).abs() <= q * u.len() as f64);
+            }
+            other => panic!("expected TotalExceedsCaps, got {other:?}"),
+        }
     }
 
     #[test]

@@ -259,6 +259,59 @@ impl ArForecaster {
     }
 }
 
+impl crate::algos::Reset for ArForecaster {
+    fn reset(&mut self) {
+        self.history.clear();
+        self.coef.iter_mut().for_each(|c| *c = 0.0);
+        self.since_fit = 0;
+    }
+}
+
+impl crate::algos::SaveState for ArForecaster {
+    /// Wire: history (usize count + one u32 per observation), coefficients
+    /// (usize count + f64 bits — count must equal `k + 1`), `since_fit`.
+    /// Only dynamic state travels; `k`/`refit_every`/`max_history` are
+    /// constructor parameters and cross-checked on restore.
+    fn save_state(&self, w: &mut crate::util::state::StateWriter) {
+        w.usize(self.history.len());
+        for &d in &self.history {
+            w.u32(d);
+        }
+        w.usize(self.coef.len());
+        for &c in &self.coef {
+            w.f64_bits(c);
+        }
+        w.usize(self.since_fit);
+    }
+
+    fn restore_state(
+        &mut self,
+        r: &mut crate::util::state::StateReader<'_>,
+    ) -> anyhow::Result<()> {
+        let n = r.seq_len(4)?;
+        anyhow::ensure!(
+            n <= self.max_history,
+            "forecaster state: history length {n} exceeds max_history {}",
+            self.max_history
+        );
+        self.history.clear();
+        for _ in 0..n {
+            self.history.push_back(r.u32()?);
+        }
+        let m = r.seq_len(8)?;
+        anyhow::ensure!(
+            m == self.coef.len(),
+            "forecaster state: {m} coefficients, expected k+1={}",
+            self.coef.len()
+        );
+        for c in self.coef.iter_mut() {
+            *c = r.f64_bits()?;
+        }
+        self.since_fit = r.usize()?;
+        Ok(())
+    }
+}
+
 impl Forecaster for ArForecaster {
     fn name(&self) -> String {
         format!("ar({})", self.k)

@@ -329,6 +329,8 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "separate" => PolicySpec::Separate,
         "deterministic" => PolicySpec::Deterministic { z: None, window },
         "randomized" => PolicySpec::Randomized { window, seed: policy_seed },
+        "ucb" => PolicySpec::Ucb { seed: policy_seed },
+        "adaptive_window" => PolicySpec::AdaptiveWindow,
         other => anyhow::bail!(expected_one_of("--policy", other, scenario::POLICY_NAMES)),
     };
 
@@ -724,6 +726,39 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ]));
     }
 
+    // (c'') learned-policy decide latency (UCB threshold selection and the
+    // forecast-driven adaptive window), tracked under a separate `learned`
+    // section so `decide_ns` stays the 5-policy series CI pins.
+    eprintln!("bench: learned-policy decide latency...");
+    let mut learned_rows = Vec::new();
+    for spec in cloudreserve::sim::fleet::learned_specs(policy_seed) {
+        let r = bencher.run(&format!("decide/{}", spec.name()), || {
+            let mut p = FleetPolicy::build(&spec, &market, 1);
+            let mut acc = 0u32;
+            for &d in &curve {
+                let dec = p.decide(d, &[]);
+                acc = acc.wrapping_add(dec.total_reserved() ^ dec.on_demand);
+            }
+            acc
+        });
+        let ns_per_decide = r.median_ns() / micro_slots as f64;
+        println!(
+            "learned   {:<28} {:>8.1} ns/decide  (trace {})",
+            spec.name(),
+            ns_per_decide,
+            fmt_ns(r.median_ns())
+        );
+        learned_rows.push(Json::obj(vec![
+            ("policy", Json::Str(spec.name())),
+            ("ns_per_decide", Json::Num(ns_per_decide)),
+            ("detail", r.to_json()),
+        ]));
+    }
+    let learned_json = Json::obj(vec![
+        ("slots", Json::Num(micro_slots as f64)),
+        ("decide_ns", Json::Arr(learned_rows)),
+    ]);
+
     // (c') flat hot-path kernels (PERF.md §Flat kernels): the dense
     // rotating-base WindowScan, coalesced-run ledger billing, and the menu
     // policy's per-slot k-contract sweep. The end-to-end suite numbers
@@ -1027,6 +1062,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("offline_dp", Json::Arr(dp_rows)),
         ("offline_dp_joint", Json::Arr(joint_rows)),
         ("decide_ns", Json::Arr(decide_rows)),
+        ("learned", learned_json),
         ("kernels", kernels_json),
         ("fleet_scale", fleet_json),
         ("broker", broker_json),

@@ -85,6 +85,11 @@ pub fn spec_fingerprint(spec: &PolicySpec) -> u64 {
             w.usize(window);
             w.u64(seed);
         }
+        PolicySpec::Ucb { seed } => {
+            w.u8(5);
+            w.u64(seed);
+        }
+        PolicySpec::AdaptiveWindow => w.u8(6),
     }
     fnv1a64(w.bytes())
 }
@@ -462,6 +467,15 @@ mod tests {
         assert_ne!(spec_fingerprint(&s1), spec_fingerprint(&s3));
         assert_ne!(spec_fingerprint(&s3), spec_fingerprint(&s4));
         assert_eq!(spec_fingerprint(&s1), spec_fingerprint(&s1.clone()));
+
+        let u1 = PolicySpec::Ucb { seed: 11 };
+        let u2 = PolicySpec::Ucb { seed: 12 };
+        let aw = PolicySpec::AdaptiveWindow;
+        assert_ne!(spec_fingerprint(&u1), spec_fingerprint(&u2));
+        assert_ne!(spec_fingerprint(&u1), spec_fingerprint(&aw));
+        assert_ne!(spec_fingerprint(&u1), spec_fingerprint(&s1));
+        assert_ne!(spec_fingerprint(&aw), spec_fingerprint(&s3));
+        assert_eq!(spec_fingerprint(&u1), spec_fingerprint(&u1.clone()));
     }
 
     #[test]

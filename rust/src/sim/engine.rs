@@ -33,6 +33,7 @@
 
 use crate::algos::baselines::{AllOnDemand, AllReserved, Separate};
 use crate::algos::deterministic::Deterministic;
+use crate::algos::learned::{AdaptiveWindow, UcbThreshold};
 use crate::algos::market::{MarketDeterministic, MarketRandomized, PinnedSingle};
 use crate::algos::randomized::Randomized;
 use std::path::Path;
@@ -46,8 +47,8 @@ use crate::pricing::Market;
 use crate::runtime::checkpoint::{
     market_fingerprint, spec_fingerprint, Checkpoint, QuarantinedChunk,
 };
-use crate::sim::all_on_demand_cost;
 use crate::sim::fleet::{FleetAggregate, FleetResult, PolicySpec, UserResult};
+use crate::sim::{all_on_demand_cost, per_user_seed};
 use crate::trace::io::{ChunkCorrupt, ChunkedPopulation};
 use crate::trace::FlatPopulation;
 use crate::util::faults::{backoff_delay, site, Fault, FaultPlan, KillPoint};
@@ -68,12 +69,29 @@ pub enum FleetPolicy {
     MarketRandomized(MarketRandomized),
     PinnedAllReserved(PinnedSingle<AllReserved>),
     PinnedSeparate(PinnedSingle<Separate>),
+    Ucb(UcbThreshold),
+    AdaptiveWindow(AdaptiveWindow),
 }
 
 impl FleetPolicy {
     /// Instantiate for one user (the monomorphic mirror of
     /// [`PolicySpec::build`]).
     pub fn build(spec: &PolicySpec, market: &Market, user_id: u32) -> FleetPolicy {
+        // Learned policies run the menu machinery on every market — handle
+        // them before the single/empty routing so both engine paths build
+        // identical instances (mirrors `PolicySpec::build`).
+        match *spec {
+            PolicySpec::Ucb { seed } => {
+                return FleetPolicy::Ucb(UcbThreshold::new(
+                    market.clone(),
+                    per_user_seed(seed, user_id),
+                ))
+            }
+            PolicySpec::AdaptiveWindow => {
+                return FleetPolicy::AdaptiveWindow(AdaptiveWindow::new(market.clone()))
+            }
+            _ => {}
+        }
         if market.is_single() {
             let pricing = market.contract_pricing(0);
             return match *spec {
@@ -85,8 +103,9 @@ impl FleetPolicy {
                     FleetPolicy::Deterministic(Deterministic::new(pricing, z, window))
                 }
                 PolicySpec::Randomized { window, seed } => FleetPolicy::Randomized(
-                    Randomized::with_window(pricing, window, seed ^ ((user_id as u64) << 17)),
+                    Randomized::with_window(pricing, window, per_user_seed(seed, user_id)),
                 ),
+                PolicySpec::Ucb { .. } | PolicySpec::AdaptiveWindow => unreachable!(),
             };
         }
         if market.is_empty() {
@@ -112,13 +131,13 @@ impl FleetPolicy {
                 market.len()
             ),
             PolicySpec::Randomized { window, seed } => {
-                let seed = seed ^ ((user_id as u64) << 17);
                 FleetPolicy::MarketRandomized(MarketRandomized::with_window(
                     market.clone(),
                     window,
-                    seed,
+                    per_user_seed(seed, user_id),
                 ))
             }
+            PolicySpec::Ucb { .. } | PolicySpec::AdaptiveWindow => unreachable!(),
         }
     }
 
@@ -135,6 +154,8 @@ impl FleetPolicy {
             FleetPolicy::MarketRandomized(p) => p.decide(demand, future),
             FleetPolicy::PinnedAllReserved(p) => p.decide(demand, future),
             FleetPolicy::PinnedSeparate(p) => p.decide(demand, future),
+            FleetPolicy::Ucb(p) => p.decide(demand, future),
+            FleetPolicy::AdaptiveWindow(p) => p.decide(demand, future),
         }
     }
 
@@ -150,6 +171,8 @@ impl FleetPolicy {
             FleetPolicy::MarketRandomized(p) => p.window(),
             FleetPolicy::PinnedAllReserved(p) => p.window(),
             FleetPolicy::PinnedSeparate(p) => p.window(),
+            FleetPolicy::Ucb(p) => p.window(),
+            FleetPolicy::AdaptiveWindow(p) => p.window(),
         }
     }
 
@@ -166,6 +189,8 @@ impl FleetPolicy {
             FleetPolicy::MarketRandomized(_) => 6,
             FleetPolicy::PinnedAllReserved(_) => 7,
             FleetPolicy::PinnedSeparate(_) => 8,
+            FleetPolicy::Ucb(_) => 9,
+            FleetPolicy::AdaptiveWindow(_) => 10,
         }
     }
 }
@@ -183,6 +208,8 @@ impl SaveState for FleetPolicy {
             FleetPolicy::MarketRandomized(p) => p.save_state(w),
             FleetPolicy::PinnedAllReserved(p) => p.save_state(w),
             FleetPolicy::PinnedSeparate(p) => p.save_state(w),
+            FleetPolicy::Ucb(p) => p.save_state(w),
+            FleetPolicy::AdaptiveWindow(p) => p.save_state(w),
         }
     }
 
@@ -204,6 +231,8 @@ impl SaveState for FleetPolicy {
             FleetPolicy::MarketRandomized(p) => p.restore_state(r),
             FleetPolicy::PinnedAllReserved(p) => p.restore_state(r),
             FleetPolicy::PinnedSeparate(p) => p.restore_state(r),
+            FleetPolicy::Ucb(p) => p.restore_state(r),
+            FleetPolicy::AdaptiveWindow(p) => p.restore_state(r),
         }
     }
 }
@@ -220,8 +249,9 @@ pub struct ShardRunner {
     policy: FleetPolicy,
     ledger: Ledger,
     p: f64,
-    /// Base seed of a `Randomized`/`MarketRandomized` spec (unused
-    /// otherwise); the per-user seed is `base ^ (user_id << 17)`.
+    /// Base seed of a seeded spec (`Randomized`/`MarketRandomized`/`Ucb`;
+    /// unused otherwise); the per-user seed is
+    /// [`per_user_seed`]`(base, user_id)`.
     base_seed: u64,
     w: usize,
 }
@@ -231,7 +261,7 @@ impl ShardRunner {
         let policy = FleetPolicy::build(spec, market, 0);
         let w = policy.window();
         let base_seed = match *spec {
-            PolicySpec::Randomized { seed, .. } => seed,
+            PolicySpec::Randomized { seed, .. } | PolicySpec::Ucb { seed } => seed,
             _ => 0,
         };
         ShardRunner { policy, ledger: Ledger::new(market.clone()), p: market.p(), base_seed, w }
@@ -244,13 +274,13 @@ impl ShardRunner {
             FleetPolicy::AllReserved(p) => p.reset(),
             FleetPolicy::Separate(p) => p.reset(),
             FleetPolicy::Deterministic(p) => p.reset(),
-            FleetPolicy::Randomized(p) => p.reseed(self.base_seed ^ ((user_id as u64) << 17)),
+            FleetPolicy::Randomized(p) => p.reseed(per_user_seed(self.base_seed, user_id)),
             FleetPolicy::MarketDeterministic(p) => p.reset(),
-            FleetPolicy::MarketRandomized(p) => {
-                p.reseed(self.base_seed ^ ((user_id as u64) << 17))
-            }
+            FleetPolicy::MarketRandomized(p) => p.reseed(per_user_seed(self.base_seed, user_id)),
             FleetPolicy::PinnedAllReserved(p) => p.reset(),
             FleetPolicy::PinnedSeparate(p) => p.reset(),
+            FleetPolicy::Ucb(p) => p.reseed(per_user_seed(self.base_seed, user_id)),
+            FleetPolicy::AdaptiveWindow(p) => p.reset(),
         }
         self.ledger.reset();
     }
@@ -703,6 +733,8 @@ mod tests {
             PolicySpec::Deterministic { z: None, window: 0 },
             PolicySpec::Deterministic { z: Some(0.4), window: 40 },
             PolicySpec::Randomized { window: 0, seed: 11 },
+            PolicySpec::Ucb { seed: 11 },
+            PolicySpec::AdaptiveWindow,
         ]
     }
 
@@ -717,6 +749,8 @@ mod tests {
             PolicySpec::Deterministic { z: None, window: 40 },
             PolicySpec::Randomized { window: 0, seed: 11 },
             PolicySpec::Randomized { window: 25, seed: 11 },
+            PolicySpec::Ucb { seed: 11 },
+            PolicySpec::AdaptiveWindow,
         ]
     }
 

@@ -14,6 +14,7 @@
 use std::sync::mpsc;
 use std::thread;
 
+use crate::algos::learned::{AdaptiveWindow, UcbThreshold};
 use crate::algos::market::{MarketDeterministic, MarketRandomized, PinnedSingle};
 use crate::algos::{
     baselines, deterministic::Deterministic, randomized::Randomized, Policy, SaveState,
@@ -21,7 +22,7 @@ use crate::algos::{
 use crate::analysis::classify::{classify, Group};
 use crate::pricing::Market;
 use crate::sim::engine::run_fleet_flat;
-use crate::sim::{all_on_demand_cost, run_policy_market};
+use crate::sim::{all_on_demand_cost, per_user_seed, run_policy_market};
 use crate::trace::{FlatPopulation, Population};
 use crate::util::state::{StateReader, StateWriter};
 
@@ -39,6 +40,14 @@ pub enum PolicySpec {
     /// Algorithm 2/4; the per-user draw is seeded from `seed ^ user_id`.
     /// Windows generalize to menus (`w < min τ`).
     Randomized { window: usize, seed: u64 },
+    /// UCB threshold selection over the arm grid
+    /// [`crate::algos::learned::ARM_MULTIPLIERS`]; `seed` permutes the
+    /// per-user exploration order (derived like the randomized draw).
+    Ucb { seed: u64 },
+    /// Forecast-driven adaptive prediction window (deterministic; the
+    /// synthetic window is manufactured internally, so `window() == 0` to
+    /// the driver).
+    AdaptiveWindow,
 }
 
 impl PolicySpec {
@@ -55,6 +64,8 @@ impl PolicySpec {
             },
             PolicySpec::Randomized { window: 0, .. } => "Randomized".into(),
             PolicySpec::Randomized { window, .. } => format!("Randomized(w={window})"),
+            PolicySpec::Ucb { .. } => "UCB".into(),
+            PolicySpec::AdaptiveWindow => "AdaptiveWindow".into(),
         }
     }
 
@@ -64,6 +75,16 @@ impl PolicySpec {
     /// Mirrored monomorphically by
     /// [`FleetPolicy::build`](crate::sim::engine::FleetPolicy::build).
     pub fn build(&self, market: &Market, user_id: u32) -> Box<dyn Policy> {
+        // The learned policies run the menu machinery on every market
+        // (single-contract included) — handle them before the fast-path
+        // split so both engine paths construct identical instances.
+        match *self {
+            PolicySpec::Ucb { seed } => {
+                return Box::new(UcbThreshold::new(market.clone(), per_user_seed(seed, user_id)))
+            }
+            PolicySpec::AdaptiveWindow => return Box::new(AdaptiveWindow::new(market.clone())),
+            _ => {}
+        }
         if market.is_single() {
             let pricing = market.contract_pricing(0);
             return match *self {
@@ -75,9 +96,9 @@ impl PolicySpec {
                     Box::new(Deterministic::new(pricing, z, window))
                 }
                 PolicySpec::Randomized { window, seed } => {
-                    let seed = seed ^ (user_id as u64) << 17;
-                    Box::new(Randomized::with_window(pricing, window, seed))
+                    Box::new(Randomized::with_window(pricing, window, per_user_seed(seed, user_id)))
                 }
+                PolicySpec::Ucb { .. } | PolicySpec::AdaptiveWindow => unreachable!(),
             };
         }
         if market.is_empty() {
@@ -104,8 +125,9 @@ impl PolicySpec {
             PolicySpec::Randomized { window, seed } => Box::new(MarketRandomized::with_window(
                 market.clone(),
                 window,
-                seed ^ (user_id as u64) << 17,
+                per_user_seed(seed, user_id),
             )),
+            PolicySpec::Ucb { .. } | PolicySpec::AdaptiveWindow => unreachable!(),
         }
     }
 }
@@ -354,6 +376,13 @@ pub fn suite_specs(seed: u64) -> [PolicySpec; 5] {
     ]
 }
 
+/// The learned-policy extension pack (ROADMAP learning-augmented family).
+/// Not part of the paper's Sec. VII suite — scenario reports and benches
+/// account for these separately, with regret vs the joint DP.
+pub fn learned_specs(seed: u64) -> [PolicySpec; 2] {
+    [PolicySpec::Ucb { seed }, PolicySpec::AdaptiveWindow]
+}
+
 /// Run the full Sec. VII suite (5 policies) across the population,
 /// flattening to the columnar store once.
 pub fn run_benchmark_suite(
@@ -424,6 +453,25 @@ mod tests {
         let b = run_fleet(&pop, &market(), &spec, 5);
         for (x, y) in a.per_user.iter().zip(&b.per_user) {
             assert!((x.normalized_cost - y.normalized_cost).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn learned_policies_give_reproducible_fleets() {
+        let pop = small_pop();
+        for spec in learned_specs(99) {
+            let a = run_fleet(&pop, &market(), &spec, 3);
+            let b = run_fleet(&pop, &market(), &spec, 5);
+            for (x, y) in a.per_user.iter().zip(&b.per_user) {
+                assert_eq!(x.user_id, y.user_id);
+                assert_eq!(
+                    x.normalized_cost.to_bits(),
+                    y.normalized_cost.to_bits(),
+                    "{} user {}",
+                    spec.name(),
+                    x.user_id
+                );
+            }
         }
     }
 

@@ -149,6 +149,16 @@ pub fn all_on_demand_cost(demands: &[u32], p: f64) -> f64 {
     p * demands.iter().map(|&d| d as u64).sum::<u64>() as f64
 }
 
+/// The one per-user seed derivation, shared by every seeded policy
+/// construction and reseed site (boxed reference path, batched engine,
+/// learned-policy reseed). The formula is **pinned**: golden fixtures and
+/// the `gen_golden.py` Python port both encode `base ^ (user_id << 17)`,
+/// so changing it breaks reseed-equals-fresh bit-parity everywhere at once
+/// — which is exactly why it lives in one place.
+pub(crate) fn per_user_seed(base: u64, user_id: u32) -> u64 {
+    base ^ ((user_id as u64) << 17)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +243,15 @@ mod tests {
         let mut det = Deterministic::online(pricing);
         let r = run_policy(&mut det, &demands, pricing).unwrap();
         assert!(r.identity_holds(&pricing, 1e-9));
+    }
+
+    #[test]
+    fn per_user_seed_formula_is_pinned() {
+        // The exact bits matter: fixtures and the Python port encode them.
+        assert_eq!(per_user_seed(0, 0), 0);
+        assert_eq!(per_user_seed(0, 1), 1 << 17);
+        assert_eq!(per_user_seed(0xFEED, 3), 0xFEED ^ (3u64 << 17));
+        assert_eq!(per_user_seed(u64::MAX, u32::MAX), u64::MAX ^ ((u32::MAX as u64) << 17));
     }
 
     #[test]

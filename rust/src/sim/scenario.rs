@@ -31,12 +31,18 @@
 //!   pruning removed.
 //! * `trace.kind` — `"constant"` (`users`, `level`, `slots`),
 //!   `"synthetic"` (`users`, `slots`, `seed` — the Google-like generator),
-//!   `"inline"` (`demands`: array of per-user demand arrays), or `"file"`
-//!   (`path` to a `gen-traces` CSV/BIN, optional `slots` for CSV).
-//! * `policies` — strings as above, or objects
+//!   `"inline"` (`demands`: array of per-user demand arrays), `"file"`
+//!   (`path` to a `gen-traces` CSV/BIN, optional `slots` for CSV), or
+//!   `"regime"` (`regime`: `"stationary" | "drifting" | "adversarial"`,
+//!   plus `users`, `slots`, `seed`, `term_hint` — the learned-policy
+//!   harness generator).
+//! * `policies` — strings as above (plus the learned policies `"ucb"` and
+//!   `"adaptive_window"`), or objects
 //!   `{"policy": "deterministic", "z": 0.4, "window": 60}`. Custom `z` is
 //!   single-contract-market only; prediction windows work on any menu as
-//!   long as `w < min τ` (Sec. VI semantics per contract).
+//!   long as `w < min τ` (Sec. VI semantics per contract). Fields a policy
+//!   ignores (`z` on anything but deterministic, `window` on anything but
+//!   deterministic/randomized) are rejected, naming the offending policy.
 //! * `window` — default prediction window applied to deterministic /
 //!   randomized entries.
 //! * `offline` — when true and the trace has exactly one user, solve the
@@ -49,7 +55,10 @@
 //! Reports render as text ([`ScenarioReport::render`]) and serialize as
 //! `cloudreserve-scenario/v2` JSON ([`ScenarioReport::to_json`]) for CI
 //! trajectory tracking (v2 adds `offline.joint`, `offline.restricted_cost`
-//! and `deterministic_window_ratio` to v1).
+//! and `deterministic_window_ratio` to v1; when the offline comparator is
+//! solved, every policy entry additionally carries additive
+//! `regret_vs_joint` / `per_slot_regret` fields — total and per-slot excess
+//! cost over the offline optimum).
 //!
 //! # Broker mode (`"mode": "broker"`)
 //!
@@ -91,8 +100,21 @@ use crate::util::cli::expected_one_of;
 use crate::util::json::Json;
 
 /// Valid policy names for spec/CLI parsing (and their error text).
-pub const POLICY_NAMES: &[&str] =
-    &["all-on-demand", "all-reserved", "separate", "deterministic", "randomized"];
+pub const POLICY_NAMES: &[&str] = &[
+    "all-on-demand",
+    "all-reserved",
+    "separate",
+    "deterministic",
+    "randomized",
+    "ucb",
+    "adaptive_window",
+];
+
+/// Policy names that accept a per-entry `window` field.
+const WINDOWED_POLICY_NAMES: &[&str] = &["deterministic", "randomized"];
+
+/// Policy names that accept a per-entry `z` field.
+const THRESHOLD_POLICY_NAMES: &[&str] = &["deterministic"];
 
 /// Where the demand trace comes from.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,6 +127,17 @@ pub enum TraceSpec {
     Inline { demands: Vec<Vec<u32>> },
     /// A `gen-traces` CSV/BIN file; `slots` bounds CSV parsing.
     File { path: String, slots: usize },
+    /// A statistical regime for the learned-policy harness
+    /// ([`crate::trace::synth::Regime`]): stationary / drifting /
+    /// adversarial, with `term_hint` anchoring the adversarial burst
+    /// length.
+    Regime {
+        users: usize,
+        slots: usize,
+        seed: u64,
+        regime: crate::trace::synth::Regime,
+        term_hint: usize,
+    },
 }
 
 impl TraceSpec {
@@ -137,6 +170,15 @@ impl TraceSpec {
                 } else {
                     crate::trace::io::read_bin(p)
                 }
+            }
+            TraceSpec::Regime { users, slots, seed, regime, term_hint } => {
+                Ok(crate::trace::synth::generate_regime(&crate::trace::synth::RegimeConfig {
+                    users: *users,
+                    slots: *slots,
+                    seed: *seed,
+                    regime: *regime,
+                    term_hint: *term_hint,
+                }))
             }
         }
     }
@@ -237,10 +279,21 @@ fn parse_trace(doc: &Json) -> Result<TraceSpec> {
                 .to_string(),
             slots: tj.get("slots").as_usize().unwrap_or(crate::trace::TRACE_SLOTS),
         }),
+        "regime" => Ok(TraceSpec::Regime {
+            users: tj.get("users").as_usize().unwrap_or(20),
+            slots: tj.get("slots").as_usize().unwrap_or(4000),
+            seed: tj.get("seed").as_f64().unwrap_or(2013.0) as u64,
+            regime: crate::trace::synth::Regime::from_name(
+                tj.get("regime")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("trace(regime): missing string 'regime'"))?,
+            )?,
+            term_hint: tj.get("term_hint").as_usize().unwrap_or(64),
+        }),
         other => bail!(expected_one_of(
             "trace.kind",
             other,
-            &["synthetic", "constant", "inline", "file"]
+            &["synthetic", "constant", "inline", "file", "regime"]
         )),
     }
 }
@@ -261,13 +314,35 @@ fn parse_policy_entry(item: &Json, default_window: usize, seed: u64) -> Result<P
         ),
         _ => bail!("policies: entries must be strings or objects"),
     };
+    if !POLICY_NAMES.contains(&kind.as_str()) {
+        bail!(expected_one_of("policies: policy", &kind, POLICY_NAMES));
+    }
+    // Fields a policy ignores are spec bugs, not silent defaults: reject
+    // them naming the offending policy and the policies that do take the
+    // field (same shape as [`expected_one_of`] errors).
+    if z.is_some() && !THRESHOLD_POLICY_NAMES.contains(&kind.as_str()) {
+        bail!(
+            "policy '{kind}': field 'z' is ignored by this policy \
+             (accepted by: {})",
+            THRESHOLD_POLICY_NAMES.join("|")
+        );
+    }
+    if w.is_some() && !WINDOWED_POLICY_NAMES.contains(&kind.as_str()) {
+        bail!(
+            "policy '{kind}': field 'window' is ignored by this policy \
+             (accepted by: {})",
+            WINDOWED_POLICY_NAMES.join("|")
+        );
+    }
     match kind.as_str() {
         "all-on-demand" => Ok(PolicySpec::AllOnDemand),
         "all-reserved" => Ok(PolicySpec::AllReserved),
         "separate" => Ok(PolicySpec::Separate),
         "deterministic" => Ok(PolicySpec::Deterministic { z, window: w.unwrap_or(default_window) }),
         "randomized" => Ok(PolicySpec::Randomized { window: w.unwrap_or(default_window), seed }),
-        other => bail!(expected_one_of("policies: policy", other, POLICY_NAMES)),
+        "ucb" => Ok(PolicySpec::Ucb { seed }),
+        "adaptive_window" => Ok(PolicySpec::AdaptiveWindow),
+        other => unreachable!("policy '{other}' passed the POLICY_NAMES membership check"),
     }
 }
 
@@ -627,6 +702,15 @@ pub struct PolicyOutcome {
     pub mean_normalized: f64,
     pub total_cost: f64,
     pub reservations: u64,
+    /// `total_cost − offline cost` when the offline comparator is solved
+    /// (the joint multi-contract DP when tractable, else the best
+    /// restricted schedule — see [`OfflineOutcome::joint`]). The regret of
+    /// an online policy against hindsight; can be negative only by float
+    /// noise.
+    pub regret_vs_joint: Option<f64>,
+    /// `regret_vs_joint / slots` — the per-slot regret the learned-policy
+    /// differential tests track across horizon doublings.
+    pub per_slot_regret: Option<f64>,
 }
 
 /// Offline comparator (single-user traces only).
@@ -683,6 +767,14 @@ impl ScenarioReport {
                     ("mean_normalized", Json::Num(p.mean_normalized)),
                     ("total_cost", Json::Num(p.total_cost)),
                     ("reservations", Json::Num(p.reservations as f64)),
+                    (
+                        "regret_vs_joint",
+                        p.regret_vs_joint.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "per_slot_regret",
+                        p.per_slot_regret.map(Json::Num).unwrap_or(Json::Null),
+                    ),
                 ])
             })
             .collect();
@@ -777,6 +869,14 @@ impl ScenarioReport {
                 r, self.ratio_bound
             ));
         }
+        if self.policies.iter().any(|p| p.regret_vs_joint.is_some()) {
+            out.push_str("per-policy regret vs offline (total / per-slot):\n");
+            for p in &self.policies {
+                if let (Some(r), Some(ps)) = (p.regret_vs_joint, p.per_slot_regret) {
+                    out.push_str(&format!("  {:<28} {:>14.4} / {:.6}\n", p.name, r, ps));
+                }
+            }
+        }
         out
     }
 }
@@ -808,6 +908,8 @@ pub fn run(spec: &ScenarioSpec, threads: usize) -> Result<ScenarioReport> {
             mean_normalized: res.mean_normalized(None),
             total_cost: res.total_cost(),
             reservations: res.total_reservations(),
+            regret_vs_joint: None,
+            per_slot_regret: None,
         });
     }
 
@@ -839,6 +941,17 @@ pub fn run(spec: &ScenarioSpec, threads: usize) -> Result<ScenarioReport> {
     } else {
         None
     };
+
+    // Regret accounting: every policy's excess cost over the offline
+    // comparator, total and per slot. Additive v2 fields — absent (null)
+    // whenever the offline DP did not run.
+    if let Some(o) = &offline_outcome {
+        for p in &mut outcomes {
+            let regret = p.total_cost - o.cost;
+            p.regret_vs_joint = Some(regret);
+            p.per_slot_regret = Some(regret / slots.max(1) as f64);
+        }
+    }
 
     let ratio_against_offline = |total: Option<f64>| match (&offline_outcome, total) {
         (Some(o), Some(t)) if o.cost > 0.0 => Some(t / o.cost),
@@ -972,6 +1085,107 @@ mod tests {
     }
 
     #[test]
+    fn rejects_window_on_policies_that_ignore_it() {
+        for policy in ["all-on-demand", "all-reserved", "separate", "ucb", "adaptive_window"] {
+            let text = format!(
+                r#"{{
+              "name": "bad",
+              "market": {{"on_demand": 0.1, "contracts": [
+                {{"upfront": 0.5, "rate": 0.01, "term": 10}}
+              ]}},
+              "trace": {{"kind": "constant", "users": 1, "level": 1, "slots": 10}},
+              "policies": [{{"policy": "{policy}", "window": 4}}]
+            }}"#
+            );
+            let err =
+                format!("{:#}", ScenarioSpec::from_json(&parse(&text).unwrap()).unwrap_err());
+            assert!(
+                err.contains(&format!("policy '{policy}'")) && err.contains("'window'"),
+                "error must name the offending policy: {err}"
+            );
+            assert!(
+                err.contains("deterministic|randomized"),
+                "error must list the policies that take 'window': {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_z_on_non_threshold_policies() {
+        for policy in ["randomized", "ucb", "adaptive_window", "separate"] {
+            let text = format!(
+                r#"{{
+              "name": "bad",
+              "market": {{"on_demand": 0.1, "contracts": [
+                {{"upfront": 0.5, "rate": 0.01, "term": 10}}
+              ]}},
+              "trace": {{"kind": "constant", "users": 1, "level": 1, "slots": 10}},
+              "policies": [{{"policy": "{policy}", "z": 0.4}}]
+            }}"#
+            );
+            let err =
+                format!("{:#}", ScenarioSpec::from_json(&parse(&text).unwrap()).unwrap_err());
+            assert!(
+                err.contains(&format!("policy '{policy}'")) && err.contains("'z'"),
+                "error must name the offending policy: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_policy_wins_over_stray_field_errors() {
+        let text = r#"{
+          "name": "bad",
+          "market": {"on_demand": 0.1, "contracts": [
+            {"upfront": 0.5, "rate": 0.01, "term": 10}
+          ]},
+          "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 10},
+          "policies": [{"policy": "magic", "window": 4}]
+        }"#;
+        let err = format!("{:#}", ScenarioSpec::from_json(&parse(text).unwrap()).unwrap_err());
+        assert!(err.contains("unknown name 'magic'"), "{err}");
+        assert!(err.contains("ucb") && err.contains("adaptive_window"), "{err}");
+    }
+
+    #[test]
+    fn learned_policies_run_and_report_regret() {
+        let text = r#"{
+          "name": "learned-unit",
+          "market": {"on_demand": 0.08, "contracts": [
+            {"label": "1yr", "upfront": 0.1333, "rate": 0.039, "term": 4},
+            {"label": "3yr", "upfront": 0.3, "rate": 0.031, "term": 12}
+          ]},
+          "trace": {"kind": "constant", "users": 1, "level": 1, "slots": 120},
+          "policies": ["all-on-demand", "deterministic", "ucb", "adaptive_window"],
+          "seed": 7,
+          "offline": true
+        }"#;
+        let spec = ScenarioSpec::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(spec.policies.len(), 4);
+        let report = run(&spec, 2).unwrap();
+        assert_eq!(report.policies.len(), 4);
+        assert!(report.policies.iter().any(|p| p.name.contains("UCB")));
+        assert!(report.policies.iter().any(|p| p.name.contains("AdaptiveWindow")));
+        let off = report.offline.as_ref().expect("offline DP ran");
+        for p in &report.policies {
+            // joint ≤ online for every policy, learned included
+            let regret = p.regret_vs_joint.expect("regret filled when offline solved");
+            assert!(regret >= -1e-9, "policy {} beat the offline DP: {regret}", p.name);
+            assert!(
+                (p.total_cost - off.cost - regret).abs() < 1e-12,
+                "regret must be total_cost - offline cost"
+            );
+            let ps = p.per_slot_regret.expect("per-slot regret filled");
+            assert!((ps - regret / 120.0).abs() < 1e-12);
+        }
+        // additive v2 fields round-trip through the JSON parser
+        let back = parse(&report.to_json().dump_pretty()).unwrap();
+        let arr = back.get("policies").as_arr().unwrap();
+        assert!(arr.iter().all(|p| p.get("regret_vs_joint").as_f64().is_some()));
+        assert!(report.render().contains("per-policy regret"));
+    }
+
+    #[test]
     fn rejects_unknown_policy() {
         let text = r#"{
           "name": "bad",
@@ -1068,6 +1282,32 @@ mod tests {
     fn default_mode_is_policies() {
         let spec = parse_scenario(&parse(two_term_spec_text()).unwrap()).unwrap();
         assert!(matches!(spec, ParsedScenario::Policies(_)));
+    }
+
+    #[test]
+    fn regime_trace_parses_and_runs() {
+        let text = r#"{
+          "name": "regime-unit",
+          "market": {"on_demand": 0.1, "contracts": [
+            {"upfront": 0.4, "rate": 0.02, "term": 8}
+          ]},
+          "trace": {"kind": "regime", "regime": "adversarial",
+                    "users": 3, "slots": 200, "seed": 5, "term_hint": 8},
+          "policies": ["all-on-demand", "deterministic", "ucb"]
+        }"#;
+        let spec = ScenarioSpec::from_json(&parse(text).unwrap()).unwrap();
+        assert!(matches!(
+            spec.trace,
+            TraceSpec::Regime { users: 3, slots: 200, term_hint: 8, .. }
+        ));
+        let report = run(&spec, 1).unwrap();
+        assert_eq!(report.users, 3);
+        assert_eq!(report.slots, 200);
+        assert_eq!(report.policies.len(), 3);
+
+        let bad = text.replace("\"adversarial\"", "\"chaotic\"");
+        let err = format!("{:#}", ScenarioSpec::from_json(&parse(&bad).unwrap()).unwrap_err());
+        assert!(err.contains("stationary") && err.contains("drifting"), "{err}");
     }
 
     #[test]

@@ -234,6 +234,121 @@ fn batch(slots: usize, rng: &mut Rng) -> Vec<u32> {
     d
 }
 
+/// Valid regime names for spec/CLI parsing (and their error text).
+pub const REGIME_NAMES: &[&str] = &["stationary", "drifting", "adversarial"];
+
+/// Demand regimes for the learned-policy differential harness: unlike the
+/// Google-like archetypes above (population realism), these isolate the
+/// statistical properties learning-augmented policies react to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// iid noise around a fixed per-user mean — the setting where UCB
+    /// threshold selection should show decreasing per-slot regret.
+    Stationary,
+    /// Piecewise-constant level following a random walk — slow
+    /// distribution shift that forecast-driven windows can track.
+    Drifting,
+    /// Busy runs held *just below* a reference term followed by long idle
+    /// gaps — the classic adversary against aggressive reservation
+    /// triggers (demand vanishes right before a reservation would have
+    /// amortized).
+    Adversarial,
+}
+
+impl Regime {
+    /// Parse a regime name (see [`REGIME_NAMES`]).
+    pub fn from_name(name: &str) -> anyhow::Result<Regime> {
+        match name {
+            "stationary" => Ok(Regime::Stationary),
+            "drifting" => Ok(Regime::Drifting),
+            "adversarial" => Ok(Regime::Adversarial),
+            other => anyhow::bail!(crate::util::cli::expected_one_of(
+                "trace(regime): regime",
+                other,
+                REGIME_NAMES
+            )),
+        }
+    }
+}
+
+/// Regime generator configuration. `term_hint` anchors the adversarial
+/// burst length (bursts stay strictly shorter than it) and the drifting
+/// level hold time — pass the menu's shortest term to get worst-case
+/// traces for that market.
+#[derive(Debug, Clone)]
+pub struct RegimeConfig {
+    pub users: usize,
+    pub slots: usize,
+    pub seed: u64,
+    pub regime: Regime,
+    pub term_hint: usize,
+}
+
+impl Default for RegimeConfig {
+    fn default() -> Self {
+        RegimeConfig {
+            users: 20,
+            slots: 4000,
+            seed: 2013,
+            regime: Regime::Stationary,
+            term_hint: 64,
+        }
+    }
+}
+
+/// Generate a regime population. Same per-user fork discipline as
+/// [`for_each_user`], so traces are reproducible per user id regardless of
+/// fleet size.
+pub fn generate_regime(cfg: &RegimeConfig) -> Population {
+    let mut root = Rng::new(cfg.seed);
+    let mut users = Vec::with_capacity(cfg.users);
+    for uid in 0..cfg.users {
+        let mut rng = root.fork(uid as u64);
+        let demand = regime_user(cfg.regime, cfg.slots, cfg.term_hint, &mut rng);
+        users.push(UserTrace::new(uid as u32, demand));
+    }
+    Population { users }
+}
+
+/// Generate one user's demand curve under a [`Regime`].
+pub fn regime_user(regime: Regime, slots: usize, term_hint: usize, rng: &mut Rng) -> Vec<u32> {
+    let term_hint = term_hint.max(2);
+    match regime {
+        Regime::Stationary => {
+            let mean = 1.0 + rng.f64() * 5.0;
+            (0..slots).map(|_| rng.poisson(mean).min(1_000) as u32).collect()
+        }
+        Regime::Drifting => {
+            let mut level = 1.0 + rng.f64() * 4.0;
+            let hold = (term_hint / 2).max(8);
+            let mut d = Vec::with_capacity(slots);
+            for t in 0..slots {
+                if t > 0 && t % hold == 0 {
+                    // random-walk step, reflected into [0, 12]
+                    level = (level + rng.normal() * 1.5).abs().min(12.0);
+                }
+                d.push(rng.poisson(level).min(1_000) as u32);
+            }
+            d
+        }
+        Regime::Adversarial => {
+            // busy just under the hint, then idle long enough that any
+            // reservation bought during the burst is wasted
+            let height = 1 + rng.below(4) as u32;
+            let mut d = vec![0u32; slots];
+            let mut t = rng.range_usize(0, term_hint);
+            while t < slots {
+                let run = rng.range_usize((term_hint / 2).max(1), term_hint);
+                for i in t..(t + run).min(slots) {
+                    d[i] = height;
+                }
+                t += run + rng.range_usize(term_hint, 3 * term_hint);
+            }
+            d
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +437,82 @@ mod tests {
             assert_eq!(u.demand.len(), 5000);
             assert!(u.peak() < 1_000_000, "peak {}", u.peak());
         }
+    }
+
+    #[test]
+    fn regime_generation_is_deterministic_and_sized() {
+        for regime in [Regime::Stationary, Regime::Drifting, Regime::Adversarial] {
+            let cfg = RegimeConfig { users: 5, slots: 600, regime, ..Default::default() };
+            let a = generate_regime(&cfg);
+            let b = generate_regime(&cfg);
+            assert_eq!(a.users, b.users);
+            assert_eq!(a.users.len(), 5);
+            assert!(a.users.iter().all(|u| u.demand.len() == 600));
+        }
+    }
+
+    #[test]
+    fn adversarial_busy_runs_stay_below_the_term_hint() {
+        let term_hint = 40;
+        let cfg = RegimeConfig {
+            users: 8,
+            slots: 3000,
+            regime: Regime::Adversarial,
+            term_hint,
+            ..Default::default()
+        };
+        let pop = generate_regime(&cfg);
+        for u in &pop.users {
+            let mut run = 0usize;
+            let mut longest = 0usize;
+            for &d in &u.demand {
+                if d > 0 {
+                    run += 1;
+                    longest = longest.max(run);
+                } else {
+                    run = 0;
+                }
+            }
+            assert!(longest >= 1, "user {} never goes busy", u.user_id);
+            assert!(
+                longest < term_hint,
+                "user {}: busy run {longest} reaches the term hint {term_hint}",
+                u.user_id
+            );
+        }
+    }
+
+    #[test]
+    fn stationary_regime_is_stable_across_halves() {
+        let cfg = RegimeConfig {
+            users: 6,
+            slots: 8000,
+            regime: Regime::Stationary,
+            ..Default::default()
+        };
+        let pop = generate_regime(&cfg);
+        for u in &pop.users {
+            let half = u.demand.len() / 2;
+            let m1: f64 =
+                u.demand[..half].iter().map(|&d| d as f64).sum::<f64>() / half as f64;
+            let m2: f64 =
+                u.demand[half..].iter().map(|&d| d as f64).sum::<f64>() / half as f64;
+            assert!(m1 > 0.5, "user {} mean too small: {m1}", u.user_id);
+            assert!(
+                (m1 - m2).abs() / m1 < 0.2,
+                "user {}: halves drift ({m1} vs {m2})",
+                u.user_id
+            );
+        }
+    }
+
+    #[test]
+    fn regime_names_round_trip() {
+        assert_eq!(Regime::from_name("stationary").unwrap(), Regime::Stationary);
+        assert_eq!(Regime::from_name("drifting").unwrap(), Regime::Drifting);
+        assert_eq!(Regime::from_name("adversarial").unwrap(), Regime::Adversarial);
+        let err = format!("{:#}", Regime::from_name("chaotic").unwrap_err());
+        assert!(err.contains("stationary") && err.contains("adversarial"), "{err}");
     }
 
     #[test]

@@ -55,6 +55,10 @@ fn specs() -> Vec<PolicySpec> {
         PolicySpec::Separate,
         PolicySpec::Deterministic { z: None, window: 32 },
         PolicySpec::Randomized { window: 16, seed: 7 },
+        // learned policies: UCB arm statistics and the adaptive window's
+        // forecaster state must survive kill/resume bit-identically too
+        PolicySpec::Ucb { seed: 7 },
+        PolicySpec::AdaptiveWindow,
     ]
 }
 

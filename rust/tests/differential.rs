@@ -68,7 +68,9 @@ fn gen_trace(rng: &mut Rng, t_len: usize) -> Vec<u32> {
     }
 }
 
-/// Menu policy set under test: the Sec. VII suite plus windowed variants.
+/// Menu policy set under test: the Sec. VII suite plus windowed variants
+/// and the learned policies (UCB threshold selection, forecast-driven
+/// adaptive windows).
 fn policy_specs(market: &Market, seed: u64, rng: &mut Rng) -> Vec<PolicySpec> {
     let mut specs = suite_specs(seed).to_vec();
     if let Some(min_term) = market.contracts().iter().map(|c| c.term).min() {
@@ -78,6 +80,8 @@ fn policy_specs(market: &Market, seed: u64, rng: &mut Rng) -> Vec<PolicySpec> {
             specs.push(PolicySpec::Randomized { window: w, seed });
         }
     }
+    specs.push(PolicySpec::Ucb { seed });
+    specs.push(PolicySpec::AdaptiveWindow);
     specs
 }
 
@@ -251,6 +255,79 @@ fn sandwich_holds_per_user_through_the_batched_engine() {
                 a.user_id,
                 joint,
                 a.absolute_cost
+            );
+        }
+    }
+}
+
+#[test]
+fn ucb_per_slot_regret_decreases_on_stationary_traces() {
+    // On a stationary trace the UCB threshold learner should converge to a
+    // fixed arm, so its total excess cost over hindsight is dominated by a
+    // bounded exploration transient — per-slot regret must not grow as the
+    // horizon doubles, and must end below where it started.
+    use cloudreserve::trace::synth::{regime_user, Regime};
+    let market = Market::single(Pricing::normalized(0.2, 0.3, 6));
+    let mut rng = Rng::new(0x57A7);
+    // cap demand so the joint DP stays tractable at every horizon
+    let full: Vec<u32> =
+        regime_user(Regime::Stationary, 4096, 6, &mut rng).into_iter().map(|d| d.min(2)).collect();
+    let mut per_slot = Vec::new();
+    for &t_len in &[512usize, 1024, 2048, 4096] {
+        let demands = &full[..t_len];
+        let joint = offline::optimal_market_joint(demands, &market).expect("tractable");
+        let total =
+            billed_total(demands, &market, &PolicySpec::Ucb { seed: 9 }, &format!("T={t_len}"));
+        assert!(
+            joint.cost <= total + 1e-9 * (1.0 + total),
+            "T={t_len}: joint {} > UCB {total}",
+            joint.cost
+        );
+        per_slot.push((total - joint.cost) / t_len as f64);
+    }
+    let first = per_slot[0];
+    let last = *per_slot.last().unwrap();
+    assert!(
+        last <= first + 1e-9,
+        "per-slot regret failed to decrease across horizon doublings: {per_slot:?}"
+    );
+}
+
+#[test]
+fn adversarial_regime_keeps_the_deterministic_bound() {
+    // Bursts held just below break-even then long idle gaps — the
+    // worst-case shape for reservation triggers. The deterministic policy
+    // must still meet its (2 − α) competitive bound (Prop. 1 holds for
+    // arbitrary traces), and the joint DP must still floor the learned
+    // policies.
+    use cloudreserve::trace::synth::{regime_user, Regime};
+    let market = Market::single(Pricing::normalized(0.25, 0.4, 8));
+    let mut rng = Rng::new(0xAD5E);
+    for case in 0..8 {
+        let demands: Vec<u32> = regime_user(Regime::Adversarial, 400, 8, &mut rng)
+            .into_iter()
+            .map(|d| d.min(2))
+            .collect();
+        let what = format!("adversarial case {case}");
+        let joint = offline::optimal_market_joint(&demands, &market).expect("tractable");
+        let det = billed_total(
+            &demands,
+            &market,
+            &PolicySpec::Deterministic { z: None, window: 0 },
+            &what,
+        );
+        let bound = (2.0 - market.alpha_max()) * joint.cost;
+        assert!(
+            det <= bound + 1e-9 * (1.0 + bound),
+            "{what}: deterministic {det} > (2 - alpha) * joint = {bound}"
+        );
+        for spec in [PolicySpec::Ucb { seed: 0xAD5E + case as u64 }, PolicySpec::AdaptiveWindow] {
+            let total = billed_total(&demands, &market, &spec, &what);
+            assert!(
+                joint.cost <= total + 1e-9 * (1.0 + total),
+                "{what}: joint {} > {} cost {total}",
+                joint.cost,
+                spec.name()
             );
         }
     }

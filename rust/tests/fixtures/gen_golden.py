@@ -12,8 +12,9 @@ This script ports BOTH generations of the policy bookkeeping to Python:
           coalesced-run RunQueue (rust/src/algos/mod.rs).
 
 Every policy (Deterministic/Randomized/AllReserved/Separate/AllOnDemand,
-plus the menu generalizations MarketDeterministic/MarketRandomized and the
-PinnedSingle adapter) is implemented once, parameterized over the two
+plus the menu generalizations MarketDeterministic/MarketRandomized, the
+PinnedSingle adapter, and the learned UcbThreshold wrapper from
+algos/learned.rs) is implemented once, parameterized over the two
 structure families.  The harness:
 
 1. stress-tests flat-vs-old-vs-naive WindowScan and RunQueue behaviour on
@@ -659,6 +660,110 @@ def market_randomized(market, w, seed, flat):
     return MarketDeterministic(market, thresholds, w, flat)
 
 
+# ------------------------------------------------- learned.rs (UCB) port
+
+ARM_MULTIPLIERS = [0.5, 0.75, 1.0, 1.25, 1.5]
+ARMS = len(ARM_MULTIPLIERS)
+SEED_ARM = 2  # the multiplier-1.0 arm: plain Algorithm 1 on the menu
+EPOCH_MIN = 8
+EPOCH_MAX = 256
+
+
+def per_user_seed(base, user_id):
+    """Port of sim/mod.rs per_user_seed — the one seed-derivation formula."""
+    return (base ^ (user_id << 17)) & MASK
+
+
+def exploration_order(seed):
+    """UcbThreshold::exploration_order: seed arm first, rest seed-shuffled
+    with the util/rng.rs Fisher-Yates loop (high index down, below(i+1))."""
+    rest = [a for a in range(ARMS) if a != SEED_ARM]
+    rng = Rng(seed)
+    for i in range(len(rest) - 1, 0, -1):
+        j = rng.below(i + 1)
+        rest[i], rest[j] = rest[j], rest[i]
+    return [SEED_ARM] + rest
+
+
+class UcbThreshold:
+    """Port of algos/learned.rs UcbThreshold over MarketDeterministic."""
+
+    window = 0
+
+    def __init__(self, market, seed, flat):
+        terms = [c.term for c in market.contracts]
+        self.epoch_len = min(max(min(terms) if terms else EPOCH_MAX, EPOCH_MIN), EPOCH_MAX)
+        self.market = market
+        self.p = market.p
+        self.upfronts = [c.upfront for c in market.contracts]
+        rates = [c.rate for c in market.contracts]
+        self.min_rate = min(min(rates) if rates else math.inf, market.p)
+        self.flat = flat
+        self.reseed(seed)
+
+    def reseed(self, seed):
+        self.seed = seed
+        self.order = exploration_order(seed)
+        self.arm = self.order[0]
+        self.pulls = [0] * ARMS
+        self.reward_sum = [0.0] * ARMS
+        self.epochs_done = 0
+        self.slot_in_epoch = 0
+        self.epoch_cost = 0.0
+        self.epoch_od_cost = 0.0
+        # Rust resets the inner policy in place; rebuilding is the same
+        # state by the reset-equals-fresh invariant its tests pin.
+        self.inner = MarketDeterministic.with_window(self.market, 0, self.flat)
+        self.apply_arm()
+
+    def apply_arm(self):
+        mult = ARM_MULTIPLIERS[self.arm]
+        for j in range(len(self.market)):
+            self.inner.thresholds[j] = mult * self.market.beta(j)
+
+    def select_arm(self):
+        for a in self.order:
+            if self.pulls[a] == 0:
+                return a
+        ln_n = math.log(float(self.epochs_done))
+        best, best_idx = 0, -math.inf
+        for a in range(ARMS):
+            mean = self.reward_sum[a] / float(self.pulls[a])
+            idx = mean + math.sqrt(2.0 * ln_n / float(self.pulls[a]))
+            if idx > best_idx:
+                best_idx = idx
+                best = a
+        return best
+
+    def finish_epoch(self):
+        if self.epoch_od_cost > 0.0:
+            reward = max(-1.0, min(1.0, 1.0 - self.epoch_cost / self.epoch_od_cost))
+        else:
+            reward = 0.0
+        self.pulls[self.arm] += 1
+        self.reward_sum[self.arm] += reward
+        self.epochs_done += 1
+        self.epoch_cost = 0.0
+        self.epoch_od_cost = 0.0
+        self.slot_in_epoch = 0
+
+    def decide(self, demand, future):
+        if self.slot_in_epoch == 0:
+            self.arm = self.select_arm()
+            self.apply_arm()
+        od, res = self.inner.decide(demand, [])
+        fees = 0.0
+        for j, n in res:
+            fees += self.upfronts[j] * float(n)
+        served_reserved = max(0, demand - od)
+        self.epoch_cost += fees + self.p * float(od) + self.min_rate * float(served_reserved)
+        self.epoch_od_cost += self.p * float(demand)
+        self.slot_in_epoch += 1
+        if self.slot_in_epoch == self.epoch_len:
+            self.finish_epoch()
+        return od, res
+
+
 class PinnedSingle:
     def __init__(self, inner, cid):
         self.inner = inner
@@ -677,6 +782,9 @@ class PinnedSingle:
 def build_policy(spec, market, user_id, flat):
     """Port of sim/fleet.rs PolicySpec::build."""
     kind = spec["kind"]
+    if kind == "Ucb":
+        # learned policies dispatch on the full market, single or menu
+        return UcbThreshold(market, per_user_seed(spec["seed"], user_id), flat)
     if market.is_single():
         pricing = market.contract_pricing(0)
         if kind == "AllOnDemand":
@@ -688,8 +796,7 @@ def build_policy(spec, market, user_id, flat):
         if kind == "Deterministic":
             return Deterministic(pricing, pricing.beta(), spec["window"], flat)
         if kind == "Randomized":
-            seed = (spec["seed"] ^ (user_id << 17)) & MASK
-            return randomized(pricing, spec["window"], seed, flat)
+            return randomized(pricing, spec["window"], per_user_seed(spec["seed"], user_id), flat)
         raise ValueError(kind)
     pin = market.steady_best
     if kind == "AllOnDemand":
@@ -701,8 +808,7 @@ def build_policy(spec, market, user_id, flat):
     if kind == "Deterministic":
         return MarketDeterministic.with_window(market, spec["window"], flat)
     if kind == "Randomized":
-        seed = (spec["seed"] ^ (user_id << 17)) & MASK
-        return market_randomized(market, spec["window"], seed, flat)
+        return market_randomized(market, spec["window"], per_user_seed(spec["seed"], user_id), flat)
     raise ValueError(kind)
 
 
@@ -760,6 +866,34 @@ def stress_window_scans():
                 assert flat.buffered() == old.buffered()
             cases += 1
     print(f"  window-scan stress: {cases} cases OK (flat == old == naive)")
+
+
+def stress_ucb():
+    """UCB arm-machinery invariants: exploration orders, reseed == fresh,
+    flat == old decision streams, epoch accounting."""
+    market = Market(0.05, [Contract(1.0, 0.025, 100), Contract(1.5, 0.01, 300)])
+    orders = set()
+    for seed in range(64):
+        o = exploration_order(seed)
+        assert o[0] == SEED_ARM and sorted(o) == list(range(ARMS)), o
+        orders.add(tuple(o))
+    assert len(orders) > 1, "exploration order ignores the seed"
+    rng = Rng(0x0CB)
+    demands = [int(rng.below(6)) for _ in range(1500)]
+    dirty = UcbThreshold(market, 1, True)
+    replay(dirty, demands)
+    dirty.reseed(7)
+    fresh = UcbThreshold(market, 7, True)
+    old = UcbThreshold(market, 7, False)
+    d_out = replay(dirty, demands)
+    f_out = replay(fresh, demands)
+    o_out = replay(old, demands)
+    assert d_out == f_out, "reseed(7) diverged from a fresh UCB instance"
+    assert f_out == o_out, "UCB streams diverged between flat and old layouts"
+    # every finished epoch lands in exactly one arm's pull count
+    assert sum(fresh.pulls) == fresh.epochs_done == len(demands) // fresh.epoch_len
+    assert all(n > 0 for n in fresh.pulls), f"unexplored arms: {fresh.pulls}"
+    print("  ucb stress: exploration orders, reseed==fresh, flat==old, epochs OK")
 
 
 def stress_run_queues():
@@ -851,6 +985,7 @@ def fixture_specs(w):
         {"kind": "Randomized", "window": 0, "seed": 1},
         {"kind": "Deterministic", "window": w},
         {"kind": "Randomized", "window": w, "seed": 9},
+        {"kind": "Ucb", "seed": 5},
     ]
 
 
@@ -864,6 +999,7 @@ def main():
     print("cross-validating flat structures against the pre-rewrite layout…")
     stress_window_scans()
     stress_run_queues()
+    stress_ucb()
 
     markets = fixture_markets()
     cases = []

@@ -149,16 +149,34 @@ def settle_proportional(total, usage_slots, p):
     return [u * q for u in apportion(m, weights)]
 
 
+def saturating_quanta(c):
+    """Mirror of settlement::saturating_quanta (Rust `as`-cast semantics).
+
+    `u64::MAX as f64` rounds UP to 2^64, so the saturation boundary is
+    2^64 itself: every float >= 2^64 maps to u64::MAX, and the largest
+    float BELOW the boundary (2^64 - 2048) converts losslessly.  NaN and
+    non-positive inputs map to zero, as Rust's saturating cast does.
+    """
+    if math.isnan(c) or c <= 0.0:
+        return 0
+    if c >= 2.0**64:
+        return 2**64 - 1
+    return int(c)
+
+
 def settle_od_capped(total, usage_slots, p):
     if total == 0.0:
         return [0.0] * len(usage_slots)
     m, q = quantum(total)
     n = len(usage_slots)
-    caps = []
-    for d in usage_slots:
-        c = math.floor((p * float(d)) / q)
-        caps.append(2**64 - 1 if c >= 2.0**64 else c)
-    assert m <= sum(caps), "total exceeds the on-demand ceiling"
+    caps = [saturating_quanta(math.floor((p * float(d)) / q)) for d in usage_slots]
+    # Exact integer cap total (the Rust side folds into a u128); the float
+    # ceiling in the error message is derived from it so the reported sum
+    # cannot itself overflow or drift from the true cap.
+    cap_total = sum(caps)
+    assert m <= cap_total, (
+        f"total exceeds the on-demand ceiling {float(cap_total) * q!r}"
+    )
     units = [0] * n
     capped = [False] * n
     remaining = m
@@ -318,6 +336,18 @@ def check_settlement_unit_cases():
     # Zero-usage fleets still conserve under the proportional fallback.
     b = settle_proportional(1.25, [0, 0, 0], 0.1)
     assert_conserves(b, 1.25, "zero-usage fallback")
+    # The saturation boundary sits exactly at 2^64 (u64::MAX as f64 rounds
+    # up), mirroring rust/src/broker/settlement.rs::saturating_quanta.
+    below = 18_446_744_073_709_549_568.0  # 2^64 - 2048, largest f64 < 2^64
+    assert saturating_quanta(below) == 18_446_744_073_709_549_568
+    assert saturating_quanta(2.0**64) == 2**64 - 1
+    assert saturating_quanta(float("inf")) == 2**64 - 1
+    assert saturating_quanta(float("nan")) == 0
+    assert saturating_quanta(-1.0) == 0
+    assert saturating_quanta(0.75) == 0
+    # Saturated caps still settle: one user pinned at the cap ceiling.
+    b = settle_od_capped(1.0, [2**63, 4], 1e6)
+    assert_conserves(b, 1.0, "saturated caps")
     print("  settlement unit cases OK")
 
 

@@ -1,6 +1,7 @@
 //! End-to-end tests of the committed multi-contract scenario specs
-//! (`examples/scenarios/table1_two_term.json` and
-//! `examples/scenarios/table1_two_term_window.json`): parse → run through
+//! (`examples/scenarios/table1_two_term.json`,
+//! `examples/scenarios/table1_two_term_window.json`, and the learned-policy
+//! `examples/scenarios/table1_ucb.json`): parse → run through
 //! the batched engine → verify the acceptance contract — two Table I terms
 //! on the menu, every policy feasible, the joint multi-contract offline DP
 //! solved (and under the restricted DP), and the deterministic menu
@@ -103,6 +104,91 @@ fn committed_window_scenario_meets_the_bound_and_beats_the_online_variant() {
         .expect("windowed deterministic in the suite");
     assert!(det_w.reservations >= 1);
     assert!(det_w.mean_normalized < 1.0);
+}
+
+#[test]
+fn committed_ucb_scenario_reports_regret_against_the_joint_dp() {
+    let spec = load_spec("table1_ucb.json");
+    assert_eq!(spec.market.len(), 2);
+    assert!(spec.offline);
+
+    let report = scenario::run(&spec, 2).expect("scenario runs end-to-end");
+    assert_eq!(report.users, 1);
+    assert_eq!(report.slots, 240);
+    assert_eq!(report.policies.len(), 4);
+
+    let offline = report.offline.as_ref().expect("single-user trace solves the offline DP");
+    assert!(offline.joint, "compressed menu must be joint-DP tractable");
+    assert!(offline.cost > 0.0);
+
+    let bound = (2.0 - spec.market.alpha_max()) * offline.cost;
+    for p in &report.policies {
+        // joint <= every online policy, learned included
+        let regret = p.regret_vs_joint.expect("regret filled when offline solved");
+        assert!(regret >= -1e-9, "{}: beat the offline DP by {regret}", p.name);
+        assert!((p.total_cost - offline.cost - regret).abs() < 1e-12, "{}", p.name);
+        let per_slot = p.per_slot_regret.expect("per-slot regret filled");
+        assert!((per_slot - regret / 240.0).abs() < 1e-12, "{}", p.name);
+        // learned policies: within the 2 - alpha_max comparison bound, or
+        // the excess is reported honestly through the regret fields —
+        // either way the report must carry the evidence
+        if p.name.contains("UCB") || p.name.contains("AdaptiveWindow") {
+            assert!(
+                p.total_cost <= bound + 1e-9 || regret > 0.0,
+                "{}: over the bound without reporting excess",
+                p.name
+            );
+        }
+    }
+
+    // JSON carries the additive regret fields for every policy
+    let doc = report.to_json();
+    for p in doc.get("policies").as_arr().expect("policies array") {
+        assert!(p.get("regret_vs_joint").as_f64().is_some());
+        assert!(p.get("per_slot_regret").as_f64().is_some());
+    }
+}
+
+#[test]
+fn spec_rejection_paths_name_the_offender() {
+    let base = |policies: &str| {
+        format!(
+            r#"{{
+          "name": "bad",
+          "market": {{"on_demand": 0.08, "contracts": [
+            {{"upfront": 0.1333, "rate": 0.039, "term": 4}},
+            {{"upfront": 0.3, "rate": 0.031, "term": 12}}
+          ]}},
+          "trace": {{"kind": "constant", "users": 1, "level": 1, "slots": 20}},
+          "policies": {policies}
+        }}"#
+        )
+    };
+    let err_of = |policies: &str| {
+        format!(
+            "{:#}",
+            ScenarioSpec::from_json(&parse(&base(policies)).unwrap()).unwrap_err()
+        )
+    };
+
+    // unknown policy name: expected_one_of style with the full name list
+    let err = err_of(r#"["magic"]"#);
+    assert!(err.contains("unknown name 'magic'"), "{err}");
+    assert!(err.contains("ucb") && err.contains("adaptive_window"), "{err}");
+
+    // window on a policy that ignores it, naming policy + valid takers
+    let err = err_of(r#"[{"policy": "ucb", "window": 2}]"#);
+    assert!(err.contains("policy 'ucb'") && err.contains("'window'"), "{err}");
+    assert!(err.contains("deterministic|randomized"), "{err}");
+
+    // z on a policy that ignores it
+    let err = err_of(r#"[{"policy": "adaptive_window", "z": 0.4}]"#);
+    assert!(err.contains("policy 'adaptive_window'") && err.contains("'z'"), "{err}");
+
+    // w >= min tau names the policy and the offending term
+    let err = err_of(r#"[{"policy": "deterministic", "window": 4}]"#);
+    assert!(err.contains("policy 'Deterministic(w=4)'"), "{err}");
+    assert!(err.contains("shortest") && err.contains("(4)"), "{err}");
 }
 
 #[test]
